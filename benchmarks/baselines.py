@@ -1,0 +1,194 @@
+"""Baseline methods from the paper's comparison set (Section VII).
+
+These are deliberately host-side (numpy, per-dataset loops) implementations
+of the prior art Spadas is compared against:
+  ScanGBO  [52]  — sequential scan computing grid overlap per dataset
+  ScanHaus [47]  — MBR-corner bounds + branch-and-bound over a full scan
+  IncHaus  [47]  — incremental R-tree-pair traversal (priority queue)
+  BruteHaus      — 'Origin': exact quadratic Hausdorff, no index
+  kNN      [59]  — per-query-point NN with early break
+  INNE     [12]  — isolation-based NN-ensemble outlier scores
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+
+def brute_hausdorff(q: np.ndarray, d: np.ndarray) -> float:
+    dd = np.sqrt(((q[:, None, :] - d[None, :, :]) ** 2).sum(-1))
+    return float(dd.min(axis=1).max())
+
+
+def early_break_hausdorff(q: np.ndarray, d: np.ndarray) -> float:
+    """Taha & Hanbury-style early-break scan [59]."""
+    cmax = 0.0
+    for p in q:
+        cmin = np.inf
+        for r in d:
+            dist = float(np.sqrt(((p - r) ** 2).sum()))
+            if dist < cmax:      # this q point cannot raise the max
+                cmin = 0.0
+                break
+            cmin = min(cmin, dist)
+        if cmin != np.inf:
+            cmax = max(cmax, cmin)
+    return cmax
+
+
+def scan_gbo(q_cells: set, ds_cells: list[set], k: int):
+    """ScanGBO [52]: python-set intersection per dataset, full scan."""
+    scores = [(len(q_cells & c), i) for i, c in enumerate(ds_cells)]
+    scores.sort(key=lambda t: (-t[0], t[1]))
+    return scores[:k]
+
+
+def _mbr(d: np.ndarray):
+    return d.min(axis=0), d.max(axis=0)
+
+
+def _mbr_haus_bounds(q_lo, q_hi, d_lo, d_hi):
+    """Corner-enumeration bounds of [47]: 4^dim distance evaluations."""
+    dim = q_lo.shape[0]
+    corners_q = np.stack(np.meshgrid(
+        *[(q_lo[i], q_hi[i]) for i in range(dim)], indexing="ij"),
+        -1).reshape(-1, dim)
+    corners_d = np.stack(np.meshgrid(
+        *[(d_lo[i], d_hi[i]) for i in range(dim)], indexing="ij"),
+        -1).reshape(-1, dim)
+    dd = np.sqrt(((corners_q[:, None] - corners_d[None]) ** 2).sum(-1))
+    # max over q corners of min over d corners upper-bounds H loosely
+    ub = float(dd.max())
+    lo = np.maximum(q_lo, d_lo)
+    hi = np.minimum(q_hi, d_hi)
+    gap = np.maximum(np.maximum(q_lo - d_hi, d_lo - q_hi), 0.0)
+    lb = float(np.sqrt((gap ** 2).sum()))
+    return lb, ub
+
+
+def scan_haus_topk(q: np.ndarray, datasets: list[np.ndarray], k: int):
+    """ScanHaus [47]: MBR bounds to order + prune a full exact scan."""
+    q_lo, q_hi = _mbr(q)
+    bounds = []
+    for i, d in enumerate(datasets):
+        d_lo, d_hi = _mbr(d)
+        bounds.append((_mbr_haus_bounds(q_lo, q_hi, d_lo, d_hi), i))
+    bounds.sort(key=lambda t: t[0][0])
+    results: list[tuple[float, int]] = []
+    tau = np.inf
+    evals = 0
+    for (lb, ub), i in bounds:
+        if lb > tau and len(results) >= k:
+            continue
+        h = brute_hausdorff(q, datasets[i])
+        evals += 1
+        results.append((h, i))
+        results.sort()
+        if len(results) >= k:
+            tau = results[k - 1][0]
+    return results[:k], evals
+
+
+class _KDNode:
+    __slots__ = ("lo", "hi", "pts", "left", "right")
+
+    def __init__(self, pts):
+        self.pts = pts
+        self.lo = pts.min(axis=0)
+        self.hi = pts.max(axis=0)
+        self.left = self.right = None
+
+
+def build_kd(pts: np.ndarray, leaf: int = 16) -> _KDNode:
+    node = _KDNode(pts)
+    if len(pts) > leaf:
+        dim = int(np.argmax(node.hi - node.lo))
+        order = np.argsort(pts[:, dim])
+        mid = len(pts) // 2
+        node.left = build_kd(pts[order[:mid]], leaf)
+        node.right = build_kd(pts[order[mid:]], leaf)
+    return node
+
+
+def kd_tree_size(node: _KDNode) -> int:
+    """Rough index footprint in bytes (boxes + object overhead)."""
+    if node is None:
+        return 0
+    own = node.lo.nbytes + node.hi.nbytes + 64
+    return own + kd_tree_size(node.left) + kd_tree_size(node.right)
+
+
+def _box_min_dist(p, lo, hi):
+    g = np.maximum(np.maximum(lo - p, p - hi), 0.0)
+    return float(np.sqrt((g * g).sum()))
+
+
+def kd_nn(root: _KDNode, p: np.ndarray) -> float:
+    """Best-first NN in a KD tree (the kNN [59] baseline primitive)."""
+    best = np.inf
+    heap = [(_box_min_dist(p, root.lo, root.hi), id(root), root)]
+    while heap:
+        d, _, node = heapq.heappop(heap)
+        if d >= best:
+            break
+        if node.left is None:
+            dd = np.sqrt(((node.pts - p) ** 2).sum(-1))
+            best = min(best, float(dd.min()))
+        else:
+            for ch in (node.left, node.right):
+                md = _box_min_dist(p, ch.lo, ch.hi)
+                if md < best:
+                    heapq.heappush(heap, (md, id(ch), ch))
+    return best
+
+
+def inc_haus(q_root: _KDNode, d_root: _KDNode) -> float:
+    """IncHaus [47]: incremental pair traversal with per-q-node queues."""
+    h = 0.0
+    main: list = [(-np.inf, 0, q_root)]
+    cnt = 1
+    while main:
+        neg_ub, _, qn = heapq.heappop(main)
+        if qn.left is not None:
+            for ch in (qn.left, qn.right):
+                heapq.heappush(main, (neg_ub, cnt, ch))
+                cnt += 1
+            continue
+        # leaf: exact max-min against the D tree via kd_nn
+        for p in qn.pts:
+            h = max(h, kd_nn(d_root, p))
+    return h
+
+
+def knn_scan(q: np.ndarray, d: np.ndarray) -> np.ndarray:
+    """kNN [59] baseline for NNP: per-point early-break scan."""
+    out = np.empty(len(q))
+    for i, p in enumerate(q):
+        best = np.inf
+        for r in d:
+            dd = ((p - r) ** 2).sum()
+            if dd < best:
+                best = dd
+        out[i] = np.sqrt(best)
+    return out
+
+
+def inne_scores(pts: np.ndarray, *, n_ensembles: int = 8, psi: int = 16,
+                seed: int = 0) -> np.ndarray:
+    """INNE [12]: isolation scores via nearest-neighbor hyperspheres."""
+    rng = np.random.default_rng(seed)
+    n = len(pts)
+    scores = np.zeros(n)
+    for _ in range(n_ensembles):
+        samp = pts[rng.choice(n, size=min(psi, n), replace=False)]
+        dd = np.sqrt(((samp[:, None] - samp[None]) ** 2).sum(-1))
+        np.fill_diagonal(dd, np.inf)
+        radius = dd.min(axis=1)                      # NN radius per center
+        d_to_c = np.sqrt(((pts[:, None] - samp[None]) ** 2).sum(-1))
+        covered = d_to_c <= radius[None, :]
+        ratio = np.where(
+            covered, radius[np.argmin(d_to_c, axis=1)][:, None] /
+            np.maximum(dd.min(axis=1)[None, :], 1e-12), 1.0)
+        scores += np.where(covered.any(axis=1), 1 - ratio.min(axis=1), 1.0)
+    return scores / n_ensembles

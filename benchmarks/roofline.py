@@ -1,0 +1,148 @@
+"""Roofline analysis (spec deliverable g) from the dry-run artifacts.
+
+Hardware model (TPU v5e, per chip):
+    peak bf16 compute  197e12 FLOP/s
+    HBM bandwidth      819e9  B/s
+    ICI per link       50e9   B/s
+
+Terms per (arch x shape), single-pod mesh:
+    compute_s    = HLO_FLOPs_per_device / 197e12
+    memory_s     = HLO_bytes_per_device / 819e9
+    collective_s = ring-model moved bytes per device / 50e9
+                   (serialized upper bound; overlap noted per cell)
+
+plus MODEL_FLOPS (6ND train / 2ND inference, N = active params) and the
+useful-compute ratio MODEL_FLOPS / (HLO_FLOPs x chips).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def model_flops(rec: dict) -> float:
+    n_active = rec["model_params_active"]
+    tokens = rec["batch"] * rec["seq"]
+    if rec["cell_kind"] == "train":
+        return 6.0 * n_active * tokens
+    if rec["cell_kind"] == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence
+    return 2.0 * n_active * rec["batch"]
+
+
+def analyze(rec: dict, probe: dict | None = None) -> dict:
+    nd = rec["n_devices"]
+    flops = rec["flops_per_device"]
+    bts = rec["bytes_per_device"]
+    moved = rec.get("collective_moved_bytes_total",
+                    rec.get("collective_bytes_total", 0))
+    corrected = False
+    if probe and probe.get("status") == "ok":
+        # scan-trip correction: XLA counts the layer-scan body once.  The
+        # unrolled R=1/R=2 probes give the true per-repeat marginal cost;
+        # anchor on the SCANNED artifact (which fully counts everything
+        # outside the scan, incl. SPMD-fallback copies) and add the
+        # (R-1) missing repeats of the scan body.
+        R = probe["n_repeats"]
+        r1, r2 = probe["probe"]["r1"], probe["probe"]["r2"]
+        flops += (R - 1) * max(r2["flops"] - r1["flops"], 0.0)
+        bts += (R - 1) * max(r2["bytes"] - r1["bytes"], 0.0)
+        moved += (R - 1) * max(r2["coll_moved"] - r1["coll_moved"], 0.0)
+        corrected = True
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bts / HBM_BW
+    collective_s = moved / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_total = flops * nd
+    useful = mf / hlo_total if hlo_total > 0 else float("nan")
+    # roofline fraction: useful model FLOPs over what the bottleneck term
+    # would allow at peak (the score the perf loop drives up)
+    step_s = max(terms.values())
+    achievable_mfu = (mf / nd / PEAK_FLOPS) / step_s if step_s > 0 else 0.0
+    return {
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": achievable_mfu,
+        "scan_corrected": corrected,
+    }
+
+
+def load_records(d: Path, mesh: str = "single", tag: str = "") -> list[dict]:
+    recs = []
+    for f in sorted(d.glob(f"*__{mesh}{'__' + tag if tag else ''}.json")):
+        r = json.loads(f.read_text())
+        if tag == "" and r.get("tag"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def load_probes(d: Path, tag: str = "") -> dict:
+    ptag = f"probe__{tag}" if tag else "probe"
+    out = {}
+    for f in sorted(d.glob(f"*__single__{ptag}.json")):
+        r = json.loads(f.read_text())
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:8.2f}s "
+    if x >= 1e-3:
+        return f"{x*1e3:8.2f}ms"
+    return f"{x*1e6:8.2f}us"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    recs = load_records(Path(args.dir), args.mesh, args.tag)
+    probes = load_probes(Path(args.dir), args.tag)
+    rows = []
+    print(f"{'arch':<22}{'shape':<13}{'compute':>11}{'memory':>11}"
+          f"{'collective':>11}  {'bound':<11}{'useful':>8}{'roofline%':>10}")
+    for r in recs:
+        if r.get("status") == "skipped":
+            print(f"{r['arch']:<22}{r['shape']:<13}"
+                  f"{'-- skipped (full-attention @512k, see DESIGN.md) --'}")
+            rows.append(r)
+            continue
+        if r.get("status") != "ok":
+            print(f"{r['arch']:<22}{r['shape']:<13}  ERROR")
+            rows.append(r)
+            continue
+        a = analyze(r, probes.get((r["arch"], r["shape"])))
+        rows.append({**r, "roofline": a})
+        print(f"{r['arch']:<22}{r['shape']:<13}"
+              f"{fmt_s(a['compute_s']):>11}{fmt_s(a['memory_s']):>11}"
+              f"{fmt_s(a['collective_s']):>11}  {a['bottleneck']:<11}"
+              f"{a['useful_ratio']:>8.2f}{a['roofline_fraction']*100:>9.1f}%")
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(rows, indent=2))
+        print(f"wrote {args.json_out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark runner: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Also appends the roofline
+summary when dry-run artifacts are present (results/dryrun/).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig14]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark fn names")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import paper_benchmarks as pb
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in pb.ALL_BENCHES:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        print(f"# {fn.__name__} wall={time.time()-t0:.1f}s", flush=True)
+
+    if not args.skip_roofline:
+        from pathlib import Path
+        if Path("results/dryrun").exists() and any(
+                Path("results/dryrun").glob("*__single.json")):
+            print("\n# === roofline (from dry-run artifacts) ===")
+            from benchmarks import roofline
+            roofline.main(["--dir", "results/dryrun", "--mesh", "single"])
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Serving scenario: a spatial point-query service + LM decode side-by-side.
+
+    PYTHONPATH=src python examples/serve_points.py
+
+Simulates the deployed system: a resident Spadas index answers batched
+RangeP/NNP requests (retrieval), while the trajectory LM serves batched
+decode steps (generation) — the two workloads the production mesh hosts.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import point_search
+from repro.core.build import build_query_index, build_repository
+from repro.data import synthetic
+from repro.launch import serve as serve_driver
+
+
+def main():
+    # --- retrieval side ---
+    lake = synthetic.trajectory_repository(64, seed=0)
+    repo, info = build_repository(lake, leaf_capacity=16, theta=5)
+    d_idx = jax.tree.map(lambda x: x[0], repo.ds_index)
+
+    rng = np.random.default_rng(0)
+    n_requests = 16
+    t0 = time.time()
+    hits = 0
+    for _ in range(n_requests):
+        c = rng.uniform(20, 80, 2).astype(np.float32)
+        lo, hi = jnp.asarray(c - 2.0), jnp.asarray(c + 2.0)
+        take, _ = point_search.range_points(d_idx, lo, hi)
+        hits += int(take.sum())
+    dt = time.time() - t0
+    print(f"[retrieval] {n_requests} RangeP requests in {dt*1e3:.1f} ms "
+          f"({hits} points returned)")
+
+    Q = lake[1][:256]
+    q_idx, _ = build_query_index(Q)
+    t0 = time.time()
+    dist, idx, stats = point_search.nnp_pruned(q_idx, d_idx)
+    print(f"[retrieval] NNP for {len(Q)} points in "
+          f"{(time.time()-t0)*1e3:.1f} ms "
+          f"({stats.pruned_fraction:.0%} leaf pairs pruned)")
+
+    # --- generation side ---
+    serve_driver.main(["--arch", "spadas_trajlm", "--requests", "8",
+                       "--prompt-len", "64", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

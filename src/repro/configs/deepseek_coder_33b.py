@@ -1,0 +1,21 @@
+"""deepseek-coder-33b [dense] — llama-arch [arXiv:2401.14196]."""
+import dataclasses
+from repro.models.config import ModelConfig, ATTN
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=19200,
+    vocab_size=32256,
+    block_pattern=(ATTN,),
+)
+
+
+def reduced():
+    return dataclasses.replace(
+        CONFIG, n_layers=3, d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+        vocab_size=512, remat=False, attn_q_chunk=64, attn_kv_chunk=64)

@@ -1,0 +1,136 @@
+"""End-to-end unified index construction (paper Alg. 1).
+
+`build_repository` is the public entry point: raw point sets in, a fully
+populated :class:`Repository` out — bottom-level balanced ball trees,
+parameter-free outlier removal, z-order signatures, upper-level tree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as index_lib
+from repro.core import outliers as outliers_lib
+from repro.core import repo_index as repo_lib
+from repro.core import zorder
+from repro.core.index import DatasetIndex
+from repro.core.repo_index import Repository
+
+Array = jax.Array
+
+
+def pad_batch(datasets: Sequence[np.ndarray], leaf_capacity: int,
+              depth: int | None = None) -> tuple[Array, Array, int]:
+    """Pad a ragged list of (n_i, d) arrays into (B, n_pad, d) + valid."""
+    d = datasets[0].shape[1]
+    n_max = max(int(x.shape[0]) for x in datasets)
+    if depth is None:
+        depth = index_lib.depth_for(n_max, leaf_capacity)
+    n_pad = leaf_capacity * (1 << depth)
+    B = len(datasets)
+    pts = np.zeros((B, n_pad, d), np.float32)
+    val = np.zeros((B, n_pad), bool)
+    for i, x in enumerate(datasets):
+        n = x.shape[0]
+        pts[i, :n] = x
+        val[i, :n] = True
+    return jnp.asarray(pts), jnp.asarray(val), depth
+
+
+def build_repository(
+    datasets: Sequence[np.ndarray],
+    *,
+    leaf_capacity: int = 16,
+    repo_leaf_capacity: int | None = None,
+    theta: int = 5,
+    remove_outliers: bool = True,
+) -> tuple[Repository, dict]:
+    """Construct the unified index over a repository of raw point sets.
+
+    Returns (repository, info) where info carries the outlier threshold and
+    shape bookkeeping used by benchmarks.
+    """
+    if repo_leaf_capacity is None:
+        repo_leaf_capacity = leaf_capacity
+    pts, val, depth_b = pad_batch(datasets, leaf_capacity)
+    B = pts.shape[0]
+
+    idx = index_lib.build_index_batch(pts, val, depth_b)
+
+    r_prime = None
+    if remove_outliers:
+        idx, r_prime = outliers_lib.remove_outliers(idx)
+
+    # global space bounds (for the Def. 4 grid) from live points
+    root_lo = idx.box_lo[:, 0, :2]
+    root_hi = idx.box_hi[:, 0, :2]
+    space_lo = jnp.min(root_lo, axis=0)
+    space_hi = jnp.max(root_hi, axis=0)
+
+    # z-order signatures (Def. 5) per dataset
+    sig_fn = jax.vmap(
+        lambda p, v: zorder.signature(p, v, space_lo, space_hi, theta)
+    )
+    ds_sigs = sig_fn(idx.points, idx.valid)
+
+    # pad the repository to B_pad slots
+    depth_u = repo_lib.depth_for_repo(B, repo_leaf_capacity)
+    B_pad = repo_leaf_capacity * (1 << depth_u)
+    d = pts.shape[-1]
+    W = ds_sigs.shape[-1]
+
+    def pad_to(x, fill=0):
+        pad = [(0, B_pad - B)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, pad, constant_values=fill)
+
+    idx = DatasetIndex(*[pad_to(f) for f in idx])
+    ds_sigs = pad_to(ds_sigs)
+    ds_valid = jnp.zeros((B_pad,), bool).at[:B].set(True)
+
+    centers = idx.centers[:, 0, :]
+    radii = idx.radii[:, 0]
+    lo = jnp.where(ds_valid[:, None], idx.box_lo[:, 0, :], jnp.inf)
+    hi = jnp.where(ds_valid[:, None], idx.box_hi[:, 0, :], -jnp.inf)
+
+    repo = repo_lib.build_repo_index(
+        centers, radii, lo, hi, ds_sigs, ds_valid, depth_u
+    )
+
+    repository = Repository(
+        ds_index=idx,
+        ds_sigs=ds_sigs,
+        ds_valid=ds_valid,
+        repo=repo,
+        space_lo=space_lo,
+        space_hi=space_hi,
+    )
+    info = {
+        "bottom_depth": depth_b,
+        "upper_depth": depth_u,
+        "n_datasets": B,
+        "n_slots": B_pad,
+        "outlier_threshold": r_prime,
+        "theta": theta,
+        "leaf_capacity": leaf_capacity,
+    }
+    return repository, info
+
+
+def build_query_index(
+    points: np.ndarray, *, leaf_capacity: int = 16, theta: int = 5,
+    space_lo=None, space_hi=None,
+) -> tuple[DatasetIndex, Array | None]:
+    """Index a single query dataset Q (no outlier removal: Q is the user's
+    exemplar, paper Section VI treats it as-is)."""
+    pts, valid, depth = index_lib.pad_points(jnp.asarray(points, jnp.float32),
+                                             leaf_capacity)
+    q_idx = index_lib.build_index(pts, valid, depth)
+    q_sig = None
+    if space_lo is not None:
+        q_sig = zorder.signature(q_idx.points, q_idx.valid,
+                                 space_lo, space_hi, theta)
+    return q_idx, q_sig

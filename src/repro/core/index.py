@@ -1,0 +1,212 @@
+"""Bottom-level unified index (paper Section V-A), TPU-native form.
+
+The paper builds, per dataset, a binary tree by recursively splitting on the
+widest dimension (Alg. 1 `SplitSpace`).  Pointer trees do not jit, so we
+build a LEFT-BALANCED tree over a permutation of the points (DESIGN.md
+sec. 2):
+
+  * points are padded to ``n_pad = f * 2**depth`` with a validity mask;
+  * the build is level-synchronous: at level ``l`` the permutation is viewed
+    as ``(2**l, n_pad >> l)`` segments, each segment picks its widest
+    dimension (same criterion as the paper) and is partitioned by the median
+    of that coordinate (balanced) via one segmented argsort;
+  * after ``depth`` levels every leaf is a CONTIGUOUS slab of ``f`` slots,
+    and node ``j`` of level ``l`` covers slab ``[j * (n_pad >> l), ...)``.
+
+Node statistics (ball center/radius Def. 14, MBR) are computed for every
+node of every level with segmented reductions and stored flat in level-major
+order: node (l, j) lives at ``2**l - 1 + j``.
+
+Everything is vmap-able over a leading batch of datasets, which is how the
+repository pads + batches datasets of different cardinalities.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry
+
+Array = jax.Array
+
+
+class DatasetIndex(NamedTuple):
+    """Flat balanced ball tree over one (or a batch of) dataset(s).
+
+    With a batch dim B (absent when built for a single dataset):
+      points   (B, n_pad, d)   points permuted into tree order
+      valid    (B, n_pad)      slot validity (padding and removed outliers)
+      centers  (B, n_nodes, d) ball centers, level-major
+      radii    (B, n_nodes)    ball radii
+      box_lo   (B, n_nodes, d) node MBRs
+      box_hi   (B, n_nodes, d)
+      counts   (B, n_nodes)    live points under each node
+    ``n_nodes = 2**(depth+1) - 1``; leaves are the last 2**depth entries.
+    """
+
+    points: Array
+    valid: Array
+    centers: Array
+    radii: Array
+    box_lo: Array
+    box_hi: Array
+    counts: Array
+
+    @property
+    def depth(self) -> int:
+        return int(math.log2(self.centers.shape[-2] + 1)) - 1
+
+    @property
+    def n_leaves(self) -> int:
+        return 1 << self.depth
+
+    @property
+    def leaf_size(self) -> int:
+        return self.points.shape[-2] // self.n_leaves
+
+    def level_slice(self, level: int) -> slice:
+        start = (1 << level) - 1
+        return slice(start, start + (1 << level))
+
+    def root_center(self) -> Array:
+        return self.centers[..., 0, :]
+
+    def root_radius(self) -> Array:
+        return self.radii[..., 0]
+
+    def root_box(self) -> tuple[Array, Array]:
+        return self.box_lo[..., 0, :], self.box_hi[..., 0, :]
+
+
+def depth_for(n: int, leaf_capacity: int) -> int:
+    """Tree depth so that leaves hold <= leaf_capacity points."""
+    return max(0, math.ceil(math.log2(max(1, n) / leaf_capacity)))
+
+
+def pad_points(points: Array, leaf_capacity: int, depth: int | None = None):
+    """Pad (n, d) points to (f * 2**depth, d) plus a validity mask."""
+    n, d = points.shape
+    if depth is None:
+        depth = depth_for(n, leaf_capacity)
+    n_pad = leaf_capacity * (1 << depth)
+    if n_pad < n:
+        raise ValueError(f"n_pad {n_pad} < n {n}")
+    pts = jnp.zeros((n_pad, d), points.dtype).at[:n].set(points)
+    valid = jnp.zeros((n_pad,), bool).at[:n].set(True)
+    return pts, valid, depth
+
+
+# ---------------------------------------------------------------------------
+# level-synchronous balanced build
+# ---------------------------------------------------------------------------
+
+
+def _split_level(points: Array, valid: Array, perm: Array, level: int) -> Array:
+    """One level of the build: partition every segment on its widest dim.
+
+    points (n_pad, d), valid (n_pad,), perm (n_pad,) current ordering.
+    Returns the refined permutation.  Invalid slots sort to segment ends so
+    padding accumulates in the rightmost leaves.
+    """
+    n_pad, d = points.shape
+    seg = n_pad >> level
+    p = points[perm].reshape(1 << level, seg, d)
+    v = valid[perm].reshape(1 << level, seg)
+
+    big = jnp.array(jnp.inf, points.dtype)
+    lo = jnp.min(jnp.where(v[..., None], p, big), axis=1)          # (2^l, d)
+    hi = jnp.max(jnp.where(v[..., None], p, -big), axis=1)
+    width = jnp.where(jnp.isfinite(lo) & jnp.isfinite(hi), hi - lo, -big)
+    d_split = jnp.argmax(width, axis=-1)                            # (2^l,)
+
+    keys = jnp.take_along_axis(p, d_split[:, None, None], axis=-1)[..., 0]
+    keys = jnp.where(v, keys, big)                                  # pad last
+    order = jnp.argsort(keys, axis=-1)                              # (2^l, seg)
+    return jnp.take_along_axis(perm.reshape(1 << level, seg), order, axis=-1).reshape(-1)
+
+
+def _node_stats(points: Array, valid: Array, depth: int):
+    """Ball + box stats for every node of every level (points in tree order)."""
+    n_pad, d = points.shape
+    centers, radii, blos, bhis, counts = [], [], [], [], []
+    big = jnp.array(jnp.inf, points.dtype)
+    for level in range(depth + 1):
+        seg = n_pad >> level
+        p = points.reshape(1 << level, seg, d)
+        v = valid.reshape(1 << level, seg)
+        w = v.astype(points.dtype)
+        cnt = w.sum(axis=1)
+        o = (p * w[..., None]).sum(axis=1) / jnp.maximum(cnt, 1.0)[:, None]
+        d2 = jnp.sum((p - o[:, None, :]) ** 2, axis=-1)
+        r = jnp.sqrt(jnp.max(jnp.where(v, d2, 0.0), axis=1))
+        lo = jnp.min(jnp.where(v[..., None], p, big), axis=1)
+        hi = jnp.max(jnp.where(v[..., None], p, -big), axis=1)
+        # empty nodes: neutralize so bound math prunes them naturally
+        empty = cnt == 0
+        o = jnp.where(empty[:, None], 0.0, o)
+        r = jnp.where(empty, 0.0, r)
+        lo = jnp.where(empty[:, None], big, lo)
+        hi = jnp.where(empty[:, None], -big, hi)
+        centers.append(o)
+        radii.append(r)
+        blos.append(lo)
+        bhis.append(hi)
+        counts.append(cnt.astype(jnp.int32))
+    return (
+        jnp.concatenate(centers, axis=0),
+        jnp.concatenate(radii, axis=0),
+        jnp.concatenate(blos, axis=0),
+        jnp.concatenate(bhis, axis=0),
+        jnp.concatenate(counts, axis=0),
+    )
+
+
+def build_index(points: Array, valid: Array, depth: int) -> DatasetIndex:
+    """Build the balanced ball tree for one padded dataset (jit-friendly).
+
+    points (n_pad, d) with n_pad = f * 2**depth, valid (n_pad,).
+    """
+    n_pad = points.shape[0]
+    perm = jnp.argsort(~valid)  # stable: valid slots first
+    for level in range(depth):
+        perm = _split_level(points, valid, perm, level)
+    pts = points[perm]
+    val = valid[perm]
+    centers, radii, lo, hi, counts = _node_stats(pts, val, depth)
+    return DatasetIndex(pts, val, centers, radii, lo, hi, counts)
+
+
+def build_index_batch(points: Array, valid: Array, depth: int) -> DatasetIndex:
+    """vmap of build_index over a leading batch of equally padded datasets."""
+    return jax.vmap(lambda p, v: build_index(p, v, depth))(points, valid)
+
+
+def recompute_stats(idx: DatasetIndex) -> DatasetIndex:
+    """Re-derive all node stats from (points, valid) — used after outlier
+    removal (paper `RefineBottomUp`) so every ball/box re-tightens."""
+
+    def one(pts, val):
+        depth = int(math.log2(idx.centers.shape[-2] + 1)) - 1
+        return _node_stats(pts, val, depth)
+
+    if idx.points.ndim == 3:
+        centers, radii, lo, hi, counts = jax.vmap(one)(idx.points, idx.valid)
+    else:
+        centers, radii, lo, hi, counts = one(idx.points, idx.valid)
+    return DatasetIndex(idx.points, idx.valid, centers, radii, lo, hi, counts)
+
+
+def leaf_radii(idx: DatasetIndex) -> Array:
+    """Radii of all leaf nodes (the paper's phi array feedstock)."""
+    depth = idx.depth
+    sl = idx.level_slice(depth)
+    return idx.radii[..., sl]
+
+
+def leaf_counts(idx: DatasetIndex) -> Array:
+    depth = idx.depth
+    sl = idx.level_slice(depth)
+    return idx.counts[..., sl]

@@ -1,0 +1,92 @@
+"""Parameter-free outlier removal (paper Alg. 1 `OutlierRemoval`, Eq. 3).
+
+The paper's observation: leaf balls that contain outliers have anomalously
+large radii.  It sorts all leaf radii descending, finds the knee of the
+sorted curve with a Kneedle-style gap statistic (Eq. 3) and uses the knee
+radius ``r'`` as threshold.  Points farther than ``r'`` from their leaf
+pivot are dropped and the tree is re-tightened bottom-up.
+
+TPU form: the gap statistic is already a dense computation; the bottom-up
+refinement becomes "clear validity bits, recompute all node stats" which is
+exactly `RefineBottomUp` without pointer surgery.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import index as index_lib
+from repro.core.index import DatasetIndex
+
+Array = jax.Array
+
+
+def kneedle_threshold(radii: Array, valid: Array | None = None) -> Array:
+    """Paper Eq. 3 over a descending-sorted radius array.
+
+    radii: (m,) leaf radii (any order), valid: optional mask for padded /
+    empty leaves.  Returns the scalar threshold r'.
+    """
+    if valid is None:
+        valid = jnp.ones(radii.shape, bool)
+    # sort descending; invalid leaves sink to the end with radius 0
+    r = jnp.where(valid, radii, 0.0)
+    phi = -jnp.sort(-r)
+    m = jnp.maximum(valid.sum(), 2)
+    first = phi[0]
+    last_idx = jnp.clip(m - 1, 0, phi.shape[0] - 1)
+    last = phi[last_idx]
+    i = jnp.arange(phi.shape[0], dtype=phi.dtype)
+    # Eq. 3: g_i = phi[0] - i * (phi[0]-phi[-1]) / |phi| - phi[i]
+    gap = first - i * (first - last) / jnp.maximum(m.astype(phi.dtype), 1.0) - phi
+    gap = jnp.where(i < m, gap, -jnp.inf)
+    gap = gap.at[0].set(-jnp.inf)  # knee is interior
+    pos = jnp.argmax(gap)
+    # paper line 41: r' = phi[pos - 1]
+    return phi[jnp.maximum(pos - 1, 0)]
+
+
+def remove_outliers(idx: DatasetIndex, r_prime: Array | None = None) -> tuple[DatasetIndex, Array]:
+    """Drop points farther than r' from their leaf center; re-tighten stats.
+
+    Works on a single index or a batch (leading B dim).  The threshold is
+    derived from the distribution of ALL leaf radii across the batch (the
+    paper pools leaf radii across the repository into one sorted array phi).
+
+    Returns (refined index, r_prime).
+    """
+    leaf_r = index_lib.leaf_radii(idx).reshape(-1)
+    leaf_c = index_lib.leaf_counts(idx).reshape(-1)
+    if r_prime is None:
+        r_prime = kneedle_threshold(leaf_r, leaf_c > 0)
+
+    depth = idx.depth
+    f = idx.leaf_size
+
+    def leaf_centers_for(pts_shape_centers):
+        sl = idx.level_slice(depth)
+        return pts_shape_centers[..., sl, :]
+
+    centers_leaf = leaf_centers_for(idx.centers)           # (..., 2^depth, d)
+    # distance of every point to its leaf center
+    pts = idx.points
+    if pts.ndim == 3:
+        B, n_pad, d = pts.shape
+        pl = pts.reshape(B, -1, f, d)
+        cl = centers_leaf.reshape(B, -1, 1, d)
+        d2 = jnp.sum((pl - cl) ** 2, axis=-1).reshape(B, n_pad)
+        leaf_rad = index_lib.leaf_radii(idx)               # (B, 2^depth)
+        wide = jnp.repeat(leaf_rad, f, axis=-1)            # (B, n_pad)
+    else:
+        n_pad, d = pts.shape
+        pl = pts.reshape(-1, f, d)
+        cl = centers_leaf.reshape(-1, 1, d)
+        d2 = jnp.sum((pl - cl) ** 2, axis=-1).reshape(n_pad)
+        leaf_rad = index_lib.leaf_radii(idx)
+        wide = jnp.repeat(leaf_rad, f, axis=-1)
+    # paper: only leaves with radius > r' are refined; inside them drop
+    # points with ||o, p|| > r'
+    drop = (wide > r_prime) & (jnp.sqrt(d2) > r_prime)
+    new_valid = idx.valid & ~drop
+    refined = index_lib.recompute_stats(idx._replace(valid=new_valid))
+    return refined, r_prime

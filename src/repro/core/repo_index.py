@@ -1,0 +1,151 @@
+"""Upper-level repository index (paper Section V-B).
+
+Organizes the dataset ROOT nodes of a repository into the same balanced
+ball tree used at the bottom level (DESIGN.md sec. 2).  Each upper node
+stores the Def. 16 tuple: ball (o, r) bounding every POINT beneath it, the
+merged MBR, the z-order signature union of its children, and a live count.
+
+The repository is padded to ``B_pad = f_up * 2**depth_up`` dataset slots so
+the whole structure is static-shape; `order` maps tree slots back to the
+caller's dataset ids.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import geometry
+from repro.core import index as index_lib
+from repro.core.index import DatasetIndex
+
+Array = jax.Array
+
+
+class RepoIndex(NamedTuple):
+    order: Array      # (B_pad,) dataset slot -> tree position inverse map:
+                      # tree slot j holds original dataset id order[j]
+    ds_valid: Array   # (B_pad,) in tree order
+    centers: Array    # (n_nodes, d)
+    radii: Array      # (n_nodes,)
+    box_lo: Array     # (n_nodes, d)
+    box_hi: Array     # (n_nodes, d)
+    sigs: Array       # (n_nodes, W) uint32
+    counts: Array     # (n_nodes,) datasets under node
+
+    @property
+    def depth(self) -> int:
+        return int(math.log2(self.centers.shape[-2] + 1)) - 1
+
+    def level_slice(self, level: int) -> slice:
+        start = (1 << level) - 1
+        return slice(start, start + (1 << level))
+
+
+def _or_reduce(x: Array, axis: int) -> Array:
+    """Bitwise-OR reduction (no jnp ufunc.reduce in jax)."""
+    return jax.lax.reduce(x, np.uint32(0), jax.lax.bitwise_or, (axis,))
+
+
+def depth_for_repo(n_datasets: int, f_up: int) -> int:
+    return index_lib.depth_for(n_datasets, f_up)
+
+
+def build_repo_index(
+    ds_centers: Array,
+    ds_radii: Array,
+    ds_lo: Array,
+    ds_hi: Array,
+    ds_sigs: Array,
+    ds_valid: Array,
+    depth: int,
+) -> RepoIndex:
+    """Build the upper tree over B_pad dataset root nodes.
+
+    All inputs are in ORIGINAL dataset-slot order; the returned index is in
+    tree order with `order` giving the permutation.
+    """
+    B_pad, d = ds_centers.shape
+    perm = jnp.argsort(~ds_valid)
+    for level in range(depth):
+        perm = index_lib._split_level(ds_centers, ds_valid, perm, level)
+
+    c = ds_centers[perm]
+    r = ds_radii[perm]
+    lo = ds_lo[perm]
+    hi = ds_hi[perm]
+    sg = ds_sigs[perm]
+    v = ds_valid[perm]
+
+    centers, radii, blos, bhis, sigs, counts = [], [], [], [], [], []
+    big = jnp.array(jnp.inf, c.dtype)
+    for level in range(depth + 1):
+        seg = B_pad >> level
+        cs = c.reshape(1 << level, seg, d)
+        rs = r.reshape(1 << level, seg)
+        los = lo.reshape(1 << level, seg, d)
+        his = hi.reshape(1 << level, seg, d)
+        sgs = sg.reshape(1 << level, seg, -1)
+        vs = v.reshape(1 << level, seg)
+        w = vs.astype(c.dtype)
+        cnt = w.sum(axis=1)
+        o = (cs * w[..., None]).sum(axis=1) / jnp.maximum(cnt, 1.0)[:, None]
+        # ball must bound every point beneath: r = max(|o - o_i| + r_i)
+        di = jnp.sqrt(jnp.sum((cs - o[:, None, :]) ** 2, axis=-1)) + rs
+        rr = jnp.max(jnp.where(vs, di, 0.0), axis=1)
+        l2 = jnp.min(jnp.where(vs[..., None], los, big), axis=1)
+        h2 = jnp.max(jnp.where(vs[..., None], his, -big), axis=1)
+        ss = _or_reduce(jnp.where(vs[..., None], sgs, jnp.uint32(0)), 1)
+        empty = cnt == 0
+        o = jnp.where(empty[:, None], 0.0, o)
+        rr = jnp.where(empty, 0.0, rr)
+        l2 = jnp.where(empty[:, None], big, l2)
+        h2 = jnp.where(empty[:, None], -big, h2)
+        centers.append(o)
+        radii.append(rr)
+        blos.append(l2)
+        bhis.append(h2)
+        sigs.append(ss)
+        counts.append(cnt.astype(jnp.int32))
+
+    return RepoIndex(
+        order=perm,
+        ds_valid=v,
+        centers=jnp.concatenate(centers, axis=0),
+        radii=jnp.concatenate(radii, axis=0),
+        box_lo=jnp.concatenate(blos, axis=0),
+        box_hi=jnp.concatenate(bhis, axis=0),
+        sigs=jnp.concatenate(sigs, axis=0),
+        counts=jnp.concatenate(counts, axis=0),
+    )
+
+
+class Repository(NamedTuple):
+    """The full unified index: batched bottom-level trees + upper tree.
+
+    Dataset arrays (`ds_index`, `ds_sigs`, per-dataset roots) are stored in
+    ORIGINAL slot order; `repo.order` maps upper-tree slots to dataset slots.
+    """
+
+    ds_index: DatasetIndex   # batched over B_pad (original order)
+    ds_sigs: Array           # (B_pad, W)
+    ds_valid: Array          # (B_pad,) dataset-slot validity
+    repo: RepoIndex
+    space_lo: Array          # (2,) global grid bounds for z-order
+    space_hi: Array          # (2,)
+
+    @property
+    def n_slots(self) -> int:
+        return self.ds_sigs.shape[0]
+
+    def roots(self):
+        """Per-dataset root stats in original order."""
+        return (
+            self.ds_index.centers[:, 0, :],
+            self.ds_index.radii[:, 0],
+            self.ds_index.box_lo[:, 0, :],
+            self.ds_index.box_hi[:, 0, :],
+        )

@@ -1,0 +1,68 @@
+"""Pallas kernel for the paper's fast bound estimation (Eq. 4).
+
+Computes the (LB, UB) Hausdorff bound matrices between two node frontiers
+from ONE center-distance evaluation per node pair — the paper's O(1)-bound
+insight is what turns the whole frontier into a single dense tile sweep
+(DESIGN.md sec. 2).  Tiles are (TN, TM); both outputs share the sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TN = 256
+TM = 256
+
+
+def _bound_kernel(oq_ref, rq_ref, od_ref, rd_ref, lb_ref, ub_ref, *, n_coords: int):
+    oq = oq_ref[...]
+    od = od_ref[...]
+    acc = jnp.zeros((oq.shape[0], od.shape[0]), jnp.float32)
+    for c in range(n_coords):
+        diff = oq[:, c][:, None] - od[:, c][None, :]
+        acc += diff * diff
+    cd = jnp.sqrt(acc)
+    rq = rq_ref[...][:, None]
+    rd = rd_ref[...][None, :]
+    lb_ref[...] = jnp.maximum(cd - rd, 0.0)
+    ub_ref[...] = jnp.sqrt(acc + rd * rd) + rq
+
+
+def bound_matrices(
+    oq: jax.Array,
+    rq: jax.Array,
+    od: jax.Array,
+    rd: jax.Array,
+    *,
+    n_coords: int,
+    tn: int = TN,
+    tm: int = TM,
+    interpret: bool = False,
+):
+    """Eq. 4 (lb, ub) matrices, each (nq, nd) f32.  Shapes pre-padded."""
+    nq = oq.shape[0]
+    nd = od.shape[0]
+    grid = (nq // tn, nd // tm)
+    kernel = functools.partial(_bound_kernel, n_coords=n_coords)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, oq.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn,), lambda i, j: (i,)),
+            pl.BlockSpec((tm, od.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((tm,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn, tm), lambda i, j: (i, j)),
+            pl.BlockSpec((tn, tm), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, nd), jnp.float32),
+            jax.ShapeDtypeStruct((nq, nd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(oq, rq, od, rd)

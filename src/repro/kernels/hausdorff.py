@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the directed Hausdorff hot spot (paper Sec. VI-A.2).
+
+Scheme (DESIGN.md sec. 6): flash-attention-style streaming reduction.
+The grid is (Q-tiles, D-tiles); for each Q tile we keep a running per-row
+nearest-neighbor distance in the output block (VMEM-resident across the
+D-tile sweep, because the output BlockSpec maps every j to the same block).
+The |Q| x |D| distance matrix only ever exists one (TQ, TD) tile at a time
+in VMEM/VREGs — it is never materialized in HBM.
+
+Layout: points are (n, COORD_PAD) with the coordinate dim padded to a small
+static width; the squared distance uses the broadcast-subtract form, unrolled
+over coordinates (exact, no |x|^2-2xy cancellation), which is VPU-friendly
+since the (TQ, TD) tile is the vectorized shape.
+
+The final max over Q rows happens in the jit wrapper (ops.py) — it is O(nq)
+and fuses into the surrounding graph.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.4e38  # python float: baked into the kernel, not a captured const
+
+# default tile sizes: (TQ, TD) fp32 tile = 256*512*4B = 512 KiB << 16 MiB VMEM
+TQ = 256
+TD = 512
+COORD_PAD = 8
+
+
+def _min_dist_kernel(q_ref, d_ref, dvalid_ref, o_ref, *, n_coords: int):
+    """One (Q-tile, D-tile) step: update running per-Q-row min distance.
+
+    q_ref      (TQ, COORD_PAD) f32 : Q tile
+    d_ref      (TD, COORD_PAD) f32 : D tile
+    dvalid_ref (TD,)           bool: D slot validity
+    o_ref      (TQ,)           f32 : running min of SQUARED distances
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.full(o_ref.shape, BIG, jnp.float32)
+
+    q = q_ref[...]
+    d = d_ref[...]
+    acc = jnp.zeros((q.shape[0], d.shape[0]), jnp.float32)
+    for c in range(n_coords):  # static unroll over true coord count
+        diff = q[:, c][:, None] - d[:, c][None, :]
+        acc += diff * diff
+    acc = jnp.where(dvalid_ref[...][None, :], acc, BIG)
+    o_ref[...] = jnp.minimum(o_ref[...], jnp.min(acc, axis=1))
+
+
+def min_sq_dists(
+    q: jax.Array,
+    d: jax.Array,
+    d_valid: jax.Array,
+    *,
+    n_coords: int,
+    tq: int = TQ,
+    td: int = TD,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-Q-row min squared distance to any valid D row.
+
+    q (nq, COORD_PAD), d (nd, COORD_PAD), d_valid (nd,) -> (nq,) f32.
+    nq % tq == 0 and nd % td == 0 (ops.py pads).
+    """
+    nq = q.shape[0]
+    nd = d.shape[0]
+    grid = (nq // tq, nd // td)
+    kernel = functools.partial(_min_dist_kernel, n_coords=n_coords)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, q.shape[1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((td, d.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((td,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nq,), jnp.float32),
+        interpret=interpret,
+    )(q, d, d_valid)

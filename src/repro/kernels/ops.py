@@ -1,0 +1,118 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding to tile multiples, coordinate-dim padding, the TPU/interpret
+switch (this container is CPU: kernels run with interpret=True, which
+executes the kernel body in Python — correctness path; TPU is the perf
+target), and tiny-shape fallbacks to the pure-jnp oracles in ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bound_matrix as _bm
+from repro.kernels import hausdorff as _haus
+from repro.kernels import nn_distance as _nn
+from repro.kernels import ref
+from repro.kernels import set_intersect as _si
+
+Array = jax.Array
+
+INTERPRET = jax.default_backend() != "tpu"
+BIG = ref.BIG
+
+
+def _pad_rows(x: Array, mult: int, fill=0.0) -> Array:
+    n = x.shape[0]
+    target = max(mult, ((n + mult - 1) // mult) * mult)
+    if target == n:
+        return x
+    pad = [(0, target - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, constant_values=fill)
+
+
+def _pad_coords(x: Array, width: int) -> Array:
+    d = x.shape[-1]
+    if d >= width:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, width - d)])
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "td", "use_kernel"))
+def directed_hausdorff(
+    q: Array, d: Array, q_valid: Array, d_valid: Array,
+    *, tq: int = 256, td: int = 512, use_kernel: bool = True,
+) -> Array:
+    """H(Q -> D), masked.  Kernel path streams D tiles (no HBM matrix)."""
+    if not use_kernel or q.shape[0] < tq or d.shape[0] < td:
+        return ref.directed_hausdorff(q, d, q_valid, d_valid)
+    n_coords = q.shape[-1]
+    width = max(8, n_coords)
+    qp = _pad_rows(_pad_coords(q, width), tq)
+    dp = _pad_rows(_pad_coords(d, width), td)
+    dv = _pad_rows(d_valid, td, fill=False)
+    mins = _haus.min_sq_dists(qp, dp, dv, n_coords=n_coords, tq=tq, td=td,
+                              interpret=INTERPRET)
+    nnd = jnp.sqrt(jnp.minimum(mins[: q.shape[0]], BIG))
+    nnd = jnp.where(q_valid, nnd, -BIG)
+    return jnp.max(nnd)
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "td", "use_kernel"))
+def nn_distance(
+    q: Array, d: Array, q_valid: Array, d_valid: Array,
+    *, tq: int = 256, td: int = 512, use_kernel: bool = True,
+):
+    """Per-Q-point NN distance + D index (NNP hot loop)."""
+    if not use_kernel or q.shape[0] < tq or d.shape[0] < td:
+        return ref.nn_distance(q, d, q_valid, d_valid)
+    n_coords = q.shape[-1]
+    width = max(8, n_coords)
+    qp = _pad_rows(_pad_coords(q, width), tq)
+    dp = _pad_rows(_pad_coords(d, width), td)
+    dv = _pad_rows(d_valid, td, fill=False)
+    d2, idx = _nn.nn_sq_dists(qp, dp, dv, n_coords=n_coords, tq=tq, td=td,
+                              interpret=INTERPRET)
+    d2 = d2[: q.shape[0]]
+    idx = idx[: q.shape[0]]
+    dist = jnp.sqrt(jnp.minimum(d2, BIG))
+    dist = jnp.where(q_valid, dist, 0.0)
+    idx = jnp.where(q_valid, idx, -1)
+    return dist, idx
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "tm", "use_kernel"))
+def bound_matrices(
+    oq: Array, rq: Array, od: Array, rd: Array,
+    *, tn: int = 256, tm: int = 256, use_kernel: bool = True,
+):
+    """Eq. 4 (lb, ub) matrices over two node frontiers."""
+    if not use_kernel or oq.shape[0] < tn or od.shape[0] < tm:
+        return ref.bound_matrix(oq, rq, od, rd)
+    n_coords = oq.shape[-1]
+    width = max(8, n_coords)
+    nq, nd = oq.shape[0], od.shape[0]
+    oqp = _pad_rows(_pad_coords(oq, width), tn)
+    odp = _pad_rows(_pad_coords(od, width), tm)
+    rqp = _pad_rows(rq, tn)
+    rdp = _pad_rows(rd, tm)
+    lb, ub = _bm.bound_matrices(oqp, rqp, odp, rdp, n_coords=n_coords,
+                                tn=tn, tm=tm, interpret=INTERPRET)
+    return lb[:nq, :nd], ub[:nq, :nd]
+
+
+@functools.partial(jax.jit, static_argnames=("ta", "tb", "use_kernel"))
+def set_intersect_counts(
+    sa: Array, sb: Array, *, ta: int = 256, tb: int = 256,
+    use_kernel: bool = True,
+) -> Array:
+    """GBO count matrix between signature stacks (na, W) x (nb, W)."""
+    if not use_kernel or sa.shape[0] < ta or sb.shape[0] < tb:
+        return ref.set_intersect_count(sa, sb)
+    na, nb = sa.shape[0], sb.shape[0]
+    sap = _pad_rows(sa, ta)
+    sbp = _pad_rows(sb, tb)
+    out = _si.intersect_counts(sap, sbp, ta=ta, tb=tb, interpret=INTERPRET)
+    return out[:na, :nb]

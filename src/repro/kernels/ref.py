@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the kernel allclose tests and the fallback
+implementation for tiny shapes.  They materialize the full O(nq x nd)
+distance matrix — exactly the HBM blow-up the kernels avoid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+BIG = jnp.float32(3.4e38)
+
+
+def directed_hausdorff(q: Array, d: Array, q_valid: Array, d_valid: Array) -> Array:
+    """H(Q -> D) = max_{p in Q} min_{p' in D} ||p - p'|| with masks."""
+    diff = q[:, None, :] - d[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    d2 = jnp.where(d_valid[None, :], d2, BIG)
+    nnd = jnp.sqrt(jnp.min(d2, axis=1))
+    nnd = jnp.where(q_valid, nnd, -BIG)
+    return jnp.max(nnd)
+
+
+def nn_distance(q: Array, d: Array, q_valid: Array, d_valid: Array):
+    """Per-Q-point nearest neighbor in D: (dists (nq,), idx (nq,))."""
+    diff = q[:, None, :] - d[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    d2 = jnp.where(d_valid[None, :], d2, BIG)
+    idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dist = jnp.sqrt(jnp.min(d2, axis=1))
+    dist = jnp.where(q_valid, dist, 0.0)
+    idx = jnp.where(q_valid, idx, -1)
+    return dist, idx
+
+
+def bound_matrix(oq: Array, rq: Array, od: Array, rd: Array):
+    """Paper Eq. 4 bound matrices between two node frontiers.
+
+    oq (nq, dim), rq (nq,), od (nd, dim), rd (nd,) ->
+    (lb, ub) each (nq, nd).
+    """
+    diff = oq[:, None, :] - od[None, :, :]
+    cd2 = jnp.sum(diff * diff, axis=-1)
+    cd = jnp.sqrt(cd2)
+    lb = jnp.maximum(cd - rd[None, :], 0.0)
+    ub = jnp.sqrt(cd2 + (rd * rd)[None, :]) + rq[:, None]
+    return lb, ub
+
+
+def set_intersect_count(sa: Array, sb: Array) -> Array:
+    """GBO counts between two signature stacks: sa (na, W) u32, sb (nb, W)
+    -> (na, nb) int32 popcount(AND) totals."""
+    both = sa[:, None, :] & sb[None, :, :]
+    return jax.lax.population_count(both).astype(jnp.int32).sum(axis=-1)

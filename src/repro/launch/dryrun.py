@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (spec deliverable e).
+
+Lowers + compiles every (architecture x input shape) cell on the single-pod
+(16,16) 'data,model' mesh AND the multi-pod (2,16,16) 'pod,data,model' mesh,
+then records per-device memory analysis, HLO cost analysis and the parsed
+collective schedule for the roofline (EXPERIMENTS.md sec. Dry-run/Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Collective schedule of a compiled (post-SPMD) per-device module.
+
+    For each op records result-shape bytes, the replica-group size g, and
+    ring-model bytes MOVED per device:
+      all-reduce          2 * S * (g-1)/g
+      all-gather          S_out * (g-1)/g      (device receives the rest)
+      reduce-scatter      S_out * (g-1)        (ring reduce of full input)
+      all-to-all          S * (g-1)/g
+      collective-permute  S
+    """
+    out = {op: {"bytes": 0, "moved_bytes": 0.0, "count": 0}
+           for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"^(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z0-9-]+)",
+                     rhs)
+        if not m:
+            continue
+        shape_txt, opname = m.group(1), m.group(2)
+        for op in COLLECTIVE_OPS:
+            if opname == op or opname == op + "-start":
+                size = _shape_bytes(shape_txt)
+                g = _group_size(s)
+                if op == "all-reduce":
+                    moved = 2.0 * size * (g - 1) / g
+                elif op == "all-gather":
+                    moved = size * (g - 1) / g
+                elif op == "reduce-scatter":
+                    moved = size * (g - 1)
+                elif op == "all-to-all":
+                    moved = size * (g - 1) / g
+                else:
+                    moved = float(size)
+                out[op]["bytes"] += size
+                out[op]["moved_bytes"] += moved
+                out[op]["count"] += 1
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             *, test: bool = False, plan_kw: dict | None = None,
+             tag: str = "") -> dict:
+    from repro import configs
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import specs
+
+    cfg = configs.get_reduced(arch) if test else configs.get(arch)
+    kind, B, S = specs.SHAPES[shape_name]
+    if test:  # shrink shapes for CI
+        B, S = max(8, B // 32), min(S, 512)
+        specs_shapes = dict(specs.SHAPES)
+        specs_shapes[shape_name] = (kind, B, S)
+        specs.SHAPES = specs_shapes
+
+    if not specs.runnable(cfg, shape_name):
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "skipped", "reason": specs.SKIP_REASON,
+        }
+        _dump(out_dir, arch, shape_name, mesh_kind, rec, tag)
+        return rec
+
+    make = mesh_lib.make_test_mesh if test else mesh_lib.make_production_mesh
+    mesh = make(multi_pod=(mesh_kind == "multi"))
+
+    t0 = time.time()
+    plan_kw = dict(plan_kw or {})
+    overrides = plan_kw.pop("cfg_overrides", None)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    plan = specs.make_plan(cfg, shape_name, mesh, **plan_kw)
+    with mesh:
+        jitted = jax.jit(
+            plan.step_fn,
+            in_shardings=plan.in_shardings,
+            donate_argnums=plan.donate_argnums,
+        )
+        lowered = jitted.lower(*plan.abstract_args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    print(mem)                      # proves it fits (spec step 3)
+    cost = compiled.cost_analysis()
+    print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+        "status": "ok",
+        "cell_kind": kind, "batch": B, "seq": S,
+        "n_devices": int(mesh.size),
+        "model_params": int(cfg.param_count()),
+        "model_params_active": int(cfg.active_param_count()),
+        "flops_per_device": float(cost.get("flops", -1.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", -1.0)),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", -1)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", -1)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", -1)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", -1)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", -1)),
+        },
+        "collectives": colls,
+        "collective_bytes_total": sum(v["bytes"] for v in colls.values()),
+        "collective_moved_bytes_total": sum(
+            v["moved_bytes"] for v in colls.values()),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    }
+    _dump(out_dir, arch, shape_name, mesh_kind, rec, tag)
+    return rec
+
+
+def probe_cell(arch: str, shape_name: str, out_dir: Path,
+               *, test: bool = False, plan_kw: dict | None = None,
+               tag: str = "probe") -> dict:
+    """Scan-trip cost correction probes (see benchmarks/roofline.py).
+
+    XLA cost_analysis counts a `scan` body ONCE regardless of trip count,
+    so per-device FLOPs/bytes of the layer stack are under-reported by ~R.
+    We lower the SAME cell with the stack UNROLLED at R=1 and R=2 repeats;
+    the marginal cost (R2 - R1) is the true per-repeat cost and the cell's
+    corrected totals extrapolate linearly:  C(R) = C1 + (R-1) * (C2 - C1).
+    """
+    import dataclasses
+
+    from repro import configs
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import specs
+
+    cfg0 = configs.get_reduced(arch) if test else configs.get(arch)
+    if test:
+        kind, B, S = specs.SHAPES[shape_name]
+        specs.SHAPES = {**specs.SHAPES,
+                        shape_name: (kind, max(8, B // 32), min(S, 512))}
+    if not specs.runnable(cfg0, shape_name):
+        rec = {"arch": arch, "shape": shape_name, "status": "skipped",
+               "reason": specs.SKIP_REASON}
+        _dump(out_dir, arch, shape_name, "single", rec, tag)
+        return rec
+
+    make = mesh_lib.make_test_mesh if test else mesh_lib.make_production_mesh
+    plan_kw = dict(plan_kw or {})
+    overrides = plan_kw.pop("cfg_overrides", None)
+    if overrides:
+        cfg0 = dataclasses.replace(cfg0, **overrides)
+    out = {}
+    for R in (1, 2):
+        cfg = dataclasses.replace(
+            cfg0, n_layers=R * len(cfg0.block_pattern), scan_layers=False)
+        mesh = make(multi_pod=False)
+        plan = specs.make_plan(cfg, shape_name, mesh, **plan_kw)
+        with mesh:
+            compiled = jax.jit(
+                plan.step_fn, in_shardings=plan.in_shardings,
+                donate_argnums=plan.donate_argnums,
+            ).lower(*plan.abstract_args).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        colls = parse_collectives(compiled.as_text())
+        out[f"r{R}"] = {
+            "flops": float(cost.get("flops", -1.0)),
+            "bytes": float(cost.get("bytes accessed", -1.0)),
+            "coll_moved": sum(v["moved_bytes"] for v in colls.values()),
+        }
+        print(f"[probe] {arch}/{shape_name} R={R}: {out[f'r{R}']}",
+              flush=True)
+
+    R_full = cfg0.n_repeats
+    marg = {k: max(out["r2"][k] - out["r1"][k], 0.0)
+            for k in ("flops", "bytes", "coll_moved")}
+    rec = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "n_repeats": R_full,
+        "probe": out,
+        "corrected": {
+            k: out["r1"][k] + (R_full - 1) * marg[k]
+            for k in ("flops", "bytes", "coll_moved")
+        },
+    }
+    _dump(out_dir, arch, shape_name, "single", rec, tag)
+    return rec
+
+
+def _dump(out_dir: Path, arch, shape, mesh_kind, rec, tag=""):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = out_dir / f"{arch}__{shape}__{mesh_kind}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=2))
+    print(f"[dryrun] wrote {path}", flush=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--test", action="store_true",
+                    help="reduced configs + 8-device mesh (CI)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="scan-trip cost probes (single mesh only)")
+    ap.add_argument("--tag", default="",
+                    help="variant tag appended to output filenames")
+    ap.add_argument("--opt", default="",
+                    help="comma list of plan opts: constrain_grads,"
+                         "compress,microbatch=N,kvseq=none,expert=model")
+    args = ap.parse_args(argv)
+
+    plan_kw: dict = {}
+    rules_override: dict = {}
+    for item in [s for s in args.opt.split(",") if s]:
+        if item == "constrain_grads":
+            plan_kw["constrain_grads"] = True
+        elif item == "compress":
+            plan_kw["compress"] = True
+        elif item.startswith("microbatch="):
+            plan_kw["microbatch"] = int(item.split("=")[1])
+        elif item.startswith("kvseq="):
+            v = item.split("=")[1]
+            rules_override["kvseq"] = None if v == "none" else v
+        elif item.startswith("expert="):
+            v = item.split("=")[1]
+            rules_override["expert"] = None if v == "none" else v
+        elif item == "kvint8":
+            plan_kw["cfg_overrides"] = {"kv_cache_dtype": "int8"}
+        else:
+            raise SystemExit(f"unknown --opt item {item}")
+    if rules_override:
+        plan_kw["rules_override"] = rules_override
+
+    from repro.launch import specs
+    out_dir = Path(args.out)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        cells = list(specs.all_cells(include_skips=True))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    if args.probe:
+        ptag = f"probe__{args.tag}" if args.tag else "probe"
+        for arch, shape in cells:
+            f = out_dir / f"{arch}__{shape}__single__{ptag}.json"
+            if args.skip_existing and f.exists():
+                continue
+            print(f"=== probe {arch} / {shape} ===", flush=True)
+            try:
+                probe_cell(arch, shape, out_dir, test=args.test,
+                           plan_kw=plan_kw, tag=ptag)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((arch, shape, "probe", repr(e)))
+        if failures:
+            print(f"[dryrun] {len(failures)} PROBE FAILURES: {failures}",
+                  flush=True)
+            sys.exit(1)
+        print("[dryrun] all probes ok", flush=True)
+        return
+
+    for arch, shape in cells:
+        for mk in meshes:
+            suffix = f"__{args.tag}" if args.tag else ""
+            f = out_dir / f"{arch}__{shape}__{mk}{suffix}.json"
+            if args.skip_existing and f.exists():
+                st = json.loads(f.read_text()).get("status")
+                if st in ("ok", "skipped"):
+                    print(f"[dryrun] skip existing {f}", flush=True)
+                    continue
+            print(f"=== {arch} / {shape} / {mk} ===", flush=True)
+            try:
+                rec = run_cell(arch, shape, mk, out_dir, test=args.test,
+                               plan_kw=plan_kw, tag=args.tag)
+                print(f"[dryrun] {rec['status']}", flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((arch, shape, mk, repr(e)))
+                _dump(out_dir, arch, shape, mk,
+                      {"arch": arch, "shape": shape, "mesh": mk,
+                       "status": "error", "error": repr(e)}, args.tag)
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:", flush=True)
+        for f in failures:
+            print("   ", f, flush=True)
+        sys.exit(1)
+    print("[dryrun] all cells ok", flush=True)
+
+
+if __name__ == "__main__":
+    main()

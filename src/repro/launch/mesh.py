@@ -1,0 +1,23 @@
+"""Production mesh construction (spec: MULTI-POD DRY-RUN step 1).
+
+`make_production_mesh` is a FUNCTION so importing this module never touches
+jax device state.  Single pod: (data=16, model=16) = 256 chips (TPU v5e
+pod); multi-pod: (pod=2, data=16, model=16) = 512 chips with the leading
+axis crossing the DCN/ICI pod boundary.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Small mesh for CI on 8 host devices (same axis names)."""
+    shape = (2, 2, 2) if multi_pod else (4, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,152 @@
+"""Parameter / state / batch shardings from logical rules (DESIGN.md sec. 4).
+
+Strategy (the paper-faithful baseline layout; §Perf hillclimbs deviate):
+  * params: TP over 'model' on the head/ffn/vocab dim, FSDP (ZeRO-3) over
+    'data' on the other dim; replicated where a dim doesn't divide.
+  * optimizer moments mirror the param shardings (int8 codes: flat-sharded).
+  * batch: ('pod','data') on the batch dim; KV caches likewise, with the
+    time axis sharded over 'model' for the long-context cells.
+
+Everything keys off leaf PATHS, so it works for any of the 10 archs without
+per-arch tables.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.train.optimizer import QTensor
+
+# (regex on '/'-joined path) -> spec for the LAST ndim dims of the leaf.
+# Leading stacked dims (scan repeats) are always replicated (None).
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed/table$",            ("model", "data")),   # (vocab, d)
+    (r"head/table$",             ("model", "data")),
+    (r"(wq|wk|wv)$",             ("data", "model")),   # (d, heads*hd)
+    (r"wo$",                     ("model", "data")),   # (heads*hd, d)
+    (r"(wg|wu)$",                ("data", "model")),   # (d, ff) [+E lead]
+    (r"wd$",                     ("model", "data")),   # (ff, d) [+E lead]
+    (r"router$",                 ("data", None)),
+    (r"in_proj$",                ("data", "model")),
+    (r"out_proj$",               ("model", "data")),
+    (r"conv_w$",                 (None, "model")),
+    (r"conv_b$",                 ("model",)),
+    (r"(A_log|D|dt_bias)$",      ("model",)),
+    (r"(norm_scale|scale|xgate)$", (None,)),
+]
+
+_MOE_LEAF = re.compile(r"moe/(wg|wu|wd)$")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _divisible(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    size = np.prod([mesh.shape[a] for a in
+                    (axis if isinstance(axis, tuple) else (axis,))])
+    return dim % int(size) == 0
+
+
+def spec_for_param(path_s: str, shape: tuple, mesh: Mesh,
+                   rules: dict | None = None) -> P:
+    """PartitionSpec for one param leaf; replicates non-divisible dims."""
+    rules = rules or {}
+    expert_axis = rules.get("expert")  # None (TP-MoE) or "model" (EP)
+    no_fsdp = rules.get("no_fsdp", False)  # serving: params TP-only resident
+    for pat, tail in _PARAM_RULES:
+        if re.search(pat, path_s):
+            tail = list(tail)
+            if no_fsdp:
+                tail = [None if t == "data" else t for t in tail]
+            if _MOE_LEAF.search(path_s):
+                if expert_axis == "model":
+                    # EP: experts over model; drop model from the tail
+                    tail = [None if t == "model" else t for t in tail]
+                    tail = [expert_axis] + tail
+                else:
+                    tail = [None] + tail
+            ndim = len(shape)
+            lead = [None] * (ndim - len(tail))
+            full = lead + tail
+            full = full[:ndim]
+            # replicate any axis that doesn't divide
+            full = [a if _divisible(shape[i], mesh, a) else None
+                    for i, a in enumerate(full)]
+            return P(*full)
+    return P()  # replicate by default (norm scales, scalars)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh,
+                    rules: dict | None = None):
+    """NamedShardings matching a params (shape-)pytree."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        if isinstance(leaf, QTensor):
+            # int8 states mirror the parent param's sharding: lead dims keep
+            # the param spec; the param's last-axis sharding moves to the
+            # n_blocks dim (when divisible), the block dim stays local
+            parent = spec_for_param(ps, leaf.shape, mesh, rules)
+            tail = list(parent) + [None] * (len(leaf.shape) - len(parent))
+            nb = leaf.codes.shape[-2]
+            last = tail[-1] if _divisible(nb, mesh, tail[-1]) else None
+            c = NamedSharding(mesh, P(*tail[:-1], last, None))
+            s = NamedSharding(mesh, P(*tail[:-1], last))
+            return QTensor(c, s, leaf.shape)
+        return NamedSharding(mesh, spec_for_param(ps, leaf.shape, mesh, rules))
+
+    return jax.tree_util.tree_map_with_path(
+        one, params_shape,
+        is_leaf=lambda x: isinstance(x, (QTensor, jax.ShapeDtypeStruct,
+                                         jax.Array, np.ndarray)))
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def spec_for_batch_leaf(shape: tuple, mesh: Mesh) -> P:
+    """Batch-dim sharding for an input leaf, replicate if non-divisible."""
+    ba = batch_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in ba]))
+    if shape and shape[0] % size == 0 and shape[0] > 0:
+        return P(ba, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def cache_sharding(shape: tuple, mesh: Mesh, *, shard_time: bool) -> P:
+    """KV cache (R, B, T, KH, hd) / SSM state (R, B, H, P, N) sharding."""
+    ba = batch_axes(mesh)
+    bsz = int(np.prod([mesh.shape[a] for a in ba]))
+    b_ax = ba if (len(shape) > 1 and shape[1] % bsz == 0) else None
+    spec = [None, b_ax] + [None] * (len(shape) - 2)
+    if len(shape) == 5:
+        # try model axis on: KV time (idx 2, when shard_time) else heads (3)
+        m = mesh.shape["model"]
+        if shard_time and shape[2] % m == 0 and shape[2] > m:
+            spec[2] = "model"
+        elif shape[3] % m == 0:
+            spec[3] = "model"
+    if len(shape) == 4:
+        m = mesh.shape["model"]
+        if shard_time and shape[2] % m == 0 and shape[2] > m:
+            spec[2] = "model"   # int8 KV scale time axis
+        elif shape[3] % m == 0:
+            spec[3] = "model"   # conv state channels
+    return P(*spec)

@@ -1,0 +1,143 @@
+"""End-to-end training driver (deliverable b's main entry point).
+
+    PYTHONPATH=src python -m repro.launch.train --arch spadas_trajlm \
+        --steps 200 --batch 8 --seq 256 [--mesh none|test|single|multi]
+
+Wires together: Spadas data curation -> token pipeline -> sharded train
+step -> watchdog -> async checkpointing -> (simulated) elastic restart.
+On this CPU container use --mesh none/test; the production meshes lower
+the same code on 256/512 devices (see dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.data import synthetic, tokens as tok_lib
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as sh
+from repro.models import sharding_rules
+from repro.runtime.straggler import StepWatchdog, StragglerEvent, WatchdogConfig
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+
+
+def build_pipeline(cfg, args):
+    if args.arch == "spadas_trajlm":
+        import math
+        from repro.data import discovery
+        # grid resolution must match the vocab: 4^theta cells + specials
+        theta = int(math.log(cfg.vocab_size - 64, 4))
+        lake = synthetic.trajectory_repository(args.lake_size, seed=0)
+        exemplar = lake[0]
+        selected, repo, info = discovery.curate(
+            lake, exemplar, k=min(64, args.lake_size), theta=theta)
+        print(f"[train] Spadas curated {len(selected)} shards "
+              f"(deduped {info['deduped_away']})")
+        return discovery.pipeline_from_selection(
+            lake, selected, repo, theta=theta, seq_len=args.seq,
+            batch=args.batch)
+    docs = tok_lib.synthetic_corpus(2048, cfg.vocab_size, seed=0)
+    return tok_lib.TokenPipeline(docs, args.seq, args.batch, seed=0)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="spadas_trajlm")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test reduced config")
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "test", "single", "multi"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="results/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--lake-size", type=int, default=128)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
+    cfg = dataclasses.replace(cfg, remat=False) if args.seq <= 512 else cfg
+    opt_cfg = opt_lib.OptConfig(lr=args.lr, warmup_steps=20)
+
+    mesh = None
+    if args.mesh == "test":
+        mesh = mesh_lib.make_test_mesh()
+    elif args.mesh in ("single", "multi"):
+        mesh = mesh_lib.make_production_mesh(multi_pod=args.mesh == "multi")
+
+    pipe = build_pipeline(cfg, args)
+    key = jax.random.PRNGKey(0)
+    state = ts.init_train_state(key, cfg, opt_cfg,
+                                compress=args.compress_grads)
+    step_fn = ts.make_train_step(cfg, opt_cfg, compress=args.compress_grads)
+
+    start = 0
+    ckpt_dir = Path(args.ckpt_dir) / cfg.name
+    if args.resume and ckpt_lib.latest_step(ckpt_dir) is not None:
+        state, extra = ckpt_lib.restore(ckpt_dir, state)
+        pipe.state = tok_lib.PipelineState.from_dict(extra["pipeline"])
+        start = int(extra["step"])
+        print(f"[train] resumed from step {start}")
+
+    if mesh is not None:
+        sharding_rules.set_mesh(mesh)
+        p_shard = sh.param_shardings(
+            jax.eval_shape(lambda: state.params), mesh)
+        with mesh:
+            state = state._replace(
+                params=jax.tree.map(jax.device_put, state.params, p_shard))
+        # pin gradient shardings to the params (EXPERIMENTS.md §Perf iter. 4)
+        step_fn = ts.make_train_step(cfg, opt_cfg,
+                                     compress=args.compress_grads,
+                                     param_shardings=p_shard)
+        jit_ctx = mesh
+    else:
+        import contextlib
+        jit_ctx = contextlib.nullcontext()
+
+    step_fn = jax.jit(step_fn, donate_argnums=(0,))
+    saver = ckpt_lib.AsyncSaver()
+    watchdog = StepWatchdog(WatchdogConfig())
+    losses = []
+    with jit_ctx:
+        for step in range(start, args.steps):
+            batch = jax.tree.map(jnp.asarray, pipe.next_batch())
+            watchdog.start()
+            try:
+                state, metrics = step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                watchdog.stop()
+            except StragglerEvent as e:
+                print(f"[train] straggler detected: {e}; checkpoint + "
+                      "remesh would trigger here")
+            losses.append(float(metrics["loss"]))
+            if (step + 1) % args.log_every == 0:
+                print(f"[train] step {step+1} loss={losses[-1]:.4f} "
+                      f"ce={float(metrics['ce']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f}", flush=True)
+            if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
+                saver.save(ckpt_dir, step + 1, state,
+                           extra={"step": step + 1,
+                                  "pipeline": pipe.state.as_dict()})
+    saver.wait()
+    print(f"[train] done. first loss {losses[0]:.4f} -> last "
+          f"{losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,365 @@
+"""Neural substrate layers: RMSNorm, RoPE, memory-efficient GQA attention,
+SwiGLU MLP, embeddings.
+
+All matmuls compute in bf16 with fp32 accumulation (preferred_element_type);
+softmax statistics are fp32.  Attention is KV-chunked with an online softmax
+(flash-attention schedule in pure JAX): the score matrix never exceeds
+(q_chunk x kv_chunk), which is what keeps the 32k-prefill and 32k-decode
+dry-run memory analyses sane.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding_rules import shard
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _dot(a, b, *, prec=None):
+    return jnp.einsum(a, b) if isinstance(a, str) else None
+
+
+# ---------------------------------------------------------------------------
+# init helpers (pure: usable under jax.eval_shape for the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: Array, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (..., S, H, D), positions (..., S) -> same shape."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half)
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# memory-efficient attention (online softmax over KV chunks)
+# ---------------------------------------------------------------------------
+
+
+def _attn_q_block(
+    q5: Array,            # (B, Bq, KH, G, Dh)
+    k: Array,             # (B, T, KH, Dh)
+    v: Array,             # (B, T, KH, Dh)
+    q_pos: Array,         # (Bq,) absolute positions of this q block
+    kv_len: Array | None, # scalar live cache length (decode) or None
+    *,
+    causal: bool,
+    kv_chunk: int,
+):
+    B, Bq, KH, G, Dh = q5.shape
+    T = k.shape[1]
+    n_chunks = T // kv_chunk
+    scale = 1.0 / math.sqrt(Dh)
+
+    def step(carry, idx):
+        m, l, acc = carry
+        start = idx * kv_chunk
+        kc = jax.lax.dynamic_slice_in_dim(k, start, kv_chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, start, kv_chunk, axis=1)
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", q5, kc, preferred_element_type=jnp.float32
+        ) * scale
+        kv_pos = start + jnp.arange(kv_chunk)
+        mask = jnp.ones((Bq, kv_chunk), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if kv_len is not None:
+            mask &= (kv_pos < kv_len)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KH, G, Bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, Bq), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, Bq, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # (B, KH, G, Bq, Dh) -> (B, Bq, KH*G, Dh)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, Bq, KH * G, Dh)
+    return out
+
+
+def attention(
+    q: Array,             # (B, S, H, Dh)
+    k: Array,             # (B, T, KH, Dh)
+    v: Array,             # (B, T, KH, Dh)
+    *,
+    causal: bool = True,
+    q_offset: int | Array = 0,
+    kv_len: Array | None = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Array:
+    """GQA attention, O(q_chunk * kv_chunk) score memory.
+
+    `q_offset` is the absolute position of q[0] (decode: current length-1);
+    `kv_len` masks a preallocated cache to its live prefix.
+    """
+    B, S, H, Dh = q.shape
+    T = k.shape[1]
+    KH = k.shape[2]
+    G = H // KH
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+
+    # pad both sequence dims to chunk multiples; padded kv slots are masked
+    # via kv_len (dropping the tail silently was a real truncation bug)
+    kv_pad = (-T) % kv_chunk
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    if kv_len is None and (kv_pad or not causal):
+        kv_len = jnp.int32(T)
+    q_pad = (-S) % q_chunk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    Sp = S + q_pad
+    n_q = Sp // q_chunk
+    q5 = q.reshape(B, Sp, KH, G, Dh)
+
+    if n_q <= 1:
+        pos = q_offset + jnp.arange(Sp)
+        out = _attn_q_block(q5, k, v, pos, kv_len,
+                            causal=causal, kv_chunk=kv_chunk)
+        return out[:, :S]
+
+    def one_block(i):
+        qb = jax.lax.dynamic_slice_in_dim(q5, i * q_chunk, q_chunk, axis=1)
+        pos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        return _attn_q_block(qb, k, v, pos, kv_len,
+                             causal=causal, kv_chunk=kv_chunk)
+
+    blocks = jax.lax.map(one_block, jnp.arange(n_q))  # (n_q, B, q_chunk, ...)
+    out = jnp.transpose(blocks, (1, 0, 2, 3, 4)).reshape(B, Sp, H, Dh)
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache quantization (per-token, per-head absmax scales)
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(x: Array):
+    """x (B, S, KH, Dh) -> (codes int8, scales bf16 (B, S, KH))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(codes: Array, scale: Array) -> Array:
+    return (codes.astype(jnp.bfloat16)
+            * scale.astype(jnp.bfloat16)[..., None])
+
+
+# ---------------------------------------------------------------------------
+# attention block (params + forward, self- and cross-)
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(kk, (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(kv, (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(ko, (cfg.n_heads * hd, d), dtype,
+                         scale=1.0 / math.sqrt(cfg.n_heads * hd * cfg.n_layers)),
+    }
+
+
+def qkv_proj(params, x: Array, cfg, positions: Array | None):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cd = x.dtype
+    # ZeRO-3: gather the fsdp-sharded weights at use (constraining the
+    # weight to be data-replicated makes GSPMD all-gather the small bf16
+    # weight instead of all-reducing the giant fp32 output partials —
+    # EXPERIMENTS.md §Perf iteration 6)
+    wq = shard(params["wq"].astype(cd), None, "tp")
+    wk = shard(params["wk"].astype(cd), None, "tp")
+    wv = shard(params["wv"].astype(cd), None, "tp")
+    q = (x @ wq).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ wk).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ wv).reshape(B, S, cfg.n_kv_heads, hd)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "tp", None)
+    k = shard(k, "batch", "seq", "kv", None)
+    v = shard(v, "batch", "seq", "kv", None)
+    return q, k, v
+
+
+def self_attention_block(params, x, cfg, *, positions, kv_cache=None,
+                         cache_len=None):
+    """Self attention.  Train/prefill: full sequence (returns new kv for the
+    cache).  Decode: S==1 with a preallocated (B, T, KH, Dh) cache —
+    bf16 (ck, cv) or int8 (ck, cv, k_scale, v_scale)."""
+    q, k, v = qkv_proj(params, x, cfg, positions)
+    if kv_cache is None:
+        out = attention(q, k, v, causal=True,
+                        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+        new_kv = (k, v)
+    elif len(kv_cache) == 4:
+        # int8 cache (§Perf iteration 8): write the quantized new token,
+        # dequantize at the attention read (fused — the HBM traffic is the
+        # int8 codes + per-(token, head) scales, ~2x less than bf16)
+        ck, cv, ks_c, vs_c = kv_cache
+        k_codes, k_scale = quantize_kv(k)
+        v_codes, v_scale = quantize_kv(v)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k_codes, cache_len,
+                                                 axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v_codes, cache_len,
+                                                 axis=1)
+        ks_c = jax.lax.dynamic_update_slice_in_dim(ks_c, k_scale, cache_len,
+                                                   axis=1)
+        vs_c = jax.lax.dynamic_update_slice_in_dim(vs_c, v_scale, cache_len,
+                                                   axis=1)
+        kd = dequantize_kv(ck, ks_c)
+        vd = dequantize_kv(cv, vs_c)
+        out = attention(q, kd, vd, causal=False, q_offset=cache_len,
+                        kv_len=cache_len + 1, q_chunk=1,
+                        kv_chunk=kd.shape[1])
+        new_kv = (ck, cv, ks_c, vs_c)
+        B, S, H, Dh = out.shape
+        wo = shard(params["wo"].astype(x.dtype), "tp", None)
+        y = out.reshape(B, S, H * Dh).astype(x.dtype) @ wo
+        return shard(y, "batch", "seq", None), new_kv
+    else:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_len, axis=1)
+        # decode runs UNCHUNKED (kv_chunk = full T): scores for one query
+        # token are tiny, and with the cache time axis sharded over 'model'
+        # the softmax stats + p@V partials reduce with small all-reduces
+        # instead of gathering cache chunks (flash-decode layout; §Perf
+        # iteration 2 — the chunked scan forced a per-chunk cross-device
+        # gather of the time-sharded cache)
+        out = attention(q, ck, cv, causal=False, q_offset=cache_len,
+                        kv_len=cache_len + 1,
+                        q_chunk=1, kv_chunk=ck.shape[1])
+        new_kv = (ck, cv)
+    B, S, H, Dh = out.shape
+    wo = shard(params["wo"].astype(x.dtype), "tp", None)
+    y = out.reshape(B, S, H * Dh).astype(x.dtype) @ wo
+    return shard(y, "batch", "seq", None), new_kv
+
+
+def cross_attention_block(params, x, ctx, cfg):
+    """Cross-attention to a precomputed (image) context (vlm stub)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cd = x.dtype
+    q = (x @ params["wq"].astype(cd)).reshape(B, S, cfg.n_heads, hd)
+    k = (ctx @ params["wk"].astype(cd)).reshape(B, ctx.shape[1],
+                                                cfg.n_kv_heads, hd)
+    v = (ctx @ params["wv"].astype(cd)).reshape(B, ctx.shape[1],
+                                                cfg.n_kv_heads, hd)
+    out = attention(q, k, v, causal=False,
+                    q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    y = out.reshape(B, S, -1).astype(x.dtype) @ params["wo"].astype(cd)
+    return shard(y, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, d_ff: int, n_layers: int, dtype=jnp.float32):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(kg, (d, d_ff), dtype),
+        "wu": dense_init(ku, (d, d_ff), dtype),
+        "wd": dense_init(kd, (d_ff, d), dtype,
+                         scale=1.0 / math.sqrt(d_ff * n_layers)),
+    }
+
+
+def mlp(params, x: Array) -> Array:
+    cd = x.dtype
+    wg = shard(params["wg"].astype(cd), None, "tp")   # ZeRO-3 gather
+    wu = shard(params["wu"].astype(cd), None, "tp")
+    wd = shard(params["wd"].astype(cd), "tp", None)
+    g = x @ wg
+    u = x @ wu
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * u
+    h = shard(h, "batch", "seq", "tp")
+    return shard(h @ wd, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": dense_init(key, (vocab, d), dtype, scale=0.02)}
+
+
+def embed(params, tokens: Array) -> Array:
+    return shard(params["table"][tokens], "batch", "seq", None)
+
+
+def unembed(params, x: Array) -> Array:
+    table = shard(params["table"].astype(x.dtype), "tp", None)  # ZeRO-3
+    logits = jnp.einsum(
+        "bsd,vd->bsv", x, table,
+        preferred_element_type=jnp.float32,
+    )
+    return shard(logits, "batch", "seq", "tp")

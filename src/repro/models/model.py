@@ -1,0 +1,322 @@
+"""Unified decoder LM covering all assigned families.
+
+The layer stack is ``n_repeats`` scans over the config's ``block_pattern``
+(DESIGN.md): params for each pattern position are stacked over repeats and
+the forward pass is one ``lax.scan`` (rematerialized when cfg.remat), which
+keeps compile time and HLO size flat in depth — essential for the 40-cell
+dry-run on a single CPU.
+
+Three entry points:
+  forward      — teacher-forced logits (train_4k)
+  prefill      — logits + populated caches (prefill_32k)
+  decode_step  — one token against live caches (decode_32k / long_500k)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import config as cfg_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import (ATTN, ATTN_MOE, ATTN_MOE_DENSE, CROSS,
+                                 MAMBA, MAMBA_MOE, ModelConfig)
+from repro.models.sharding_rules import shard
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, kind: str, cfg: ModelConfig, dtype):
+    ks = iter(jax.random.split(key, 8))
+    p: dict[str, Any] = {"ln1": L.rmsnorm_init(cfg.d_model, dtype)}
+    if kind in (ATTN, ATTN_MOE, ATTN_MOE_DENSE, CROSS):
+        p["attn"] = L.attn_init(next(ks), cfg, dtype)
+    if kind == CROSS:
+        p["xattn"] = L.attn_init(next(ks), cfg, dtype)
+        p["lnx"] = L.rmsnorm_init(cfg.d_model, dtype)
+        p["xgate"] = jnp.zeros((1,), jnp.float32)  # zero-init gated cross-attn
+    if kind in (MAMBA, MAMBA_MOE):
+        p["mamba"] = ssm_lib.mamba_init(next(ks), cfg, dtype)
+    if cfg.d_ff > 0:
+        if kind in (ATTN, MAMBA, CROSS, ATTN_MOE_DENSE):
+            p["mlp"] = L.mlp_init(next(ks), cfg.d_model, cfg.d_ff,
+                                  cfg.n_layers, dtype)
+        if kind in (ATTN_MOE, MAMBA_MOE, ATTN_MOE_DENSE):
+            p["moe"] = moe_lib.moe_init(next(ks), cfg, dtype)
+        p["ln2"] = L.rmsnorm_init(cfg.d_model, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    k_embed, k_head, k_blocks = jax.random.split(key, 3)
+    params: dict[str, Any] = {}
+    if cfg.embed_input:
+        params["embed"] = L.embed_init(k_embed, cfg.vocab_size,
+                                       cfg.d_model, dtype)
+    params["head"] = (
+        None if cfg.tie_embeddings
+        else L.embed_init(k_head, cfg.vocab_size, cfg.d_model, dtype)
+    )
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+
+    rep_keys = jax.random.split(k_blocks, cfg.n_repeats)
+
+    def init_repeat(k):
+        pos_keys = jax.random.split(k, len(cfg.block_pattern))
+        return tuple(
+            _init_block(pk, kind, cfg, dtype)
+            for pk, kind in zip(pos_keys, cfg.block_pattern)
+        )
+
+    params["blocks"] = jax.vmap(init_repeat)(rep_keys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Preallocated decode caches, stacked (n_repeats, ...) per position."""
+    R = cfg.n_repeats
+    hd = cfg.resolved_head_dim
+    cache = []
+    for kind in cfg.block_pattern:
+        c: dict[str, Any] = {}
+        if kind in (ATTN, ATTN_MOE, ATTN_MOE_DENSE, CROSS):
+            kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+            c["k"] = shard(
+                jnp.zeros((R, batch, max_len, cfg.n_kv_heads, hd), kv_dt),
+                None, "batch", "kvseq", "kv", None)
+            c["v"] = shard(
+                jnp.zeros((R, batch, max_len, cfg.n_kv_heads, hd), kv_dt),
+                None, "batch", "kvseq", "kv", None)
+            if cfg.kv_cache_dtype == "int8":
+                c["k_scale"] = shard(
+                    jnp.zeros((R, batch, max_len, cfg.n_kv_heads),
+                              jnp.bfloat16),
+                    None, "batch", "kvseq", "kv")
+                c["v_scale"] = shard(
+                    jnp.zeros((R, batch, max_len, cfg.n_kv_heads),
+                              jnp.bfloat16),
+                    None, "batch", "kvseq", "kv")
+        if kind in (MAMBA, MAMBA_MOE):
+            c["ssm"] = shard(
+                jnp.zeros(
+                    (R, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32),
+                None, "batch", "tp", None, None)
+            c["conv"] = jnp.zeros(
+                (R, batch, cfg.conv_width - 1,
+                 cfg.d_inner + 2 * cfg.ssm_state), dtype)
+        cache.append(c)
+    return tuple(cache)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(kind, p, x, cfg, *, ctx, positions, cache=None,
+                 cache_len=None, mode="train"):
+    """One pattern-position block.  Returns (x, aux, new_cache)."""
+    new_cache: dict[str, Any] = {}
+    aux = jnp.float32(0.0)
+
+    if kind in (ATTN, ATTN_MOE, ATTN_MOE_DENSE, CROSS):
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        int8 = cfg.kv_cache_dtype == "int8"
+        kv = None
+        if mode == "decode":
+            kv = ((cache["k"], cache["v"], cache["k_scale"],
+                   cache["v_scale"]) if int8
+                  else (cache["k"], cache["v"]))
+        out, new_kv = L.self_attention_block(
+            p["attn"], h, cfg, positions=positions,
+            kv_cache=kv, cache_len=cache_len)
+        x = x + out
+        if mode == "decode" and int8:
+            new_cache["k"], new_cache["v"] = new_kv[0], new_kv[1]
+            new_cache["k_scale"], new_cache["v_scale"] = new_kv[2], new_kv[3]
+        elif mode != "train":
+            if int8:  # prefill: quantize before storing
+                kc, ksc = L.quantize_kv(new_kv[0])
+                vc, vsc = L.quantize_kv(new_kv[1])
+                new_cache["k"], new_cache["k_scale"] = kc, ksc
+                new_cache["v"], new_cache["v_scale"] = vc, vsc
+            else:
+                new_cache["k"] = shard(new_kv[0].astype(jnp.bfloat16),
+                                       "batch", "kvseq", "kv", None)
+                new_cache["v"] = shard(new_kv[1].astype(jnp.bfloat16),
+                                       "batch", "kvseq", "kv", None)
+    if kind == CROSS:
+        hx = L.rmsnorm(p["lnx"], x, cfg.norm_eps)
+        xo = L.cross_attention_block(p["xattn"], hx, ctx, cfg)
+        x = x + jnp.tanh(p["xgate"]).astype(x.dtype) * xo
+    if kind in (MAMBA, MAMBA_MOE):
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        st = (cache["ssm"], cache["conv"]) if mode == "decode" else (None, None)
+        out, (new_ssm, new_conv) = ssm_lib.mamba_block(
+            p["mamba"], h, cfg, state=st[0], conv_state=st[1])
+        x = x + out
+        if mode != "train":
+            new_cache["ssm"] = new_ssm
+            new_cache["conv"] = (new_conv.astype(jnp.bfloat16)
+                                 if new_conv is not None else None)
+
+    if cfg.d_ff > 0:
+        h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if kind in (ATTN, MAMBA, CROSS):
+            x = x + L.mlp(p["mlp"], h2)
+        elif kind in (ATTN_MOE, MAMBA_MOE):
+            y, aux = moe_lib.moe(p["moe"], h2, cfg)
+            x = x + y
+        elif kind == ATTN_MOE_DENSE:
+            y_moe, aux = moe_lib.moe(p["moe"], h2, cfg)
+            x = x + L.mlp(p["mlp"], h2) + y_moe
+    return x, aux, new_cache
+
+
+def _stack(cfg: ModelConfig, params, x, *, ctx, positions, caches=None,
+           cache_len=None, mode="train"):
+    """Scan the block pattern over n_repeats."""
+
+    def body(carry, inputs):
+        x, aux = carry
+        rep_params, rep_cache = inputs
+        new_rep_cache = []
+        for i, kind in enumerate(cfg.block_pattern):
+            c = rep_cache[i] if rep_cache is not None else None
+            x, a, nc = _apply_block(
+                kind, rep_params[i], x, cfg, ctx=ctx, positions=positions,
+                cache=c, cache_len=cache_len, mode=mode)
+            aux = aux + a
+            new_rep_cache.append(nc)
+        return (x, aux), tuple(new_rep_cache)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.scan_layers:
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.float32(0.0)),
+            (params["blocks"], caches),
+        )
+        return x, aux, new_caches
+
+    # unrolled path: identical math, straight-line HLO (dry-run cost probes
+    # — XLA cost_analysis counts a scan body once, see benchmarks/roofline)
+    carry = (x, jnp.float32(0.0))
+    collected = []
+    for r in range(cfg.n_repeats):
+        rep = jax.tree.map(lambda a: a[r], (params["blocks"], caches))
+        carry, ys = body(carry, rep)
+        collected.append(ys)
+    x, aux = carry
+    new_caches = jax.tree.map(lambda *zs: jnp.stack(zs), *collected) \
+        if collected and jax.tree.leaves(collected[0]) else tuple(
+            {} for _ in cfg.block_pattern)
+    return x, aux, new_caches
+
+
+def _embed_in(params, cfg, batch):
+    if cfg.embed_input:
+        x = L.embed(params["embed"], batch["tokens"])
+    else:
+        x = batch["embeds"]
+    return shard(x.astype(jnp.bfloat16), "batch", "seq", None)
+
+
+def _logits(params, cfg, x):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["head"] if params["head"] is not None else params["embed"]
+    return L.unembed(head, x)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, batch) -> tuple[Array, Array]:
+    """Teacher-forced logits (B, S, V) + moe aux loss."""
+    x = _embed_in(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    ctx = batch.get("image_embeds")
+    if ctx is not None:
+        ctx = ctx.astype(x.dtype)
+    x, aux, _ = _stack(cfg, params, x, ctx=ctx, positions=positions,
+                       caches=None, mode="train")
+    return _logits(params, cfg, x), aux
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int):
+    """Run the full prompt; returns (last-token logits, caches, length)."""
+    x = _embed_in(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    ctx = batch.get("image_embeds")
+    if ctx is not None:
+        ctx = ctx.astype(x.dtype)
+    caches = init_cache(cfg, B, max_len)
+    x, aux, new_caches = _stack(cfg, params, x, ctx=ctx, positions=positions,
+                                caches=caches, mode="prefill")
+    logits = _logits(params, cfg, x[:, -1:, :])
+    return logits, _merge_prefill_caches(cfg, caches, new_caches, S), S
+
+
+def _merge_prefill_caches(cfg, caches, new_caches, S):
+    """Place prefill K/V (length S) into the preallocated max_len caches and
+    keep SSM/conv states."""
+    merged = []
+    for i, kind in enumerate(cfg.block_pattern):
+        c = dict(caches[i])
+        nc = new_caches[i]
+        if "k" in nc and nc["k"] is not None:
+            c["k"] = jax.lax.dynamic_update_slice_in_dim(
+                c["k"], nc["k"].astype(c["k"].dtype), 0, axis=2)
+            c["v"] = jax.lax.dynamic_update_slice_in_dim(
+                c["v"], nc["v"].astype(c["v"].dtype), 0, axis=2)
+        for sk in ("k_scale", "v_scale"):
+            if sk in nc and nc[sk] is not None:
+                c[sk] = jax.lax.dynamic_update_slice_in_dim(
+                    c[sk], nc[sk], 0, axis=2)
+        for key in ("ssm", "conv"):
+            if key in nc and nc[key] is not None:
+                c[key] = nc[key]
+        merged.append(c)
+    return tuple(merged)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches, cache_len,
+                ctx=None):
+    """One decode step.  tokens (B, 1) int32 (or embeds (B, 1, d) when
+    cfg.embed_input is False); cache_len: live length scalar.
+    Returns (logits (B, 1, V), new caches)."""
+    batch = {"tokens": tokens} if cfg.embed_input else {"embeds": tokens}
+    x = _embed_in(params, cfg, batch)
+    positions = jnp.full((1, 1), cache_len, jnp.int32)
+    x, aux, new_caches = _stack(cfg, params, x, ctx=ctx, positions=positions,
+                                caches=caches, cache_len=cache_len,
+                                mode="decode")
+    return _logits(params, cfg, x), new_caches

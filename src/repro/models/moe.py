@@ -1,0 +1,90 @@
+"""Mixture-of-Experts FFN: top-2 (GShard-style) routing with per-group
+capacity [arXiv:2006.16668], group = batch row, so dispatch gathers never
+cross the data-parallel shard boundary (DESIGN.md sec. 4).
+
+Sharding: experts are TP-sharded on d_ff by default ("tp" rule works for
+any expert count); when n_experts divides the model axis the launcher flips
+the rule table to expert-parallel ("ep": expert axis -> model), which is one
+of the §Perf hillclimb knobs.
+
+Arctic's dense-residual variant (ATTN_MOE_DENSE) adds a parallel dense
+SwiGLU branch: out = mlp(x) + moe(x).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.sharding_rules import shard
+
+Array = jax.Array
+
+
+def moe_init(key, cfg, dtype=jnp.float32):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff * cfg.n_layers)
+    return {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "wg": (jax.random.normal(ks[1], (E, d, ff), jnp.float32) * s_in).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (E, d, ff), jnp.float32) * s_in).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (E, ff, d), jnp.float32) * s_out).astype(dtype),
+    }
+
+
+def moe(params, x: Array, cfg):
+    """Top-k capacity-based MoE.  x (B, S, d) -> (y (B, S, d), aux_loss)."""
+    B, S, d = x.shape
+    E = cfg.n_experts
+    k = cfg.top_k_experts
+    C = max(1, min(S, int(math.ceil(S * k * cfg.capacity_factor / E))))
+    cd = x.dtype
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                   # (B,S,E)
+    top_v, top_i = jax.lax.top_k(probs, k)                    # (B,S,k)
+    top_v = top_v / jnp.maximum(top_v.sum(-1, keepdims=True), 1e-9)
+
+    # gate matrix: prob mass for selected (token, expert) pairs else 0
+    sel = jax.nn.one_hot(top_i, E, dtype=jnp.float32)         # (B,S,k,E)
+    gates = jnp.einsum("bske,bsk->bse", sel, top_v)           # (B,S,E)
+
+    # load-balance aux loss (Switch): E * mean_e(frac_tokens * mean_prob)
+    me = probs.mean(axis=(0, 1))
+    ce = sel.sum(2).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # per-(group, expert) capacity-C token selection
+    gv, gi = jax.lax.top_k(jnp.swapaxes(gates, 1, 2), C)      # (B,E,C)
+    live = gv > 0.0
+
+    xe = jnp.take_along_axis(
+        x[:, None, :, :], gi[..., None], axis=2
+    )                                                         # (B,E,C,d)
+    xe = shard(xe, "batch", "expert", None, None)
+    # ZeRO-3: gather fsdp-sharded expert weights at use (§Perf iter. 6)
+    wg = shard(params["wg"].astype(cd), "expert", None, "tp")
+    wu = shard(params["wu"].astype(cd), "expert", None, "tp")
+    wd = shard(params["wd"].astype(cd), "expert", "tp", None)
+    h_g = shard(jnp.einsum("becd,edf->becf", xe, wg),
+                "batch", "expert", None, "tp")
+    h_u = shard(jnp.einsum("becd,edf->becf", xe, wu),
+                "batch", "expert", None, "tp")
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(cd) * h_u
+    h = shard(h, "batch", "expert", None, "tp")
+    ye = jnp.einsum("becf,efd->becd", h, wd)
+    ye = shard(ye, "batch", "expert", None, None)
+    ye = ye * (gv * live)[..., None].astype(cd)
+
+    # scatter-add back within each group
+    def combine(y_b, gi_b):                                   # (E,C,d),(E,C)
+        return jnp.zeros((S, d), cd).at[gi_b.reshape(-1)].add(
+            y_b.reshape(-1, d))
+
+    y = jax.vmap(combine)(ye, gi)
+    return shard(y, "batch", "seq", None), aux

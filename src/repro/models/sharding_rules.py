@@ -1,0 +1,117 @@
+"""Logical-axis sharding for model internals.
+
+Layers annotate activations/params with LOGICAL axis names; the mapping to
+physical mesh axes is a process-global rule table set by the launcher.  When
+no mesh is active (CPU smoke tests) the constraints are no-ops, so the same
+model code runs everywhere.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# default rule table: logical name -> physical mesh axis (or None)
+_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),   # data parallel over pod x data
+    "fsdp": "data",             # parameter shard axis (ZeRO-3)
+    "tp": "model",              # tensor parallel (heads / ffn / vocab)
+    "seq": None,                # sequence axis (set to "model" for SP)
+    "expert": None,             # expert axis ("model" under EP)
+    "kv": None,                 # kv-heads axis
+    "kvseq": None,              # cache time axis ("model" for long contexts)
+}
+
+
+def set_rules(**kw) -> None:
+    _RULES.update(kw)
+
+
+def get_rules() -> dict:
+    return dict(_RULES)
+
+
+def logical_to_spec(axes: tuple) -> P:
+    phys = []
+    for a in axes:
+        if a is None:
+            phys.append(None)
+        else:
+            phys.append(_RULES.get(a))
+    return P(*phys)
+
+
+# the ACTIVE mesh for logical constraints.  `with mesh:` does NOT populate
+# jax.sharding.get_abstract_mesh() during tracing in this jax version, so
+# constraints must carry a concrete NamedSharding — the launcher calls
+# set_mesh() (specs.make_plan / train.py) and shard() builds NamedShardings
+# against it.  No mesh set -> no-op (CPU smoke tests).
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def _mesh_axis_names() -> tuple:
+    if _MESH is not None:
+        return tuple(_MESH.axis_names)
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return ()
+    if am is None or getattr(am, "empty", True):
+        return ()
+    return tuple(am.axis_names)
+
+
+def shard(x, *axes):
+    """Constrain x's sharding by logical axis names (no-op w/o a mesh)."""
+    names = _mesh_axis_names()
+    if not names:
+        return x
+    phys = []
+    for a in axes:
+        m = None if a is None else _RULES.get(a)
+        if isinstance(m, tuple):
+            m = tuple(ax for ax in m if ax in names) or None
+        elif m is not None and m not in names:
+            m = None
+        phys.append(m)
+    # drop axes that don't divide the dim (GSPMD would pad; replication is
+    # cheaper and never wrong for a constraint)
+    phys = [
+        (None if (m is not None and x.shape[i] % _axis_size(m) != 0) else m)
+        for i, m in enumerate(phys)
+    ]
+    # dedup mesh axes (e.g. EP maps 'expert' AND 'tp' to 'model'): first
+    # occurrence wins, later ones replicate
+    used: set = set()
+    deduped = []
+    for m in phys:
+        axes_of = m if isinstance(m, tuple) else (m,) if m else ()
+        if any(a in used for a in axes_of):
+            deduped.append(None)
+            continue
+        used.update(axes_of)
+        deduped.append(m)
+    spec = P(*deduped)
+    if _MESH is not None:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(_MESH, spec))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _axis_size(m) -> int:
+    if _MESH is None:
+        return 1
+    if isinstance(m, tuple):
+        n = 1
+        for a in m:
+            n *= _MESH.shape[a]
+        return n
+    return _MESH.shape[m]

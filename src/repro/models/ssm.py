@@ -1,0 +1,208 @@
+"""Mamba-2 block: state-space duality (SSD) chunked scan [arXiv:2405.21060].
+
+Implements the three execution paths the shapes require:
+  * `ssd_chunked`   — training/prefill: chunked quadratic-intra +
+                      linear-inter scan (Listing 1 of the paper, jnp form);
+  * `ssd_sequential`— tiny-shape oracle for tests;
+  * `mamba_decode`  — O(1)-per-token recurrent step for decode_32k/long_500k.
+
+Head (`nheads`) axis is sharded over the TP mesh axis; the (cl x cl)
+intra-chunk decay tensor is the memory hot spot and is what the head
+sharding keeps per-device-small (DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm
+from repro.models.sharding_rules import shard
+
+Array = jax.Array
+
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    nh = cfg.ssm_heads
+    w = cfg.conv_width
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * N
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * N + nh), dtype),
+        "conv_w": (jax.random.normal(ks[1], (w, conv_ch), jnp.float32)
+                   * (1.0 / math.sqrt(w))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), dtype,
+                               scale=1.0 / math.sqrt(di * cfg.n_layers)),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Array | None = None):
+    """Depthwise causal conv along seq.  x (B, L, C), w (W, C).
+
+    With `state` (B, W-1, C) runs in streaming mode and also returns the
+    updated state (last W-1 inputs)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_state = xp[:, -(W - 1):, :]
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(W - 1):, :]
+    out = jnp.zeros_like(x)
+    for i in range(W):  # static unroll, W ~ 4
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu((out + b[None, None, :]).astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _segsum(a: Array) -> Array:
+    """Stable segment-sum: S[..., l, s] = sum_{j=s+1..l} a[..., j] (l >= s).
+
+    a: (..., cl) -> (..., cl, cl) with -inf above the diagonal."""
+    cl = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    S = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((cl, cl), bool), k=0)
+    return jnp.where(mask, S, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state: Array | None = None):
+    """SSD scan.  x (B,L,H,P), dt (B,L,H), A (H,), Bm/Cm (B,L,N).
+
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = L // chunk
+    cl = chunk
+
+    xc = x.reshape(Bsz, nc, cl, H, P)
+    dtc = dt.reshape(Bsz, nc, cl, H)
+    Bc = Bm.reshape(Bsz, nc, cl, N)
+    Cc = Cm.reshape(Bsz, nc, cl, N)
+
+    a = dtc * A[None, None, None, :]                  # (B,nc,cl,H)
+    a = shard(a, "batch", None, None, "tp")
+    A_cum = jnp.cumsum(a, axis=2)                     # (B,nc,cl,H)
+
+    # ---- intra-chunk (quadratic, per chunk) ----
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(a, -1, 2)))   # (B,nc,H,cl,cl)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    dtx = xc * dtc[..., None]                         # (B,nc,cl,H,P)
+    y_diag = jnp.einsum("bcls,bchls,bcshp->bclhp", scores, Lmat,
+                        dtx, preferred_element_type=jnp.float32)
+
+    # ---- chunk states ----
+    decay_end = jnp.exp(A_cum[:, :, -1:, :] - A_cum)  # (B,nc,cl,H)
+    S_c = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_end * dtc, xc,
+                     preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk scan ----
+    chunk_decay = jnp.exp(A_cum[:, :, -1, :])         # (B,nc,H)
+
+    def step(s_prev, inp):
+        dec, s_c = inp                                # (B,H), (B,H,P,N)
+        s_new = s_prev * dec[..., None, None] + s_c
+        return s_new, s_prev
+
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((Bsz, H, P, N), jnp.float32))
+    final_state, s_prevs = jax.lax.scan(
+        step,
+        s0.astype(jnp.float32),
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_c, 1, 0)),
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)             # (B,nc,H,P,N)
+
+    # ---- off-diagonal contribution ----
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, s_prevs,
+                       jnp.exp(A_cum), preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_sequential(x, dt, A, Bm, Cm, init_state=None):
+    """O(L) sequential oracle (tests only)."""
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((Bsz, H, P, N), jnp.float32))
+
+    def step(s, inp):
+        xt, dtt, Bt, Ct = inp
+        dec = jnp.exp(dtt * A)                        # (B,H)
+        s = s * dec[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, Bt)
+        y = jnp.einsum("bhpn,bn->bhp", s, Ct)
+        return s, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    s, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s
+
+
+def mamba_block(params, x, cfg, *, state=None, conv_state=None,
+                sequential: bool = False):
+    """Full Mamba-2 block.
+
+    Train/prefill: state/conv_state None -> chunked SSD, returns
+    (y, (ssm_state, conv_state)).
+    Decode: pass both states, x has L==1, recurrent path.
+    """
+    Bsz, L, d = x.shape
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    nh = cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    cd = x.dtype
+
+    in_proj = shard(params["in_proj"].astype(cd), None, "tp")  # ZeRO-3
+    zxbcdt = x @ in_proj
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"].astype(cd),
+                                 params["conv_b"].astype(cd), conv_state)
+    x_in, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    x_in = x_in.reshape(Bsz, L, nh, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+
+    if state is not None and L == 1:
+        # ---- recurrent decode ----
+        dt1 = dt[:, 0]                                # (B,H)
+        dec = jnp.exp(dt1 * A[None, :])
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt1, x_in[:, 0].astype(jnp.float32),
+                         Bm[:, 0].astype(jnp.float32))
+        new_state = state * dec[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", new_state,
+                       Cm[:, 0].astype(jnp.float32))[:, None]
+    else:
+        fn = ssd_sequential if sequential else ssd_chunked
+        if sequential:
+            y, new_state = fn(x_in, dt.astype(jnp.float32), A,
+                              Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                              init_state=state)
+        else:
+            y, new_state = fn(x_in, dt.astype(jnp.float32), A,
+                              Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                              cfg.ssm_chunk, init_state=state)
+
+    y = y.astype(jnp.float32) + x_in.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(Bsz, L, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    g = rmsnorm({"scale": params["norm_scale"]}, g.astype(cd), cfg.norm_eps)
+    out = g @ shard(params["out_proj"].astype(cd), "tp", None)
+    return shard(out, "batch", "seq", None), (new_state, new_conv)

@@ -1,0 +1,79 @@
+"""Elastic scaling + failure handling (DESIGN.md sec. 4).
+
+The contract at 1000+ nodes: any pod/host can vanish; the job must resume
+on the surviving mesh from the last committed checkpoint, with parameters
+RE-SHARDED to the new topology.  Because checkpoints store logical arrays +
+the logical->physical rule table (checkpoint/ckpt.py), re-sharding is just
+`device_put` with shardings derived for the NEW mesh — no format migration.
+
+`plan_remesh` computes the next mesh after excluding failed devices, always
+keeping the model axis intact (TP requires a full ring) and shrinking the
+data/pod axes, which only changes the gradient all-reduce span — training
+semantics are preserved by re-scaling the per-device batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: dict
+    new_shape: dict
+    lost_devices: int
+    per_device_batch_factor: float  # batch rescale to keep global batch
+
+    @property
+    def new_axis_sizes(self) -> tuple:
+        return tuple(self.new_shape.values())
+
+
+def plan_remesh(mesh_shape: dict, failed: int) -> RemeshPlan:
+    """Shrink the mesh after `failed` device losses.
+
+    Policy: keep 'model' intact; round ('pod' x 'data') DOWN to the largest
+    size expressible as pod' x data' with pod' in {1, .., pod}."""
+    model = mesh_shape.get("model", 1)
+    pod = mesh_shape.get("pod", 1)
+    data = mesh_shape.get("data", 1)
+    total_replicas = pod * data
+    avail = pod * data * model - failed
+    max_replicas = avail // model
+    if max_replicas < 1:
+        raise RuntimeError("not enough devices for one model replica")
+    # prefer keeping pod structure if possible
+    best = None
+    for p in range(pod, 0, -1):
+        d = max_replicas // p
+        if d >= 1:
+            best = (p, d)
+            break
+    new = {}
+    if "pod" in mesh_shape:
+        new["pod"] = best[0]
+    new["data"] = best[1]
+    new["model"] = model
+    new_replicas = best[0] * best[1]
+    return RemeshPlan(
+        old_shape=dict(mesh_shape),
+        new_shape=new,
+        lost_devices=failed,
+        per_device_batch_factor=total_replicas / new_replicas,
+    )
+
+
+def make_mesh_from_plan(plan: RemeshPlan):
+    names = tuple(plan.new_shape.keys())
+    sizes = tuple(plan.new_shape.values())
+    return jax.make_mesh(sizes, names)
+
+
+def reshard_tree(tree, new_shardings):
+    """Move a (host or device) pytree onto new-mesh shardings."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(jax.device_get(x)), s),
+        tree, new_shardings)

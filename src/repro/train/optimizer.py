@@ -1,0 +1,145 @@
+"""AdamW with optional block-quantized (int8) first/second moments.
+
+The int8 states (blockwise absmax linear quantization, à la 8-bit Adam
+[arXiv:2110.02861]) cut optimizer memory from 8 to ~2.06 bytes/param —
+that is what lets arctic-480b / grok-314b train_4k fit the 256-chip
+single-pod memory budget (DESIGN.md sec. 4); dense ≤33B archs default to
+fp32 states.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    state_dtype: str = "fp32"        # "fp32" | "int8"
+    q_block: int = 256
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 quantization
+# ---------------------------------------------------------------------------
+
+
+class QTensor(NamedTuple):
+    codes: Array    # int8, (*lead, n_blocks, block) — LAST-axis blocking so
+                    # the parent param's sharding carries over unchanged
+                    # (flat blocking forced a full reshard every step; see
+                    # EXPERIMENTS.md §Perf iteration 1)
+    scales: Array   # fp32, (*lead, n_blocks)
+    shape: tuple    # static original shape (aux data in pytree)
+
+    def size_bytes(self) -> int:
+        return self.codes.size + 4 * self.scales.size
+
+
+def _quantize(x: Array, block: int) -> QTensor:
+    shape = x.shape
+    x = x.astype(jnp.float32)
+    last = shape[-1]
+    pad = (-last) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = x.reshape(*shape[:-1], -1, block)
+    scales = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    scales = jnp.maximum(scales, 1e-12)
+    codes = jnp.clip(jnp.round(blocks / scales[..., None]), -127, 127)
+    return QTensor(codes.astype(jnp.int8), scales, shape)
+
+
+def _dequantize(q: QTensor) -> Array:
+    x = (q.codes.astype(jnp.float32) * q.scales[..., None])
+    x = x.reshape(*q.shape[:-1], -1)
+    return x[..., : q.shape[-1]]
+
+
+jax.tree_util.register_pytree_node(
+    QTensor,
+    lambda q: ((q.codes, q.scales), q.shape),
+    lambda shape, ch: QTensor(ch[0], ch[1], shape),
+)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: Array
+
+
+def init_state(params, cfg: OptConfig) -> OptState:
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if cfg.state_dtype == "int8" and p.ndim >= 2:
+            return _quantize(z, cfg.q_block)
+        return z
+
+    m = jax.tree.map(zero_like, params)
+    v = jax.tree.map(zero_like, params)
+    return OptState(m, v, jnp.zeros((), jnp.int32))
+
+
+def _schedule(cfg: OptConfig, step: Array) -> Array:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(params, grads, state: OptState, cfg: OptConfig):
+    """One AdamW step (with de/re-quantization of int8 states)."""
+    count = state.count + 1
+    lr = _schedule(cfg, count)
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mq = isinstance(m, QTensor)
+        m_f = _dequantize(m) if mq else m
+        v_f = _dequantize(v) if mq else v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        u = (m_f / c1) / (jnp.sqrt(v_f / c2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        if mq:
+            return new_p, _quantize(m_f, cfg.q_block), _quantize(v_f, cfg.q_block)
+        return new_p, m_f, v_f
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, count), gn

@@ -1,0 +1,23 @@
+import numpy as np
+import pytest
+
+# NOTE (spec): do NOT set xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device.  Multi-device tests run subprocesses.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_clustered_datasets(n, seed=0, n_points=(40, 300), d=2):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        k = int(rng.integers(1, 4))
+        centers = rng.uniform(-50, 50, (k, d))
+        npts = int(rng.integers(*n_points))
+        idx = rng.integers(0, k, npts)
+        pts = centers[idx] + rng.normal(size=(npts, d)) * rng.uniform(0.5, 2)
+        out.append(pts.astype(np.float32))
+    return out

@@ -1,0 +1,145 @@
+"""Multi-device tests.  jax pins the device count at first init, so these
+run in SUBPROCESSES with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(the spec forbids setting it globally for the test session)."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = f"{REPO}/src:{REPO}"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env, cwd=REPO)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_ring_hausdorff_and_sharded_search():
+    out = run_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import distributed as dist
+        from repro.kernels import ref
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(2)
+        q = rng.normal(size=(64, 2)).astype(np.float32)
+        d = rng.normal(loc=1.0, size=(128, 2)).astype(np.float32)
+        qv = np.ones(64, bool); dv = np.ones(128, bool); dv[120:] = False
+        h = dist.ring_hausdorff(mesh, "model", jnp.asarray(q),
+                                jnp.asarray(qv), jnp.asarray(d),
+                                jnp.asarray(dv))
+        h_ref = ref.directed_hausdorff(jnp.asarray(q), jnp.asarray(d),
+                                       jnp.asarray(qv), jnp.asarray(dv))
+        assert np.allclose(h, h_ref, atol=1e-5), (float(h), float(h_ref))
+        dd, ii = dist.ring_nn_distance(mesh, "model", jnp.asarray(q),
+                                       jnp.asarray(qv), jnp.asarray(d),
+                                       jnp.asarray(dv))
+        dr, ir = ref.nn_distance(jnp.asarray(q), jnp.asarray(d),
+                                 jnp.asarray(qv), jnp.asarray(dv))
+        assert np.allclose(dd, dr, atol=1e-5)
+        assert (np.asarray(ii) == np.asarray(ir)).all()
+        # sharded GBO
+        B = 64
+        dvv = np.ones(B, bool); dvv[60:] = False
+        sg = rng.integers(0, 2**32, size=(B, 32), dtype=np.uint32)
+        qs = rng.integers(0, 2**32, size=(32,), dtype=np.uint32)
+        tv, ti = dist.sharded_topk_gbo(mesh, ("data", "model"),
+                                       jnp.asarray(qs), jnp.asarray(sg),
+                                       jnp.asarray(dvv), 5)
+        cref = np.array([np.unpackbits((qs & s).view(np.uint8)).sum()
+                         for s in sg]).astype(np.int64)
+        cref = np.where(dvv, cref, -1)
+        assert (np.asarray(tv) == np.sort(cref)[::-1][:5]).all()
+        print("DIST_OK")
+    """)
+    assert "DIST_OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    out = run_py("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro import configs
+        from repro.launch import sharding as sh, mesh as mesh_lib
+        from repro.train import optimizer as opt_lib, train_step as ts
+        cfg = configs.get_reduced("llama3_8b")
+        opt_cfg = opt_lib.OptConfig(lr=1e-3, warmup_steps=1)
+        key = jax.random.PRNGKey(0)
+        state = ts.init_train_state(key, cfg, opt_cfg)
+        batch = {
+            "tokens": jax.random.randint(key, (8, 64), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (8, 64), 0, cfg.vocab_size),
+        }
+        step = ts.make_train_step(cfg, opt_cfg)
+        # single device
+        s1, m1 = jax.jit(step)(state, batch)
+        # sharded on a (4, 2) mesh
+        mesh = mesh_lib.make_test_mesh()
+        p_shard = sh.param_shardings(jax.eval_shape(lambda: state.params),
+                                     mesh)
+        with mesh:
+            s2, m2 = jax.jit(step)(state, batch)
+        assert np.allclose(float(m1["loss"]), float(m2["loss"]),
+                           rtol=1e-4), (float(m1["loss"]), float(m2["loss"]))
+        w1 = np.asarray(jax.tree.leaves(s1.params)[0])
+        w2 = np.asarray(jax.tree.leaves(s2.params)[0])
+        assert np.allclose(w1, w2, atol=1e-4)
+        print("SHARD_OK", float(m1["loss"]))
+    """)
+    assert "SHARD_OK" in out
+
+
+def test_elastic_restore_onto_different_mesh(tmp_path):
+    tmp_path = str(tmp_path)
+    out = run_py(f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro import configs
+        from repro.checkpoint import ckpt as ckpt_lib
+        from repro.launch import sharding as sh
+        from repro.runtime import elastic
+        from repro.train import optimizer as opt_lib, train_step as ts
+        cfg = configs.get_reduced("llama3_8b")
+        opt_cfg = opt_lib.OptConfig(lr=1e-3, warmup_steps=1)
+        state = ts.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+        ckpt_lib.save({tmp_path!r}, 1, state.params, extra={{"step": 1}})
+        # "failure": restore onto a SHRUNKEN mesh (8 -> 4 devices)
+        plan = elastic.plan_remesh({{"data": 4, "model": 2}}, failed=4)
+        assert plan.new_shape["model"] == 2
+        mesh2 = jax.make_mesh((2, 2), ("data", "model"))
+        shards = sh.param_shardings(jax.eval_shape(lambda: state.params),
+                                    mesh2)
+        restored, extra = ckpt_lib.restore({tmp_path!r}, state.params,
+                                           shardings=shards)
+        w0 = np.asarray(jax.tree.leaves(state.params)[0])
+        w1 = np.asarray(jax.tree.leaves(restored)[0])
+        assert np.array_equal(w0, w1)
+        print("ELASTIC_OK")
+    """)
+    assert "ELASTIC_OK" in out
+
+
+def test_dryrun_cell_reduced():
+    """The dry-run pipeline itself (lower+compile+cost+collectives) on a
+    reduced cell and 8-device test mesh."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO}/src:{REPO}"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "yi_9b",
+         "--shape", "train_4k", "--mesh", "multi", "--test",
+         "--out", "/tmp/dryrun_pytest"],
+        capture_output=True, text=True, timeout=560, env=env, cwd=REPO)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "all cells ok" in r.stdout
+    import json
+    rec = json.loads(
+        Path("/tmp/dryrun_pytest/yi_9b__train_4k__multi.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["flops_per_device"] > 0
+    assert rec["collective_bytes_total"] > 0   # grads cross the pod axis

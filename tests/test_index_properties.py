@@ -1,0 +1,152 @@
+"""Property-based tests (hypothesis) on the unified index invariants and
+the paper's bound math (Eq. 4, Lemma 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry, index as il, outliers, search, zorder
+from repro.core.build import build_query_index
+
+SET = dict(max_examples=20, deadline=None)
+
+
+def pointset(draw, min_n=8, max_n=200, d=2):
+    n = draw(st.integers(min_n, max_n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    scale = draw(st.floats(0.1, 50.0))
+    return (rng.normal(size=(n, d)) * scale).astype(np.float32)
+
+
+points_strategy = st.composite(pointset)
+
+
+@given(points_strategy())
+@settings(**SET)
+def test_ball_and_box_invariants(pts):
+    p, v, depth = il.pad_points(jnp.asarray(pts), 8)
+    idx = il.build_index(p, v, depth)
+    pts_t = np.asarray(idx.points)
+    val_t = np.asarray(idx.valid)
+    for lvl in range(depth + 1):
+        seg = p.shape[0] >> lvl
+        pp = pts_t.reshape(1 << lvl, seg, -1)
+        vv = val_t.reshape(1 << lvl, seg)
+        sl = idx.level_slice(lvl)
+        c = np.asarray(idx.centers[sl])
+        r = np.asarray(idx.radii[sl])
+        lo = np.asarray(idx.box_lo[sl])
+        hi = np.asarray(idx.box_hi[sl])
+        dist = np.linalg.norm(pp - c[:, None], axis=-1)
+        assert not ((dist > r[:, None] + 1e-3) & vv).any()
+        assert not (((pp < lo[:, None] - 1e-4) | (pp > hi[:, None] + 1e-4))
+                    & vv[..., None]).any()
+
+
+@given(points_strategy())
+@settings(**SET)
+def test_half_ball_property_of_mean_centers(pts):
+    """Eq. 4's lower bound needs >=1 point in any half-ball; mean-centered
+    nodes satisfy it (DESIGN.md sec. 2).  Check random directions."""
+    c = pts.mean(axis=0)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        u = rng.normal(size=pts.shape[1])
+        proj = (pts - c) @ u
+        assert (proj <= 1e-4).any() and (proj >= -1e-4).any()
+
+
+@given(points_strategy(), points_strategy())
+@settings(**SET)
+def test_eq4_bounds_sound(q, d):
+    """LB <= H(Q->D) <= UB for mean-centered bounding balls."""
+    oq, rq = q.mean(0), np.linalg.norm(q - q.mean(0), axis=1).max()
+    od, rd = d.mean(0), np.linalg.norm(d - d.mean(0), axis=1).max()
+    cd = float(np.linalg.norm(oq - od))
+    lb = max(cd - rd, 0.0)
+    ub = float(np.sqrt(cd**2 + rd**2) + rq)
+    dd = np.sqrt(((q[:, None] - d[None]) ** 2).sum(-1))
+    h = dd.min(axis=1).max()
+    assert lb <= h + 1e-4
+    assert h <= ub + 1e-4
+
+
+@given(points_strategy(), points_strategy(), st.floats(0.05, 5.0))
+@settings(**SET)
+def test_lemma1_approx_error_bound(q, d, eps):
+    """|ApproHaus - ExactHaus| <= 2*eps (Lemma 1)."""
+    q_idx, _ = build_query_index(q, leaf_capacity=4)
+    d_idx, _ = build_query_index(d, leaf_capacity=4)
+    # guarantee holds when the stopping level's radii < eps; approx_level
+    # returns the leaf level otherwise -> use effective eps
+    lq = search.approx_level(q_idx, eps)
+    ld = search.approx_level(d_idx, eps)
+    r_eff = max(
+        float(np.asarray(il.leaf_radii(q_idx)).max()),
+        float(np.asarray(il.leaf_radii(d_idx)).max()),
+        eps,
+    )
+    approx = float(search.hausdorff_pair_approx(q_idx, d_idx, eps))
+    dd = np.sqrt(((q[:, None] - d[None]) ** 2).sum(-1))
+    exact = dd.min(axis=1).max()
+    assert abs(approx - exact) <= 2 * r_eff + 1e-3
+
+
+@given(points_strategy())
+@settings(**SET)
+def test_outlier_removal_only_removes_far_points(pts):
+    p, v, depth = il.pad_points(jnp.asarray(pts), 8)
+    idx = il.build_index(p, v, depth)
+    refined, r_prime = outliers.remove_outliers(idx)
+    # refinement never removes the majority and never adds validity
+    assert int(refined.valid.sum()) <= int(idx.valid.sum())
+    assert int(refined.valid.sum()) >= int(0.5 * int(idx.valid.sum()))
+    # stats re-tightened: every surviving point inside the recomputed ball
+    # (radii can move slightly since centers are means of the survivors)
+    pts_t = np.asarray(refined.points)
+    val_t = np.asarray(refined.valid)
+    seg = pts_t.shape[0]
+    c = np.asarray(refined.centers[0])
+    r = float(refined.radii[0])
+    dist = np.linalg.norm(pts_t - c[None], axis=-1)
+    assert not ((dist > r + 1e-3) & val_t).any()
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 7))
+@settings(**SET)
+def test_zorder_bijective_and_sorted(seed, theta):
+    rng = np.random.default_rng(seed)
+    ix = rng.integers(0, 1 << theta, 128).astype(np.uint32)
+    iy = rng.integers(0, 1 << theta, 128).astype(np.uint32)
+    codes = np.asarray(zorder.morton2(jnp.asarray(ix), jnp.asarray(iy)))
+    assert codes.max() < zorder.num_cells(theta)
+    # decode by de-interleave and compare
+    def deinterleave(c):
+        x = c & 0x55555555
+        x = (x | (x >> 1)) & 0x33333333
+        x = (x | (x >> 2)) & 0x0F0F0F0F
+        x = (x | (x >> 4)) & 0x00FF00FF
+        x = (x | (x >> 8)) & 0x0000FFFF
+        return x
+    assert (deinterleave(codes) == ix).all()
+    assert (deinterleave(codes >> 1) == iy).all()
+
+
+@given(points_strategy(), points_strategy(), st.integers(3, 6))
+@settings(**SET)
+def test_signature_algebra(a, b, theta):
+    lo = jnp.asarray(np.minimum(a.min(0), b.min(0))[:2])
+    hi = jnp.asarray(np.maximum(a.max(0), b.max(0))[:2])
+    va = jnp.ones(len(a), bool)
+    vb = jnp.ones(len(b), bool)
+    sa = zorder.signature(jnp.asarray(a), va, lo, hi, theta)
+    sb = zorder.signature(jnp.asarray(b), vb, lo, hi, theta)
+    ca = set(np.asarray(zorder.cell_ids(jnp.asarray(a), lo, hi,
+                                        theta)).tolist())
+    cb = set(np.asarray(zorder.cell_ids(jnp.asarray(b), lo, hi,
+                                        theta)).tolist())
+    assert int(zorder.sig_count(sa)) == len(ca)
+    assert int(zorder.sig_intersect_count(sa, sb)) == len(ca & cb)
+    assert int(zorder.sig_count(zorder.sig_union(sa, sb))) == len(ca | cb)

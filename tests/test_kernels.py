@@ -1,0 +1,84 @@
+"""Per-kernel allclose sweeps against the ref.py pure-jnp oracles
+(spec deliverable c): shapes x dtypes x mask patterns, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(256, 512), (512, 1024), (300, 700), (257, 513)]
+DIMS = [2, 3, 8, 11]
+
+
+def _mk(rng, nq, nd, d, dtype):
+    q = rng.normal(size=(nq, d)).astype(dtype)
+    dd = rng.normal(loc=0.5, size=(nd, d)).astype(dtype)
+    qv = rng.random(nq) > 0.05
+    dv = rng.random(nd) > 0.05
+    qv[0] = dv[0] = True
+    return (jnp.asarray(q), jnp.asarray(dd), jnp.asarray(qv),
+            jnp.asarray(dv))
+
+
+@pytest.mark.parametrize("nq,nd", SHAPES)
+@pytest.mark.parametrize("d", DIMS)
+def test_hausdorff_kernel_sweep(nq, nd, d):
+    rng = np.random.default_rng(nq + nd + d)
+    q, dd, qv, dv = _mk(rng, nq, nd, d, np.float32)
+    got = ops.directed_hausdorff(q, dd, qv, dv)
+    want = ref.directed_hausdorff(q, dd, qv, dv)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("nq,nd", SHAPES[:2])
+def test_nn_distance_kernel_sweep(nq, nd):
+    rng = np.random.default_rng(nq)
+    q, dd, qv, dv = _mk(rng, nq, nd, 2, np.float32)
+    gd, gi = ops.nn_distance(q, dd, qv, dv)
+    wd, wi = ref.nn_distance(q, dd, qv, dv)
+    np.testing.assert_allclose(gd, wd, rtol=1e-5, atol=1e-5)
+    assert (np.asarray(gi) == np.asarray(wi)).all()
+
+
+@pytest.mark.parametrize("n,m", [(256, 256), (300, 400), (512, 257)])
+@pytest.mark.parametrize("d", [2, 3])
+def test_bound_matrix_kernel_sweep(n, m, d):
+    rng = np.random.default_rng(n + m)
+    oq = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    od = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    rq = jnp.asarray(rng.uniform(0, 2, n).astype(np.float32))
+    rd = jnp.asarray(rng.uniform(0, 2, m).astype(np.float32))
+    glb, gub = ops.bound_matrices(oq, rq, od, rd)
+    wlb, wub = ref.bound_matrix(oq, rq, od, rd)
+    np.testing.assert_allclose(glb, wlb, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gub, wub, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("na,nb,w", [(256, 256, 32), (300, 270, 8),
+                                     (512, 300, 64)])
+def test_set_intersect_kernel_sweep(na, nb, w):
+    rng = np.random.default_rng(na + w)
+    sa = jnp.asarray(rng.integers(0, 2**32, (na, w), dtype=np.uint32))
+    sb = jnp.asarray(rng.integers(0, 2**32, (nb, w), dtype=np.uint32))
+    got = ops.set_intersect_counts(sa, sb)
+    want = ref.set_intersect_count(sa, sb)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_hausdorff_bf16_tolerance():
+    rng = np.random.default_rng(9)
+    q, dd, qv, dv = _mk(rng, 256, 512, 2, np.float32)
+    got = ops.directed_hausdorff(q.astype(jnp.bfloat16).astype(jnp.float32),
+                                 dd, qv, dv)
+    want = ref.directed_hausdorff(q, dd, qv, dv)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_kernel_vs_ref_path_boundary():
+    """Sizes below tile thresholds must route to ref and stay correct."""
+    rng = np.random.default_rng(3)
+    q, dd, qv, dv = _mk(rng, 10, 20, 2, np.float32)
+    got = ops.directed_hausdorff(q, dd, qv, dv)
+    want = ref.directed_hausdorff(q, dd, qv, dv)
+    np.testing.assert_allclose(got, want, rtol=1e-6)

@@ -1,0 +1,167 @@
+"""Per-architecture smoke tests (spec deliverable f): reduced config, one
+forward + one train step + one decode step on CPU; output shapes + no NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.models import ssm
+from repro.models.layers import attention
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+
+
+def _batch(cfg, key, B=2, S=32, labels=False):
+    batch = {}
+    if cfg.embed_input:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                            jnp.bfloat16)
+    if cfg.vision_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            key, (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if labels:
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_and_decode(arch):
+    cfg = configs.get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    B, S = 2, 32
+    batch = _batch(cfg, key, B, S)
+    logits, aux = M.forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    lg, caches, ln = M.prefill(params, cfg, batch, max_len=S + 8)
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    tok = (jnp.zeros((B, 1), jnp.int32) if cfg.embed_input else
+           jax.random.normal(key, (B, 1, cfg.d_model), jnp.bfloat16))
+    ctx = batch.get("image_embeds")
+    lg2, caches = M.decode_step(params, cfg, tok, caches, jnp.int32(S),
+                                ctx=ctx)
+    assert lg2.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg2.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "grok_1_314b", "mamba2_780m",
+                                  "jamba_v0_1_52b"])
+def test_train_step(arch):
+    cfg = configs.get_reduced(arch)
+    key = jax.random.PRNGKey(1)
+    opt_cfg = opt_lib.OptConfig(lr=1e-3, warmup_steps=1)
+    state = ts.init_train_state(key, cfg, opt_cfg)
+    step = jax.jit(ts.make_train_step(cfg, opt_cfg))
+    batch = _batch(cfg, key, B=2, S=32, labels=True)
+    state, m = step(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["grad_norm"]) > 0
+    state, m2 = step(state, batch)
+    assert float(m2["loss"]) < float(m["loss"])  # one step on same batch
+
+
+def test_prefill_decode_consistency():
+    """Decoding the (n+1)th token after an n-token prefill must equal the
+    teacher-forced logits at position n."""
+    cfg = configs.get_reduced("llama3_8b")
+    cfg = dataclasses.replace(cfg, attn_q_chunk=16, attn_kv_chunk=16)
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(key, cfg)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full, _ = M.forward(params, cfg, {"tokens": tokens})
+    lg, caches, _ = M.prefill(params, cfg, {"tokens": tokens[:, :-1]},
+                              max_len=S + 4)
+    lg2, _ = M.decode_step(params, cfg, tokens[:, -1:], caches,
+                           jnp.int32(S - 1))
+    np.testing.assert_allclose(
+        np.asarray(lg2[:, 0]), np.asarray(full[:, -1]), atol=0.15, rtol=0.05)
+
+
+def test_prefill_decode_consistency_mamba():
+    cfg = configs.get_reduced("mamba2_780m")
+    key = jax.random.PRNGKey(3)
+    params = M.init_params(key, cfg)
+    B, P, S = 2, 32, 64   # prefill length = one ssm chunk; forward = two
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full, _ = M.forward(params, cfg, {"tokens": tokens})
+    lg, caches, _ = M.prefill(params, cfg, {"tokens": tokens[:, :P]},
+                              max_len=P + 4)
+    lg2, _ = M.decode_step(params, cfg, tokens[:, P:P + 1], caches,
+                           jnp.int32(P))
+    # teacher-forced logits at position P are conditioned on tokens[0..P]
+    np.testing.assert_allclose(
+        np.asarray(lg2[:, 0]), np.asarray(full[:, P]), atol=0.15, rtol=0.05)
+
+
+def test_ssd_chunked_equals_sequential():
+    key = jax.random.PRNGKey(1)
+    B, L, H, P, N = 2, 64, 4, 16, 8
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, L, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    y1, s1 = ssm.ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    y2, s2 = ssm.ssd_sequential(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(y1, y2, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(s1, s2, atol=1e-3, rtol=1e-3)
+
+
+def test_chunked_attention_equals_naive():
+    key = jax.random.PRNGKey(0)
+    B, S, H, KH, D = 2, 128, 8, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KH, D))
+    v = jax.random.normal(ks[2], (B, S, KH, D))
+    G = H // KH
+    q5 = q.reshape(B, S, KH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k) / np.sqrt(D)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bhgqk,bkhd->bhgqd", p, v)
+    want = jnp.transpose(want, (0, 3, 1, 2, 4)).reshape(B, S, H, D)
+    got = attention(q, k, v, causal=True, q_chunk=32, kv_chunk=16)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_analytic_param_counts_close_to_real():
+    """cfg.param_count() (used for MODEL_FLOPS) must track actual inits."""
+    for arch in ["llama3_8b", "mamba2_780m", "grok_1_314b"]:
+        cfg = configs.get_reduced(arch)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        real = sum(x.size for x in jax.tree.leaves(params))
+        assert abs(real - cfg.param_count()) / real < 0.05, arch
+
+
+def test_int8_kv_cache_decode_matches_fp():
+    """§Perf iteration 8: int8 KV cache decode tracks the fp path within
+    quantization noise, and prefill->decode stays consistent."""
+    cfg = dataclasses.replace(configs.get_reduced("llama3_8b"),
+                              kv_cache_dtype="int8",
+                              attn_q_chunk=16, attn_kv_chunk=16)
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(key, cfg)
+    B, S = 2, 24
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full, _ = M.forward(params, cfg, {"tokens": tokens})
+    lg, caches, _ = M.prefill(params, cfg, {"tokens": tokens[:, :-1]},
+                              max_len=S + 4)
+    assert caches[0]["k"].dtype == jnp.int8
+    assert caches[0]["k_scale"].dtype == jnp.bfloat16
+    lg2, caches = M.decode_step(params, cfg, tokens[:, -1:], caches,
+                                jnp.int32(S - 1))
+    np.testing.assert_allclose(np.asarray(lg2[:, 0]), np.asarray(full[:, -1]),
+                               atol=0.2, rtol=0.1)  # int8 quant noise
+    lg3, _ = M.decode_step(params, cfg, tokens[:, -1:], caches, jnp.int32(S))
+    assert bool(jnp.isfinite(lg3.astype(jnp.float32)).all())

@@ -1,0 +1,82 @@
+"""End-to-end behaviour tests: the paper's full pipeline (build index ->
+multi-granularity search -> point search) and the framework integration
+(Spadas curation -> token pipeline -> training)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import make_clustered_datasets
+from repro.core import point_search, search, zorder
+from repro.core.build import build_query_index, build_repository
+from repro.data import discovery, synthetic, tokens as tok_lib
+from repro import configs
+from repro.train import optimizer as opt_lib, train_step as ts
+
+
+def test_multi_granularity_pipeline():
+    """The Fig. 1 user journey: RangeS -> ExempS -> RangeP -> NNP."""
+    datasets = make_clustered_datasets(40, seed=3)
+    repo, info = build_repository(datasets, leaf_capacity=16, theta=5)
+    Q = datasets[5]
+    q_idx, q_sig = build_query_index(Q, space_lo=repo.space_lo,
+                                     space_hi=repo.space_hi, theta=5)
+
+    # 1. coarse: datasets in a region
+    qlo, qhi = jnp.asarray(Q.min(0)), jnp.asarray(Q.max(0))
+    mask, _ = search.range_search(repo, qlo, qhi)
+    assert bool(mask[5])          # Q's own source dataset overlaps
+
+    # 2. coarse: exemplar search (three metrics agree on the trivial match)
+    v_ia, i_ia = search.topk_ia(repo, qlo, qhi, 3)
+    v_gb, i_gb = search.topk_gbo(repo, q_sig, 3)
+    v_h, i_h, _ = search.topk_hausdorff(repo, q_idx, 3)
+    assert int(i_h[0]) == 5 and float(v_h[0]) < 1e-3   # H(Q,Q)=0
+    assert 5 in np.asarray(i_gb).tolist()
+
+    # 3. fine: points of the best dataset inside the region
+    best = int(i_h[1])            # most similar *other* dataset
+    d_idx = jax.tree.map(lambda x: x[best], repo.ds_index)
+    take, _ = point_search.range_points(d_idx, qlo, qhi)
+    pts = np.asarray(d_idx.points)[np.asarray(take)]
+    assert ((pts >= np.asarray(qlo) - 1e-5).all()
+            and (pts <= np.asarray(qhi) + 1e-5).all())
+
+    # 4. fine: NN points for every query point
+    dist, idx, stats = point_search.nnp_pruned(q_idx, d_idx)
+    assert stats.pruned_fraction >= 0.0
+    assert bool(jnp.isfinite(dist).all())
+
+
+def test_spadas_curation_to_training():
+    """Data-layer integration: curate -> tokenize -> train 10 steps."""
+    lake = synthetic.trajectory_repository(32, seed=0)
+    selected, repo, info = discovery.curate(lake, lake[0], k=12, theta=5)
+    assert len(selected) >= 4
+    cfg = configs.get_reduced("spadas_trajlm")
+    pipe = discovery.pipeline_from_selection(lake, selected, repo, theta=5,
+                                             seq_len=64, batch=2)
+    opt_cfg = opt_lib.OptConfig(lr=3e-3, warmup_steps=2)
+    state = ts.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg)
+    step = jax.jit(ts.make_train_step(cfg, opt_cfg))
+    losses = []
+    for _ in range(10):
+        b = pipe.next_batch()
+        assert b["tokens"].max() < cfg.vocab_size
+        state, m = step(state, jax.tree.map(jnp.asarray, b))
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+
+
+def test_index_construction_scales_with_outliers_removed():
+    datasets = synthetic.poi_repository(24, seed=7, outlier_frac=0.05)
+    repo_noor, _ = build_repository(datasets, remove_outliers=False)
+    repo_or, info = build_repository(datasets, remove_outliers=True)
+    live_before = int(np.asarray(repo_noor.ds_index.valid).sum())
+    live_after = int(np.asarray(repo_or.ds_index.valid).sum())
+    assert live_after < live_before            # something was removed
+    assert live_after > 0.8 * live_before      # but not the data itself
+    # removal shrinks dataset radii (the Fig. 5 effect)
+    r_b = np.asarray(repo_noor.ds_index.radii[:, 0])
+    r_a = np.asarray(repo_or.ds_index.radii[:, 0])
+    assert r_a.mean() < r_b.mean()
