@@ -1,0 +1,180 @@
+"""Engine QPS benchmark: batched multi-query dispatch vs per-query loop.
+
+    PYTHONPATH=src python benchmarks/bench_engine.py [--out BENCH_engine.json]
+
+For each dataset-granularity op (RangeS, top-k IA, top-k GBO, ApproHaus)
+and the point-granularity RangeP, measures queries-per-second of
+
+  * the **per-query-loop baseline**: a Python loop over the seed
+    single-query ops (the pre-engine serving shape — one host round trip
+    per query), and
+  * the **engine batched path** at batch sizes 1 -> 256 (one device
+    dispatch per batch via the QueryEngine's cached executables).
+
+Emits BENCH_engine.json with per-op QPS curves plus a summary of the
+batch-64 speedup over the baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import point_search, search, zorder
+from repro.core.build import build_repository
+from repro.data import synthetic
+from repro.engine import QueryEngine
+
+BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def _time(fn, *, repeats: int, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def _query_pool(repo, datasets, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    lo = rng.uniform(0, 80, (n, 2)).astype(np.float32)
+    hi = lo + rng.uniform(2, 20, (n, 2)).astype(np.float32)
+    sig_fn = jax.jit(lambda p, v: zorder.signature(
+        p, v, repo.space_lo, repo.space_hi, 5))
+    sigs = []
+    for i in range(n):
+        q = datasets[i % len(datasets)]
+        sigs.append(np.asarray(sig_fn(jnp.asarray(q),
+                                      jnp.ones(len(q), bool))))
+    return lo, hi, np.stack(sigs)
+
+
+def bench_op(name, baseline_one, engine_batch, pool_size, *, repeats=8):
+    """QPS for per-query loop vs engine batches; returns the op's record."""
+    # baseline: Python loop, one op call per query (seed serving shape)
+    n_base = min(pool_size, 32)
+
+    def loop():
+        out = None
+        for i in range(n_base):
+            out = baseline_one(i)
+        return out
+
+    t = _time(loop, repeats=max(2, repeats // 2))
+    baseline_qps = n_base / t
+
+    rows = []
+    for b in BATCHES:
+        tb = _time(lambda: engine_batch(b), repeats=repeats)
+        rows.append({
+            "batch": b,
+            "seconds_per_batch": tb,
+            "qps": b / tb,
+            "speedup_vs_loop": (b / tb) / baseline_qps,
+        })
+    return {
+        "baseline_qps": baseline_qps,
+        "baseline_loop_size": n_base,
+        "batches": rows,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--datasets", type=int, default=128)
+    ap.add_argument("--repeats", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    lake = synthetic.trajectory_repository(args.datasets, seed=0,
+                                           n_points=(100, 400))
+    repo, info = build_repository(lake, leaf_capacity=16, theta=5,
+                                  remove_outliers=False)
+    engine = QueryEngine(repo)
+    n_pool = max(BATCHES)
+    lo, hi, sigs = _query_pool(repo, lake, n_pool)
+    lo_j, hi_j, sigs_j = jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(sigs)
+    eps = float(zorder.default_epsilon(repo.space_lo, repo.space_hi, 5))
+    k = 10
+
+    # small exemplar queries for ApproHaus (the serving shape: Q ~ 64 pts)
+    q_sets = [lake[i % len(lake)][:64] for i in range(n_pool)]
+    q_batch_all = engine.build_queries(q_sets)
+
+    def q_slice(b):
+        return jax.tree.map(lambda x: x[:b], q_batch_all)
+
+    ds_ids = np.arange(n_pool, dtype=np.int32) % args.datasets
+
+    ops = {}
+
+    ops["range_search"] = bench_op(
+        "range_search",
+        lambda i: search.range_search(repo, lo_j[i], hi_j[i])[0],
+        lambda b: engine.range_search(lo[:b], hi[:b]),
+        n_pool, repeats=args.repeats,
+    )
+    ops["topk_ia"] = bench_op(
+        "topk_ia",
+        lambda i: search.topk_ia(repo, lo_j[i], hi_j[i], k)[0],
+        lambda b: engine.topk_ia(lo[:b], hi[:b], k),
+        n_pool, repeats=args.repeats,
+    )
+    ops["topk_gbo"] = bench_op(
+        "topk_gbo",
+        lambda i: search.topk_gbo(repo, sigs_j[i], k)[0],
+        lambda b: engine.topk_gbo(sigs[:b], k),
+        n_pool, repeats=args.repeats,
+    )
+    ops["topk_hausdorff_approx"] = bench_op(
+        "topk_hausdorff_approx",
+        lambda i: search.topk_hausdorff_approx(
+            repo, jax.tree.map(lambda x: x[i], q_batch_all), k, eps)[0],
+        lambda b: engine.topk_hausdorff_approx(q_slice(b), k, eps),
+        n_pool, repeats=max(2, args.repeats // 2),
+    )
+    ops["range_points"] = bench_op(
+        "range_points",
+        lambda i: point_search.range_points(
+            jax.tree.map(lambda x: x[int(ds_ids[i])], repo.ds_index),
+            lo_j[i], hi_j[i])[0],
+        lambda b: engine.range_points(ds_ids[:b], lo[:b], hi[:b]),
+        n_pool, repeats=args.repeats,
+    )
+
+    summary = {
+        f"{name}_speedup_at_64": next(
+            r["speedup_vs_loop"] for r in rec["batches"] if r["batch"] == 64
+        )
+        for name, rec in ops.items()
+    }
+    rec = {
+        "bench": "engine_qps",
+        "backend": jax.default_backend(),
+        "n_datasets": args.datasets,
+        "n_slots": info["n_slots"],
+        "k": k,
+        "ops": ops,
+        "summary": summary,
+        "engine_stats": {
+            "dispatches": engine.stats.dispatches,
+            "cache_hits": engine.stats.cache_hits,
+            "cache_misses": engine.stats.cache_misses,
+        },
+    }
+    Path(args.out).write_text(json.dumps(rec, indent=2))
+    print(json.dumps(summary, indent=2))
+    print(f"wrote {args.out}")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

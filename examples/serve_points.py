@@ -2,48 +2,65 @@
 
     PYTHONPATH=src python examples/serve_points.py
 
-Simulates the deployed system: a resident Spadas index answers batched
-RangeP/NNP requests (retrieval), while the trajectory LM serves batched
-decode steps (generation) — the two workloads the production mesh hosts.
+Simulates the deployed system: a resident Spadas QueryEngine answers
+micro-batched RangeP/NNP requests through the search serving front-end
+(retrieval), while the trajectory LM serves batched decode steps
+(generation) — the two workloads the production mesh hosts.  The old
+per-request host loop is gone: every group of requests is one device
+dispatch.
 """
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import point_search
-from repro.core.build import build_query_index, build_repository
+from repro.core.build import build_repository
 from repro.data import synthetic
+from repro.engine import QueryEngine
 from repro.launch import serve as serve_driver
+from repro.launch.serve_search import SearchServer, ServerStats
 
 
 def main():
     # --- retrieval side ---
     lake = synthetic.trajectory_repository(64, seed=0)
     repo, info = build_repository(lake, leaf_capacity=16, theta=5)
-    d_idx = jax.tree.map(lambda x: x[0], repo.ds_index)
+    engine = QueryEngine(repo)
+    server = SearchServer(engine, max_batch=32).start()
 
     rng = np.random.default_rng(0)
     n_requests = 16
+    boxes = [rng.uniform(20, 80, 2).astype(np.float32)
+             for _ in range(n_requests)]
+
+    # warmup burst (compile the bucketed executables once)
+    warm = [server.submit("range_points", ds_id=i % 64, r_lo=c - 2.0,
+                          r_hi=c + 2.0) for i, c in enumerate(boxes)]
+    for f in warm:
+        f.result(timeout=600)
+    server.stats = ServerStats()       # report the measured window only
+
     t0 = time.time()
-    hits = 0
-    for _ in range(n_requests):
-        c = rng.uniform(20, 80, 2).astype(np.float32)
-        lo, hi = jnp.asarray(c - 2.0), jnp.asarray(c + 2.0)
-        take, _ = point_search.range_points(d_idx, lo, hi)
-        hits += int(take.sum())
+    futures = [
+        server.submit("range_points", ds_id=i % 64, r_lo=c - 2.0,
+                      r_hi=c + 2.0)
+        for i, c in enumerate(boxes)
+    ]
+    hits = sum(int(np.asarray(f.result(timeout=600)).sum())
+               for f in futures)
     dt = time.time() - t0
     print(f"[retrieval] {n_requests} RangeP requests in {dt*1e3:.1f} ms "
-          f"({hits} points returned)")
+          f"({hits} points returned, "
+          f"{server.stats.batches} device batches)")
 
     Q = lake[1][:256]
-    q_idx, _ = build_query_index(Q)
+    server.submit("nnp", ds_id=0, q=Q).result(timeout=600)  # warmup
+    d0 = engine.stats.dispatches
     t0 = time.time()
-    dist, idx, stats = point_search.nnp_pruned(q_idx, d_idx)
+    dist, idx = server.submit("nnp", ds_id=0, q=Q).result(timeout=600)
     print(f"[retrieval] NNP for {len(Q)} points in "
           f"{(time.time()-t0)*1e3:.1f} ms "
-          f"({stats.pruned_fraction:.0%} leaf pairs pruned)")
+          f"({engine.stats.dispatches - d0} engine dispatches)")
+    server.stop()
 
     # --- generation side ---
     serve_driver.main(["--arch", "spadas_trajlm", "--requests", "8",

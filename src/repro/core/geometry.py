@@ -38,6 +38,18 @@ def pairwise_center_dist(cx: Array, cy: Array) -> Array:
     return dist_matrix(cx, cy)
 
 
+def pairwise_dist_exact(x: Array, y: Array) -> Array:
+    """Pairwise distances via broadcast-subtract (n, d) x (m, d) -> (n, m).
+
+    No |x|^2 - 2xy + |y|^2 cancellation and no dot-general, so jitted and
+    eager callers produce bit-identical values — used where the engine's
+    batched path must reproduce the seed op exactly.  O(n*m*d) memory;
+    reserve for node-frontier sizes, not raw point sets.
+    """
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+
+
 # ---------------------------------------------------------------------------
 # Eq. 4 — fast ball bounds on the directed Hausdorff distance
 # ---------------------------------------------------------------------------

@@ -28,13 +28,9 @@ class PointStats(NamedTuple):
     pruned_fraction: float
 
 
-def range_points(d_idx: DatasetIndex, r_lo: Array, r_hi: Array):
-    """Mask of points of D inside [r_lo, r_hi] + traversal stats.
-
-    The tree prunes leaf slabs whose box misses R; fully-contained leaves
-    are accepted wholesale (the paper's three-way node classification);
-    only boundary leaves need the per-point test.
-    """
+def range_points_core(d_idx: DatasetIndex, r_lo: Array, r_hi: Array):
+    """Pure-jax RangeP: (take mask, scanned-leaf mask).  vmap-able over a
+    leading query/dataset batch — the engine's single-dispatch path."""
     depth = d_idx.depth
     sl = d_idx.level_slice(depth)
     leaf_lo = d_idx.box_lo[sl]
@@ -50,11 +46,22 @@ def range_points(d_idx: DatasetIndex, r_lo: Array, r_hi: Array):
     take = jnp.where(
         contained[leaf_of], True, inside
     ) & live[leaf_of] & d_idx.valid
-    n_leaves = live.shape[0]
+    return take, live & ~contained
+
+
+def range_points(d_idx: DatasetIndex, r_lo: Array, r_hi: Array):
+    """Mask of points of D inside [r_lo, r_hi] + traversal stats.
+
+    The tree prunes leaf slabs whose box misses R; fully-contained leaves
+    are accepted wholesale (the paper's three-way node classification);
+    only boundary leaves need the per-point test.
+    """
+    take, scanned = range_points_core(d_idx, r_lo, r_hi)
+    n_leaves = scanned.shape[0]
     stats = PointStats(
         nodes_evaluated=n_leaves,
-        leaves_scanned=int((live & ~contained).sum()),
-        pruned_fraction=float(1.0 - (live & ~contained).sum() / max(n_leaves, 1)),
+        leaves_scanned=int(scanned.sum()),
+        pruned_fraction=float(1.0 - scanned.sum() / max(n_leaves, 1)),
     )
     return take, stats
 
@@ -65,13 +72,9 @@ def nnp(q_idx: DatasetIndex, d_idx: DatasetIndex):
                            q_idx.valid, d_idx.valid)
 
 
-def nnp_pruned(q_idx: DatasetIndex, d_idx: DatasetIndex):
-    """Tree-pruned NNP: per-Q-leaf, only D-leaves whose Eq. 4 lower bound
-    beats the leaf's best upper bound are scanned (same mask the Hausdorff
-    traversal builds — 'reuse the queues' in the paper's phrasing).
-
-    Returns (dists, idx, PointStats).  Exactness asserted in tests.
-    """
+def nnp_pruned_core(q_idx: DatasetIndex, d_idx: DatasetIndex):
+    """Pure-jax tree-pruned NNP: (dists, idx, pair_live).  vmap-able over a
+    leading batch of (query, dataset) pairs."""
     lq, ld = q_idx.depth, d_idx.depth
     slq = q_idx.level_slice(lq)
     sld = d_idx.level_slice(ld)
@@ -121,9 +124,22 @@ def nnp_pruned(q_idx: DatasetIndex, d_idx: DatasetIndex):
         return dist, ix
 
     dists, idxs = jax.vmap(per_qleaf)(qp, qv, pair_live)
+    return (
+        dists.reshape(-1), idxs.reshape(-1).astype(jnp.int32), pair_live
+    )
+
+
+def nnp_pruned(q_idx: DatasetIndex, d_idx: DatasetIndex):
+    """Tree-pruned NNP: per-Q-leaf, only D-leaves whose Eq. 4 lower bound
+    beats the leaf's best upper bound are scanned (same mask the Hausdorff
+    traversal builds — 'reuse the queues' in the paper's phrasing).
+
+    Returns (dists, idx, PointStats).  Exactness asserted in tests.
+    """
+    dists, idxs, pair_live = nnp_pruned_core(q_idx, d_idx)
     stats = PointStats(
         nodes_evaluated=int(pair_live.shape[0] * pair_live.shape[1]),
         leaves_scanned=int(pair_live.sum()),
         pruned_fraction=float(1.0 - pair_live.sum() / pair_live.size),
     )
-    return dists.reshape(-1), idxs.reshape(-1).astype(jnp.int32), stats
+    return dists, idxs, stats

@@ -20,6 +20,7 @@ TPU adaptation (DESIGN.md sec. 2): branch-and-bound becomes
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import NamedTuple
 
@@ -55,10 +56,30 @@ def range_search(repo: Repository, r_lo: Array, r_hi: Array):
     masked out, so the per-level overlap test only "counts" for live nodes.
     Returns (mask over ORIGINAL dataset slots, SearchStats).
     """
+    mask, live_nodes, nodes_evaluated = _range_search_core(repo, r_lo, r_hi)
+    live = int(live_nodes)
+    stats = SearchStats(
+        nodes_evaluated,
+        int(mask.sum()),
+        0,
+        1.0 - live / max(nodes_evaluated, 1),
+    )
+    return mask, stats
+
+
+def _range_search_core(repo: Repository, r_lo: Array, r_hi: Array):
+    """Pure-jax RangeS traversal: (mask, live_nodes, total_nodes).
+
+    `total_nodes` is a static python int (tree lanes touched); `live_nodes`
+    counts lanes still active at each level — the nodes a pointer-chasing
+    traversal would actually visit — as a device scalar so the batched
+    engine path stays sync-free.
+    """
     up = repo.repo
     depth = up.depth
     active = jnp.ones((1,), bool)
     nodes_evaluated = 0
+    live_nodes = jnp.zeros((), jnp.int32)
     for level in range(depth + 1):
         sl = up.level_slice(level)
         lo = up.box_lo[sl]
@@ -66,6 +87,7 @@ def range_search(repo: Repository, r_lo: Array, r_hi: Array):
         hit = geometry.box_overlaps(lo, hi, r_lo, r_hi) & (up.counts[sl] > 0)
         active = active & hit
         nodes_evaluated += int(active.shape[0])  # static count of lanes
+        live_nodes = live_nodes + active.sum().astype(jnp.int32)
         if level < depth:
             active = jnp.repeat(active, 2)
     # leaf segments -> dataset slots (tree order), then test each dataset MBR
@@ -77,8 +99,7 @@ def range_search(repo: Repository, r_lo: Array, r_hi: Array):
     hit_ds = geometry.box_overlaps(lo_t, hi_t, r_lo, r_hi)
     mask_tree = ds_active_tree & hit_ds & up.ds_valid
     mask = jnp.zeros_like(mask_tree).at[up.order].set(mask_tree)
-    stats = SearchStats(nodes_evaluated, int(mask.sum()), 0, 0.0)
-    return mask, stats
+    return mask, live_nodes, nodes_evaluated
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +118,9 @@ def topk_ia(repo: Repository, q_lo: Array, q_hi: Array, k: int):
     ia = geometry.intersect_area(lo, hi, q_lo, q_hi)
     ia = jnp.where(repo.ds_valid, ia, -1.0)
     vals, ids = jax.lax.top_k(ia, k)
+    # k can exceed the number of valid datasets: padded slots surface with
+    # the -1 sentinel score; mask their ids so callers never see a padded id
+    ids = jnp.where(vals < 0, -1, ids)
     return vals, ids
 
 
@@ -110,6 +134,7 @@ def topk_gbo(repo: Repository, q_sig: Array, k: int):
     counts = ops.set_intersect_counts(q_sig[None, :], repo.ds_sigs)[0]
     counts = jnp.where(repo.ds_valid, counts, -1)
     vals, ids = jax.lax.top_k(counts, k)
+    ids = jnp.where(vals < 0, -1, ids)  # padded slots: sentinel id
     return vals, ids
 
 
@@ -200,17 +225,13 @@ def _kth_smallest(x: Array, k: int) -> Array:
     return jnp.sort(x)[jnp.minimum(k - 1, x.shape[0] - 1)]
 
 
-def topk_hausdorff(
-    repo: Repository,
-    q_idx: DatasetIndex,
-    k: int,
-    *,
-    refine_levels: int = 3,
-    chunk: int = 32,
+def _hausdorff_bound_phases(
+    repo: Repository, q_idx: DatasetIndex, k: int, refine_levels: int
 ):
-    """ExactHaus: top-k datasets by directed Hausdorff H(Q -> D).
+    """Phases 0+1 of ExactHaus, pure jax (no host syncs).
 
-    Returns (values (k,), ids (k,), SearchStats).
+    Returns (LB, tau, cand, nodes_evaluated, cand_after_bounds) with the two
+    counters as device scalars so the whole pipeline can live under one jit.
     """
     B = repo.n_slots
     valid = repo.ds_valid
@@ -221,7 +242,7 @@ def topk_hausdorff(
     UB = jnp.where(valid, UB, BIG)
     tau = _kth_smallest(UB, k)
     cand = LB <= tau
-    nodes_evaluated = B
+    nodes_evaluated = jnp.asarray(B, jnp.int32)
 
     # ---- phase 1: level-synchronous refinement ----------------------------
     max_level = min(q_idx.depth, repo.ds_index.depth, refine_levels)
@@ -232,13 +253,135 @@ def topk_hausdorff(
         UB = jnp.where(cand, jnp.minimum(UB, UB_l), UB)
         tau = _kth_smallest(jnp.where(valid, UB, BIG), k)
         cand = cand & (LB <= tau)
-        nodes_evaluated += int(cand.sum()) * (1 << level)
+        nodes_evaluated += cand.sum().astype(jnp.int32) * (1 << level)
 
+    return LB, tau, cand, nodes_evaluated, cand.sum().astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "refine_levels", "chunk")
+)
+def _topk_hausdorff_device(
+    repo: Repository,
+    q_idx: DatasetIndex,
+    k: int,
+    refine_levels: int,
+    chunk: int,
+):
+    """ExactHaus, entirely on device: phases 0-2 under ONE dispatch.
+
+    Phase 2 is a `lax.while_loop` over ascending-lower-bound candidate
+    chunks with on-device threshold tightening — the same evaluation order,
+    stopping rule, and arithmetic as the seed host loop
+    (`topk_hausdorff_host`), so results are bit-identical; the per-chunk
+    device->host sync is gone.
+    """
+    B = repo.n_slots
+    valid = repo.ds_valid
+    LB, tau, cand, nodes_evaluated, cand_after = _hausdorff_bound_phases(
+        repo, q_idx, k, refine_levels
+    )
+
+    lb_masked = jnp.where(cand, LB, BIG)
+    order = jnp.argsort(lb_masked)
+    lb_sorted = lb_masked[order]
+    n_pad = ((B + chunk - 1) // chunk) * chunk
+    # pad ids with 0 (masked out by the BIG lb pad; .at[].min makes the
+    # duplicate-id write a no-op)
+    order_p = jnp.pad(order, (0, n_pad - B))
+    lb_p = jnp.pad(lb_sorted, (0, n_pad - B), constant_values=BIG)
+
+    q_pts, q_val = q_idx.points, q_idx.valid
+    d_pts_all, d_val_all = repo.ds_index.points, repo.ds_index.valid
+
+    def cond(carry):
+        pos, _, tau_c, _ = carry
+        lb0 = lb_p[pos]
+        # seed stopping rule: candidates remain, chunk head not pruned
+        return (pos < B) & (lb0 < BIG / 2) & (lb0 <= tau_c)
+
+    def body(carry):
+        pos, vals, tau_c, evaluated = carry
+        ids = jax.lax.dynamic_slice(order_p, (pos,), (chunk,))
+        lbs = jax.lax.dynamic_slice(lb_p, (pos,), (chunk,))
+        live = lbs < BIG / 2
+        hs = ops.directed_hausdorff_batched(
+            q_pts, d_pts_all[ids], q_val, d_val_all[ids]
+        )
+        vals = vals.at[ids].min(jnp.where(live, hs, BIG))
+        evaluated = evaluated + live.sum().astype(jnp.int32)
+        # monotone threshold tightening from the k finite exacts so far
+        finite = vals < BIG / 2
+        kth = jnp.sort(jnp.where(finite, vals, BIG))[k - 1]
+        tau_c = jnp.where(finite.sum() >= k, kth, tau_c)
+        return pos + chunk, vals, tau_c, evaluated
+
+    init = (
+        jnp.zeros((), jnp.int32),
+        jnp.full((B,), BIG, jnp.float32),
+        tau.astype(jnp.float32),
+        jnp.zeros((), jnp.int32),
+    )
+    _, exact_vals, _, evaluated = jax.lax.while_loop(cond, body, init)
+
+    vals = jnp.where(valid, exact_vals, BIG)
+    top_vals, top_ids = jax.lax.top_k(-vals, k)
+    return -top_vals, top_ids, nodes_evaluated, cand_after, evaluated
+
+
+def topk_hausdorff(
+    repo: Repository,
+    q_idx: DatasetIndex,
+    k: int,
+    *,
+    refine_levels: int = 3,
+    chunk: int = 32,
+):
+    """ExactHaus: top-k datasets by directed Hausdorff H(Q -> D).
+
+    Single device dispatch (see `_topk_hausdorff_device`); results are
+    bit-identical to the seed host-chunked loop `topk_hausdorff_host`.
+    Returns (values (k,), ids (k,), SearchStats).
+    """
+    vals, ids, nodes, cand_after, evaluated = _topk_hausdorff_device(
+        repo, q_idx, k, refine_levels, chunk
+    )
+    n_valid = max(int(repo.ds_valid.sum()), 1)
+    stats = SearchStats(
+        int(nodes), int(cand_after), int(evaluated),
+        1.0 - int(evaluated) / n_valid,
+    )
+    return vals, ids, stats
+
+
+def topk_hausdorff_host(
+    repo: Repository,
+    q_idx: DatasetIndex,
+    k: int,
+    *,
+    refine_levels: int = 3,
+    chunk: int = 32,
+):
+    """Seed ExactHaus with the host-chunked phase 2 (reference semantics).
+
+    Kept verbatim as the oracle for the device pipeline's bit-equivalence
+    tests; one device->host sync per candidate chunk.
+    Returns (values (k,), ids (k,), SearchStats).
+    """
+    B = repo.n_slots
+    valid = repo.ds_valid
+    LB, tau, cand, nodes_dev, _ = _hausdorff_bound_phases(
+        repo, q_idx, k, refine_levels
+    )
+    nodes_evaluated = int(nodes_dev)
     cand_after_bounds = int(cand.sum())
 
     # ---- phase 2: exact evaluation, ascending-LB host loop ----------------
     lb_np = np.asarray(jnp.where(cand, LB, BIG))
-    order = np.argsort(lb_np)
+    # stable, matching the device pipeline's jnp.argsort: LB ties (common —
+    # Eq. 4 clamps lb to 0 under ball overlap) must evaluate in the same
+    # order for the bit-identity contract to hold
+    order = np.argsort(lb_np, kind="stable")
     exact_vals = np.full((B,), np.float32(BIG))
     tau_f = float(tau)
     evaluated = 0
@@ -315,7 +458,9 @@ def topk_hausdorff_approx(
     od, rd, cd = _level_arrays(repo.ds_index, ld)
 
     def one(od_i, cd_i):
-        cdm = geometry.pairwise_center_dist(oq, od_i)
+        # exact-form distance: bit-stable under jit, so the engine's
+        # batched variant reproduces this op exactly
+        cdm = geometry.pairwise_dist_exact(oq, od_i)
         cdm = jnp.where((cd_i > 0)[None, :], cdm, BIG)
         row = jnp.min(cdm, axis=1)
         return jnp.max(jnp.where(cq > 0, row, -BIG))

@@ -1,0 +1,20 @@
+"""Batched multi-query execution engine over the unified Spadas index.
+
+`QueryEngine` buckets incoming query batches into fixed shapes, caches one
+jitted executable per (op, shape-bucket, k), and answers B queries with a
+single device dispatch per op; `batched_ops` holds the pure-jax batched
+forms of every dataset- and point-granularity search operation.
+"""
+from repro.engine.batched_ops import (  # noqa: F401
+    nnp_pruned_batched,
+    range_points_batched,
+    range_search_batched,
+    topk_gbo_batched,
+    topk_hausdorff_approx_batched,
+    topk_ia_batched,
+)
+from repro.engine.engine import (  # noqa: F401
+    DEFAULT_BUCKETS,
+    EngineStats,
+    QueryEngine,
+)

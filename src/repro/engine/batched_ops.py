@@ -1,0 +1,183 @@
+"""Batched (multi-query) forms of every search op (engine hot paths).
+
+The seed search layer answers one query per call; each of these functions
+answers B queries in ONE device dispatch, either by vmapping the seed op's
+pure-jax core over a leading query axis or — where the batched form is
+itself the natural kernel shape (GBO popcount matrix, IA box algebra) — by
+evaluating the whole (B, B_pad) interaction directly.  Results are
+elementwise identical to a per-query Python loop over the seed ops
+(asserted in tests/test_engine.py); none of them sync to the host.
+
+Query batches arrive pre-padded to a shape bucket by the QueryEngine; rows
+past the caller's true batch are padding and are sliced off by the engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry, point_search, search
+from repro.core.index import DatasetIndex
+from repro.core.repo_index import Repository
+from repro.kernels import ops
+
+Array = jax.Array
+BIG = search.BIG
+
+
+# ---------------------------------------------------------------------------
+# dataset granularity
+# ---------------------------------------------------------------------------
+
+
+def range_search_batched(repo: Repository, r_lo: Array, r_hi: Array):
+    """RangeS for B query boxes: (masks (B, B_pad), live_nodes (B,))."""
+    masks, live, _ = jax.vmap(
+        search._range_search_core, in_axes=(None, 0, 0)
+    )(repo, r_lo, r_hi)
+    return masks, live
+
+
+def topk_ia_batched(repo: Repository, q_lo: Array, q_hi: Array, k: int):
+    """Top-k IA for B query boxes: (vals (B, k), ids (B, k)).
+
+    IA is O(1) per (query, dataset) pair, so the batch is one dense
+    (B, B_pad) box-algebra pass + a row-wise top_k.
+    """
+    _, _, lo, hi = repo.roots()
+    ia = geometry.intersect_area(
+        lo[None, :, :], hi[None, :, :], q_lo[:, None, :], q_hi[:, None, :]
+    )
+    ia = jnp.where(repo.ds_valid[None, :], ia, -1.0)
+    vals, ids = jax.lax.top_k(ia, k)
+    ids = jnp.where(vals < 0, -1, ids)
+    return vals, ids
+
+
+def topk_gbo_batched(repo: Repository, q_sigs: Array, k: int):
+    """Top-k GBO for B query signatures — ONE popcount(AND) matrix kernel."""
+    counts = ops.set_intersect_counts(q_sigs, repo.ds_sigs)   # (B, B_pad)
+    counts = jnp.where(repo.ds_valid[None, :], counts, -1)
+    vals, ids = jax.lax.top_k(counts, k)
+    ids = jnp.where(vals < 0, -1, ids)
+    return vals, ids
+
+
+# ---------------------------------------------------------------------------
+# ApproHaus, batched with per-query stopping levels
+# ---------------------------------------------------------------------------
+
+
+def _levels_ok(radii: Array, counts: Array, depth: int, eps) -> Array:
+    """(depth+1,) bool: does level l satisfy the Lemma 1 stopping rule
+    (every live node radius < eps)?  Reduces over ALL leading dims, matching
+    `search.approx_level` on both single and batched indexes."""
+    oks = []
+    for level in range(depth + 1):
+        sl = slice((1 << level) - 1, (1 << (level + 1)) - 1)
+        ok = jnp.all(
+            jnp.where(counts[..., sl] > 0, radii[..., sl], 0.0) < eps
+        )
+        oks.append(ok)
+    return jnp.stack(oks)
+
+
+def _level_for_eps(radii: Array, counts: Array, depth: int, eps) -> Array:
+    """Device-side `search.approx_level`: first satisfying level, else the
+    leaf level.  Traced — per-query levels cost no host sync."""
+    oks = _levels_ok(radii, counts, depth, eps)
+    return jnp.where(jnp.any(oks), jnp.argmax(oks), depth).astype(jnp.int32)
+
+
+def _gather_frontier(centers, radii, counts, level, n_leaves: int):
+    """The level-`level` node frontier, gathered into a fixed (n_leaves,)
+    buffer (+ in-frontier mask) so a traced per-query level keeps static
+    shapes.  Node (l, j) lives at flat slot 2^l - 1 + j."""
+    start = jnp.left_shift(jnp.int32(1), level) - 1
+    j = jnp.arange(n_leaves, dtype=jnp.int32)
+    node = jnp.minimum(start + j, centers.shape[-2] - 1)
+    mask = j < jnp.left_shift(jnp.int32(1), level)
+    return (
+        jnp.take(centers, node, axis=-2),
+        jnp.take(radii, node, axis=-1),
+        jnp.take(counts, node, axis=-1),
+        mask,
+    )
+
+
+def topk_hausdorff_approx_batched(
+    repo: Repository, q_batch: DatasetIndex, k: int, eps
+):
+    """ApproHaus (Lemma 1) for a (B, ...) batch of query indexes.
+
+    Each query descends to ITS OWN stopping level (chosen on device), so
+    results match the seed per-query op exactly; the whole batch is one
+    dispatch.  Returns (vals (B, k), ids (B, k), eps_eff (B,)).
+    """
+    dq = q_batch.depth
+    dd = repo.ds_index.depth
+    n_lq = 1 << dq
+    n_ld = 1 << dd
+
+    # dataset-side level: shared by every query (matches the seed, which
+    # picks it from the whole batched ds_index)
+    ld = _level_for_eps(repo.ds_index.radii, repo.ds_index.counts, dd, eps)
+    od, rd, cd, dmask = _gather_frontier(
+        repo.ds_index.centers, repo.ds_index.radii, repo.ds_index.counts,
+        ld, n_ld,
+    )                                    # (B_pad, n_ld, d), ..., (n_ld,)
+    d_ok = (cd > 0) & dmask[None, :]     # (B_pad, n_ld)
+    r_d = jnp.max(jnp.where(d_ok, rd, 0.0))
+
+    def per_query(q_centers, q_radii, q_counts):
+        lq = _level_for_eps(q_radii, q_counts, dq, eps)
+        oq, rq, cq, qmask = _gather_frontier(q_centers, q_radii, q_counts,
+                                             lq, n_lq)
+        q_ok = (cq > 0) & qmask
+
+        def one(od_i, ok_i):
+            cdm = geometry.pairwise_dist_exact(oq, od_i)
+            cdm = jnp.where(ok_i[None, :], cdm, BIG)
+            row = jnp.min(cdm, axis=1)
+            return jnp.max(jnp.where(q_ok, row, -BIG))
+
+        vals = jax.vmap(one)(od, d_ok)
+        vals = jnp.where(repo.ds_valid, vals, BIG)
+        top_vals, top_ids = jax.lax.top_k(-vals, k)
+        r_q = jnp.max(jnp.where(q_ok, rq, 0.0))
+        eps_eff = jnp.maximum(jnp.asarray(eps, r_q.dtype),
+                              jnp.maximum(r_q, r_d))
+        return -top_vals, top_ids, eps_eff
+
+    return jax.vmap(per_query)(
+        q_batch.centers, q_batch.radii, q_batch.counts
+    )
+
+
+# ---------------------------------------------------------------------------
+# point granularity
+# ---------------------------------------------------------------------------
+
+
+def _select_datasets(repo: Repository, ds_ids: Array) -> DatasetIndex:
+    """Gather the per-request dataset trees: one bottom-level index row per
+    request (requests in a batch may target different datasets)."""
+    return jax.tree.map(lambda x: x[ds_ids], repo.ds_index)
+
+
+def range_points_batched(
+    repo: Repository, ds_ids: Array, r_lo: Array, r_hi: Array
+):
+    """RangeP for B (dataset id, box) requests: (take (B, n_pad), scanned)."""
+    d_sel = _select_datasets(repo, ds_ids)
+    return jax.vmap(point_search.range_points_core)(d_sel, r_lo, r_hi)
+
+
+def nnp_pruned_batched(
+    repo: Repository, ds_ids: Array, q_batch: DatasetIndex
+):
+    """Tree-pruned NNP for B (query index, dataset id) requests.
+
+    Returns (dists (B, nq), idx (B, nq), pair_live (B, qleaf, dleaf))."""
+    d_sel = _select_datasets(repo, ds_ids)
+    return jax.vmap(point_search.nnp_pruned_core)(q_batch, d_sel)

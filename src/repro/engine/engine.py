@@ -1,0 +1,249 @@
+"""QueryEngine: the batched multi-query execution engine.
+
+The engine owns a resident :class:`Repository` and turns ragged streams of
+incoming queries into fixed-shape device work:
+
+  * **shape bucketing** — a batch of B queries is padded (by replicating the
+    first row) up to the smallest configured bucket >= B, so the number of
+    distinct compiled shapes is bounded by the bucket ladder, not by the
+    traffic;
+  * **executable cache** — one jitted executable per (op, bucket, k) key,
+    built lazily on first use and reused for every later batch that lands
+    in the same bucket (hits/misses are counted for observability);
+  * **single dispatch** — every op lowers to exactly one device computation
+    per batch via the vmapped forms in :mod:`repro.engine.batched_ops`;
+    no per-query Python loop, no per-chunk host sync.
+
+Query point sets are themselves bucketed: `build_queries` pads a ragged
+list of point sets to a power-of-two point capacity and builds all their
+ball-tree indexes in one vmapped build.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as index_lib
+from repro.core import search
+from repro.core.build import pad_batch
+from repro.core.index import DatasetIndex
+from repro.core.repo_index import Repository
+from repro.engine import batched_ops
+
+Array = jax.Array
+
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+@dataclass
+class EngineStats:
+    """Cumulative engine observability counters."""
+    queries: int = 0
+    dispatches: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    padded_queries: int = 0          # bucket padding overhead actually paid
+    per_op: dict = field(default_factory=dict)
+
+    def count(self, op: str, batch: int, bucket: int) -> None:
+        self.queries += batch
+        self.dispatches += 1
+        self.padded_queries += bucket - batch
+        self.per_op[op] = self.per_op.get(op, 0) + batch
+
+
+class QueryEngine:
+    """Batched search over a resident repository (see module docstring)."""
+
+    def __init__(
+        self,
+        repo: Repository,
+        *,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        leaf_capacity: int = 16,
+    ):
+        self.repo = repo
+        self.buckets = tuple(sorted(buckets))
+        self.leaf_capacity = leaf_capacity
+        self.stats = EngineStats()
+        self._executables: dict = {}
+
+    # -- bucketing ---------------------------------------------------------
+
+    def bucket_for(self, batch: int) -> int:
+        for b in self.buckets:
+            if b >= batch:
+                return b
+        b = self.buckets[-1]
+        while b < batch:          # beyond the ladder: grow geometrically
+            b *= 2
+        return b
+
+    @staticmethod
+    def _pad_rows(x: Array, bucket: int) -> Array:
+        """Pad a (B, ...) array to (bucket, ...) by replicating row 0 —
+        padding rows recompute a real query, so no masking is needed and
+        results for them are simply sliced off."""
+        b = x.shape[0]
+        if b == bucket:
+            return x
+        reps = jnp.broadcast_to(x[:1], (bucket - b,) + x.shape[1:])
+        return jnp.concatenate([x, reps], axis=0)
+
+    def _pad_tree(self, tree, bucket: int):
+        return jax.tree.map(lambda x: self._pad_rows(x, bucket), tree)
+
+    # -- executable cache --------------------------------------------------
+
+    def _executable(self, key, build):
+        fn = self._executables.get(key)
+        if fn is None:
+            fn = build()
+            self._executables[key] = fn
+            self.stats.cache_misses += 1
+        else:
+            self.stats.cache_hits += 1
+        return fn
+
+    # -- query construction ------------------------------------------------
+
+    def build_queries(
+        self, pointsets: Sequence[np.ndarray]
+    ) -> DatasetIndex:
+        """Index a ragged list of query point sets as one (B, ...) batch.
+
+        Point counts are bucketed to the next power of two (so repeated
+        traffic reuses executables) and the B tree builds run as one
+        vmapped dispatch.
+        """
+        n_max = max(int(p.shape[0]) for p in pointsets)
+        n_bucket = self.leaf_capacity
+        while n_bucket < n_max:
+            n_bucket *= 2
+        depth = index_lib.depth_for(n_bucket, self.leaf_capacity)
+        pts, val, depth = pad_batch(pointsets, self.leaf_capacity, depth)
+        bucket = self.bucket_for(len(pointsets))
+        pts = self._pad_rows(pts, bucket)
+        val = self._pad_rows(val, bucket)
+        build = self._executable(
+            ("build", bucket, pts.shape[1], depth),
+            lambda: jax.jit(partial(index_lib.build_index_batch,
+                                    depth=depth)),
+        )
+        q_batch = build(pts, val)
+        return jax.tree.map(lambda x: x[: len(pointsets)], q_batch)
+
+    # -- dataset-granularity ops ------------------------------------------
+
+    def range_search(self, r_lo, r_hi):
+        """RangeS for B query boxes -> dataset masks (B, B_pad)."""
+        r_lo = jnp.atleast_2d(jnp.asarray(r_lo, jnp.float32))
+        r_hi = jnp.atleast_2d(jnp.asarray(r_hi, jnp.float32))
+        B = r_lo.shape[0]
+        bucket = self.bucket_for(B)
+        fn = self._executable(
+            ("range_search", bucket),
+            lambda: jax.jit(batched_ops.range_search_batched),
+        )
+        masks, _ = fn(self.repo, self._pad_rows(r_lo, bucket),
+                      self._pad_rows(r_hi, bucket))
+        self.stats.count("range_search", B, bucket)
+        return masks[:B]
+
+    def topk_ia(self, q_lo, q_hi, k: int):
+        """Top-k IA for B query boxes -> (vals, ids) each (B, k)."""
+        q_lo = jnp.atleast_2d(jnp.asarray(q_lo, jnp.float32))
+        q_hi = jnp.atleast_2d(jnp.asarray(q_hi, jnp.float32))
+        B = q_lo.shape[0]
+        bucket = self.bucket_for(B)
+        fn = self._executable(
+            ("topk_ia", bucket, k),
+            lambda: jax.jit(partial(batched_ops.topk_ia_batched, k=k)),
+        )
+        vals, ids = fn(self.repo, self._pad_rows(q_lo, bucket),
+                       self._pad_rows(q_hi, bucket))
+        self.stats.count("topk_ia", B, bucket)
+        return vals[:B], ids[:B]
+
+    def topk_gbo(self, q_sigs, k: int):
+        """Top-k GBO for B query signatures -> (vals, ids) each (B, k)."""
+        q_sigs = jnp.asarray(q_sigs)
+        if q_sigs.ndim == 1:
+            q_sigs = q_sigs[None, :]
+        B = q_sigs.shape[0]
+        bucket = self.bucket_for(B)
+        fn = self._executable(
+            ("topk_gbo", bucket, k),
+            lambda: jax.jit(partial(batched_ops.topk_gbo_batched, k=k)),
+        )
+        vals, ids = fn(self.repo, self._pad_rows(q_sigs, bucket))
+        self.stats.count("topk_gbo", B, bucket)
+        return vals[:B], ids[:B]
+
+    def topk_hausdorff_approx(self, q_batch: DatasetIndex, k: int, eps):
+        """ApproHaus for a (B, ...) query-index batch -> (vals, ids, eps_eff)."""
+        B = q_batch.points.shape[0]
+        bucket = self.bucket_for(B)
+        key = ("approx_haus", bucket, q_batch.points.shape[1], k)
+        fn = self._executable(
+            key,
+            lambda: jax.jit(
+                partial(batched_ops.topk_hausdorff_approx_batched, k=k)
+            ),
+        )
+        padded = self._pad_tree(q_batch, bucket)
+        vals, ids, eps_eff = fn(self.repo, padded, eps=jnp.float32(eps))
+        self.stats.count("topk_hausdorff_approx", B, bucket)
+        return vals[:B], ids[:B], eps_eff[:B]
+
+    def topk_hausdorff(self, q_idx: DatasetIndex, k: int, *,
+                       refine_levels: int = 3, chunk: int = 32):
+        """ExactHaus for ONE query — the device-resident branch-and-bound
+        pipeline (single dispatch, `lax.while_loop` refinement)."""
+        fn = self._executable(
+            ("exact_haus", q_idx.points.shape[0], k, refine_levels, chunk),
+            lambda: partial(search._topk_hausdorff_device, k=k,
+                            refine_levels=refine_levels, chunk=chunk),
+        )
+        vals, ids, *_ = fn(self.repo, q_idx)
+        self.stats.count("topk_hausdorff", 1, 1)
+        return vals, ids
+
+    # -- point-granularity ops --------------------------------------------
+
+    def range_points(self, ds_ids, r_lo, r_hi):
+        """RangeP for B (dataset id, box) requests -> take masks (B, n_pad)."""
+        ds_ids = jnp.atleast_1d(jnp.asarray(ds_ids, jnp.int32))
+        r_lo = jnp.atleast_2d(jnp.asarray(r_lo, jnp.float32))
+        r_hi = jnp.atleast_2d(jnp.asarray(r_hi, jnp.float32))
+        B = ds_ids.shape[0]
+        bucket = self.bucket_for(B)
+        fn = self._executable(
+            ("range_points", bucket),
+            lambda: jax.jit(batched_ops.range_points_batched),
+        )
+        take, _ = fn(self.repo, self._pad_rows(ds_ids, bucket),
+                     self._pad_rows(r_lo, bucket),
+                     self._pad_rows(r_hi, bucket))
+        self.stats.count("range_points", B, bucket)
+        return take[:B]
+
+    def nnp(self, ds_ids, q_batch: DatasetIndex):
+        """Tree-pruned NNP for B (query, dataset id) requests ->
+        (dists (B, nq), idx (B, nq))."""
+        ds_ids = jnp.atleast_1d(jnp.asarray(ds_ids, jnp.int32))
+        B = ds_ids.shape[0]
+        bucket = self.bucket_for(B)
+        fn = self._executable(
+            ("nnp", bucket, q_batch.points.shape[1]),
+            lambda: jax.jit(batched_ops.nnp_pruned_batched),
+        )
+        dists, idxs, _ = fn(self.repo, self._pad_rows(ds_ids, bucket),
+                            self._pad_tree(q_batch, bucket))
+        self.stats.count("nnp", B, bucket)
+        return dists[:B], idxs[:B]

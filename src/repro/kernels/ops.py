@@ -83,6 +83,33 @@ def nn_distance(
     return dist, idx
 
 
+@functools.partial(jax.jit, static_argnames=("tq", "td", "use_kernel"))
+def directed_hausdorff_batched(
+    q: Array, ds: Array, q_valid: Array, ds_valid: Array,
+    *, tq: int = 256, td: int = 512, use_kernel: bool = True,
+) -> Array:
+    """H(Q -> D_i) for one query against a stack of datasets (B, n, d).
+
+    One device dispatch for the whole stack — the engine's and ExactHaus
+    phase 2's hot path."""
+    return jax.vmap(
+        lambda d, dv: directed_hausdorff(q, d, q_valid, dv, tq=tq, td=td,
+                                         use_kernel=use_kernel)
+    )(ds, ds_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "td", "use_kernel"))
+def nn_distance_batched(
+    qs: Array, ds: Array, qs_valid: Array, ds_valid: Array,
+    *, tq: int = 256, td: int = 512, use_kernel: bool = True,
+):
+    """Per-point NN for B (query, dataset) pairs: (B, nq) dists + ids."""
+    return jax.vmap(
+        lambda q, d, qv, dv: nn_distance(q, d, qv, dv, tq=tq, td=td,
+                                         use_kernel=use_kernel)
+    )(qs, ds, qs_valid, ds_valid)
+
+
 @functools.partial(jax.jit, static_argnames=("tn", "tm", "use_kernel"))
 def bound_matrices(
     oq: Array, rq: Array, od: Array, rd: Array,

@@ -157,9 +157,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
     mem = compiled.memory_analysis()
     print(mem)                      # proves it fits (spec step 3)
     cost = compiled.cost_analysis()
-    print({k: cost.get(k) for k in ("flops", "bytes accessed")})
     if isinstance(cost, (list, tuple)):
         cost = cost[0]
+    print({k: cost.get(k) for k in ("flops", "bytes accessed")})
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
 

@@ -1,0 +1,298 @@
+"""Search serving front-end: request queue + continuous micro-batching.
+
+    PYTHONPATH=src python -m repro.launch.serve_search [--requests 256 ...]
+
+The production shape for the paper's *online* multi-granularity search:
+clients submit single queries (mixed types — RangeS / top-k IA / top-k
+GBO / ApproHaus at dataset granularity, RangeP / NNP at point granularity)
+into a queue; a dispatcher thread drains the queue continuously, groups
+compatible requests (same op, same k), and executes each group as ONE
+batched device dispatch through the :class:`QueryEngine`.  Under load the
+batch size grows toward `max_batch` on its own — classic continuous
+batching — so throughput scales with traffic while the executable cache
+keeps compile cost amortized across the bucket ladder.
+
+Replaces the per-request host loop of the old `examples/serve_points.py`.
+"""
+from __future__ import annotations
+
+import argparse
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.repo_index import Repository
+from repro.engine import QueryEngine
+
+# ops the dispatcher knows how to group and batch
+OPS = (
+    "range_search", "topk_ia", "topk_gbo", "topk_hausdorff_approx",
+    "range_points", "nnp",
+)
+
+
+@dataclass
+class Request:
+    op: str
+    payload: dict
+    future: Future = field(default_factory=Future)
+    t_submit: float = field(default_factory=time.perf_counter)
+
+
+@dataclass
+class ServerStats:
+    requests: int = 0
+    batches: int = 0
+    batch_size_sum: int = 0
+    latency_sum: float = 0.0
+
+    @property
+    def mean_batch(self) -> float:
+        return self.batch_size_sum / max(self.batches, 1)
+
+    @property
+    def mean_latency_ms(self) -> float:
+        return 1e3 * self.latency_sum / max(self.requests, 1)
+
+
+class SearchServer:
+    """Continuous micro-batching dispatcher over a QueryEngine."""
+
+    def __init__(
+        self,
+        engine: QueryEngine,
+        *,
+        max_batch: int = 64,
+        max_wait_ms: float = 2.0,
+    ):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.max_wait = max_wait_ms / 1e3
+        self.stats = ServerStats()
+        self._queue: "queue.Queue[Request | None]" = queue.Queue()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._running = False
+
+    # -- client API --------------------------------------------------------
+
+    def submit(self, op: str, **payload: Any) -> Future:
+        """Enqueue one query; returns a Future with the op's result."""
+        if op not in OPS:
+            raise ValueError(f"unknown op {op!r}; serving ops: {OPS}")
+        if not self._running:
+            raise RuntimeError("server is not running (start() it first)")
+        req = Request(op, payload)
+        self._queue.put(req)
+        if not self._running and not req.future.done():
+            # lost the race with a concurrent stop(): its drain may have
+            # already passed our request, so fail the future ourselves
+            try:
+                req.future.set_exception(
+                    RuntimeError("server stopped before request ran"))
+            except Exception:           # drain got there first
+                pass
+        return req.future
+
+    def start(self) -> "SearchServer":
+        self._running = True
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._running = False
+        self._queue.put(None)          # wake the dispatcher
+        self._thread.join(timeout=30)
+        # fail anything still queued so no client Future hangs forever
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if req is not None and not req.future.done():
+                req.future.set_exception(
+                    RuntimeError("server stopped before request ran"))
+
+    # -- dispatcher --------------------------------------------------------
+
+    def _drain(self) -> list[Request]:
+        """Block for the first request, then greedily drain up to max_batch
+        more without waiting longer than max_wait — continuous batching."""
+        try:
+            first = self._queue.get(timeout=0.1)
+        except queue.Empty:
+            return []
+        if first is None:
+            return []
+        batch = [first]
+        deadline = time.perf_counter() + self.max_wait
+        while len(batch) < self.max_batch:
+            timeout = deadline - time.perf_counter()
+            try:
+                req = self._queue.get(timeout=max(timeout, 0.0))
+            except queue.Empty:
+                break
+            if req is None:
+                break
+            batch.append(req)
+        return batch
+
+    def _loop(self) -> None:
+        while self._running:
+            batch = self._drain()
+            if not batch:
+                continue
+            # group by (op, k, eps): only requests whose static/shared
+            # parameters agree may share one device dispatch
+            groups: dict[tuple, list[Request]] = {}
+            for req in batch:
+                key = (req.op, req.payload.get("k"),
+                       req.payload.get("eps"))
+                groups.setdefault(key, []).append(req)
+            for reqs in groups.values():
+                try:
+                    self._dispatch(reqs)
+                except Exception as e:  # surface, don't kill the server
+                    for r in reqs:
+                        if not r.future.done():
+                            r.future.set_exception(e)
+
+    def _dispatch(self, reqs: list[Request]) -> None:
+        op = reqs[0].op
+        eng = self.engine
+        if op == "range_search":
+            lo = np.stack([r.payload["r_lo"] for r in reqs])
+            hi = np.stack([r.payload["r_hi"] for r in reqs])
+            out = eng.range_search(lo, hi)
+            results = [out[i] for i in range(len(reqs))]
+        elif op == "topk_ia":
+            lo = np.stack([r.payload["q_lo"] for r in reqs])
+            hi = np.stack([r.payload["q_hi"] for r in reqs])
+            vals, ids = eng.topk_ia(lo, hi, reqs[0].payload["k"])
+            results = [(vals[i], ids[i]) for i in range(len(reqs))]
+        elif op == "topk_gbo":
+            sigs = np.stack([r.payload["q_sig"] for r in reqs])
+            vals, ids = eng.topk_gbo(sigs, reqs[0].payload["k"])
+            results = [(vals[i], ids[i]) for i in range(len(reqs))]
+        elif op == "topk_hausdorff_approx":
+            q_batch = eng.build_queries([r.payload["q"] for r in reqs])
+            vals, ids, eps_eff = eng.topk_hausdorff_approx(
+                q_batch, reqs[0].payload["k"], reqs[0].payload["eps"]
+            )
+            results = [
+                (vals[i], ids[i], eps_eff[i]) for i in range(len(reqs))
+            ]
+        elif op == "range_points":
+            ds = np.asarray([r.payload["ds_id"] for r in reqs])
+            lo = np.stack([r.payload["r_lo"] for r in reqs])
+            hi = np.stack([r.payload["r_hi"] for r in reqs])
+            out = eng.range_points(ds, lo, hi)
+            results = [out[i] for i in range(len(reqs))]
+        elif op == "nnp":
+            ds = np.asarray([r.payload["ds_id"] for r in reqs])
+            q_batch = eng.build_queries([r.payload["q"] for r in reqs])
+            dists, idxs = eng.nnp(ds, q_batch)
+            results = [(dists[i], idxs[i]) for i in range(len(reqs))]
+        else:  # pragma: no cover - guarded by submit()
+            raise ValueError(op)
+
+        now = time.perf_counter()
+        self.stats.batches += 1
+        self.stats.batch_size_sum += len(reqs)
+        for req, res in zip(reqs, results):
+            self.stats.requests += 1
+            self.stats.latency_sum += now - req.t_submit
+            req.future.set_result(res)
+
+
+# ---------------------------------------------------------------------------
+# demo / load driver
+# ---------------------------------------------------------------------------
+
+
+def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0):
+    """Pre-build a mixed stream of (op, payload) requests covering all six
+    serving ops.  Payload construction (signatures etc.) happens here, off
+    the submission path, like a real client would send ready-made queries."""
+    from repro.core import zorder
+
+    rng = np.random.default_rng(seed)
+    n_ds = len(datasets)
+    eps = float(zorder.default_epsilon(repo.space_lo, repo.space_hi, 5))
+    out = []
+    for i in range(n_requests):
+        c = rng.uniform(20, 80, 2).astype(np.float32)
+        lo, hi = c - 2.0, c + 2.0
+        kind = i % 6
+        if kind == 0:
+            out.append(("range_search", dict(r_lo=lo, r_hi=hi)))
+        elif kind == 1:
+            out.append(("topk_ia", dict(q_lo=lo, q_hi=hi, k=5)))
+        elif kind == 2:
+            q = datasets[int(rng.integers(n_ds))]
+            sig = np.asarray(zorder.signature(
+                jax.numpy.asarray(q), jax.numpy.ones(len(q), bool),
+                repo.space_lo, repo.space_hi, 5))
+            out.append(("topk_gbo", dict(q_sig=sig, k=5)))
+        elif kind == 3:
+            q = datasets[int(rng.integers(n_ds))][:64]
+            out.append(("topk_hausdorff_approx", dict(q=q, k=5, eps=eps)))
+        elif kind == 4:
+            out.append(("range_points", dict(
+                ds_id=int(rng.integers(n_ds)), r_lo=lo, r_hi=hi)))
+        else:
+            q = datasets[int(rng.integers(n_ds))][:64]
+            out.append(("nnp", dict(ds_id=int(rng.integers(n_ds)), q=q)))
+    return out
+
+
+def main(argv=None):
+    from repro.core.build import build_repository
+    from repro.data import synthetic
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--datasets", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    lake = synthetic.trajectory_repository(args.datasets, seed=0)
+    repo, _ = build_repository(lake, leaf_capacity=16, theta=5)
+    engine = QueryEngine(repo)
+    server = SearchServer(engine, max_batch=args.max_batch,
+                          max_wait_ms=args.max_wait_ms).start()
+
+    # warmup: submit a full-width burst so the big-bucket executables
+    # compile off the measured path (per-op batch ~= max_batch/6)
+    warm = make_traffic(repo, lake, 6 * args.max_batch, seed=1)
+    for f in [server.submit(op, **p) for op, p in warm]:
+        f.result(timeout=600)
+    server.stats = ServerStats()       # report the measured window only
+
+    traffic = make_traffic(repo, lake, args.requests)
+    t0 = time.perf_counter()
+    futures = [server.submit(op, **payload) for op, payload in traffic]
+    for f in futures:
+        f.result(timeout=600)
+    dt = time.perf_counter() - t0
+    server.stop()
+
+    print(f"[serve_search] {args.requests} mixed requests in {dt*1e3:.1f} ms "
+          f"-> {args.requests/dt:.1f} QPS")
+    print(f"[serve_search] device batches: {server.stats.batches}, "
+          f"mean batch {server.stats.mean_batch:.1f}, "
+          f"mean latency {server.stats.mean_latency_ms:.1f} ms")
+    print(f"[serve_search] engine dispatches: {engine.stats.dispatches}, "
+          f"cache hits/misses: {engine.stats.cache_hits}/"
+          f"{engine.stats.cache_misses}")
+    return server.stats
+
+
+if __name__ == "__main__":
+    main()

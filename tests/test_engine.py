@@ -1,0 +1,251 @@
+"""Engine equivalence: batched single-dispatch ops vs per-query seed ops.
+
+Every QueryEngine op must reproduce a per-query Python loop over the seed
+search layer — including ragged batch sizes that exercise the shape-bucket
+padding — plus brute-force oracles at point granularity, the device/host
+ExactHaus bit-equivalence, the top-k padding sentinel, and the executable
+cache behavior.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_clustered_datasets
+from repro.core import point_search, search, zorder
+from repro.core.build import build_repository
+from repro.engine import QueryEngine
+
+# ragged on purpose: 5 queries land in the 8-bucket, exercising padding
+N_QUERIES = 5
+THETA = 5
+K = 6
+
+
+@pytest.fixture(scope="module")
+def env():
+    # 33 datasets -> 64 padded slots, so top-k can overrun the valid count
+    datasets = make_clustered_datasets(33, seed=2, n_points=(30, 120))
+    repo, _ = build_repository(datasets, leaf_capacity=16, theta=THETA,
+                               remove_outliers=False)
+    engine = QueryEngine(repo)
+    rng = np.random.default_rng(0)
+    lo = rng.uniform(-60, 40, (N_QUERIES, 2)).astype(np.float32)
+    hi = lo + rng.uniform(5, 40, (N_QUERIES, 2)).astype(np.float32)
+    q_sets = [datasets[i] for i in (0, 3, 9, 11, 20)]
+    q_batch = engine.build_queries(q_sets)
+    sigs = np.stack([
+        np.asarray(zorder.signature(jnp.asarray(q),
+                                    jnp.ones(len(q), bool),
+                                    repo.space_lo, repo.space_hi, THETA))
+        for q in q_sets
+    ])
+    return datasets, repo, engine, lo, hi, q_sets, q_batch, sigs
+
+
+def _q_at(q_batch, i):
+    return jax.tree.map(lambda x: x[i], q_batch)
+
+
+def test_bucketing_is_ragged(env):
+    _, _, engine, *_ = env
+    # the fixture batch must actually hit bucket padding
+    assert engine.bucket_for(N_QUERIES) > N_QUERIES
+    assert engine.bucket_for(8) == 8
+    assert engine.bucket_for(300) == 512   # beyond the ladder: grows
+
+
+def test_range_search_batched_matches_loop(env):
+    _, repo, engine, lo, hi, *_ = env
+    masks = engine.range_search(lo, hi)
+    assert masks.shape[0] == N_QUERIES
+    for i in range(N_QUERIES):
+        want, _ = search.range_search(repo, jnp.asarray(lo[i]),
+                                      jnp.asarray(hi[i]))
+        np.testing.assert_array_equal(np.asarray(masks[i]),
+                                      np.asarray(want))
+
+
+def test_topk_ia_batched_matches_loop(env):
+    _, repo, engine, lo, hi, *_ = env
+    vals, ids = engine.topk_ia(lo, hi, K)
+    for i in range(N_QUERIES):
+        v, j = search.topk_ia(repo, jnp.asarray(lo[i]),
+                              jnp.asarray(hi[i]), K)
+        np.testing.assert_array_equal(np.asarray(vals[i]), np.asarray(v))
+        np.testing.assert_array_equal(np.asarray(ids[i]), np.asarray(j))
+
+
+def test_topk_gbo_batched_matches_loop(env):
+    _, repo, engine, _, _, _, _, sigs = env
+    vals, ids = engine.topk_gbo(sigs, K)
+    for i in range(N_QUERIES):
+        v, j = search.topk_gbo(repo, jnp.asarray(sigs[i]), K)
+        np.testing.assert_array_equal(np.asarray(vals[i]), np.asarray(v))
+        np.testing.assert_array_equal(np.asarray(ids[i]), np.asarray(j))
+
+
+def test_topk_hausdorff_approx_batched_matches_loop(env):
+    _, repo, engine, _, _, _, q_batch, _ = env
+    eps = float(zorder.default_epsilon(repo.space_lo, repo.space_hi, THETA))
+    vals, ids, eps_eff = engine.topk_hausdorff_approx(q_batch, K, eps)
+    for i in range(N_QUERIES):
+        v, j, (lq, ld, ee) = search.topk_hausdorff_approx(
+            repo, _q_at(q_batch, i), K, eps)
+        # ids exactly; values to fp-fusion tolerance (jit vs eager FMA)
+        np.testing.assert_array_equal(np.asarray(ids[i]), np.asarray(j))
+        np.testing.assert_allclose(np.asarray(vals[i]), np.asarray(v),
+                                   rtol=1e-5, atol=1e-5)
+        assert abs(float(eps_eff[i]) - ee) < 1e-4
+
+
+def test_range_points_batched_matches_brute(env):
+    datasets, repo, engine, lo, hi, *_ = env
+    ds_ids = np.array([1, 4, 7, 2, 9], np.int32)
+    take = engine.range_points(ds_ids, lo, hi)
+    for i, d in enumerate(ds_ids):
+        d_idx = _q_at(repo.ds_index, int(d))
+        # seed op
+        want, _ = point_search.range_points(
+            d_idx, jnp.asarray(lo[i]), jnp.asarray(hi[i]))
+        np.testing.assert_array_equal(np.asarray(take[i]),
+                                      np.asarray(want))
+        # brute-force oracle over the raw padded points
+        pts = np.asarray(d_idx.points)
+        val = np.asarray(d_idx.valid)
+        brute = (pts >= lo[i]).all(1) & (pts <= hi[i]).all(1) & val
+        np.testing.assert_array_equal(np.asarray(take[i]), brute)
+
+
+def test_nnp_batched_matches_brute(env):
+    datasets, repo, engine, _, _, q_sets, q_batch, _ = env
+    ds_ids = np.array([1, 4, 7, 2, 9], np.int32)
+    dists, idxs = engine.nnp(ds_ids, q_batch)
+    for i, d in enumerate(ds_ids):
+        q_idx = _q_at(q_batch, i)
+        d_idx = _q_at(repo.ds_index, int(d))
+        # seed pruned op
+        wd, wi, _ = point_search.nnp_pruned(q_idx, d_idx)
+        np.testing.assert_array_equal(np.asarray(idxs[i]), np.asarray(wi))
+        np.testing.assert_allclose(np.asarray(dists[i]), np.asarray(wd),
+                                   rtol=1e-5, atol=1e-5)
+        # brute-force oracle on the valid points
+        qp = np.asarray(q_idx.points)
+        qv = np.asarray(q_idx.valid)
+        dp = np.asarray(d_idx.points)[np.asarray(d_idx.valid)]
+        dd = np.sqrt(((qp[:, None] - dp[None]) ** 2).sum(-1)).min(1)
+        got = np.asarray(dists[i])
+        np.testing.assert_allclose(got[qv], dd[qv], atol=1e-4)
+
+
+def test_exact_hausdorff_device_bitwise_matches_host(env):
+    """The lax.while_loop phase 2 must reproduce the seed host-chunked
+    loop exactly — same evaluation order, threshold, and arithmetic."""
+    _, repo, engine, _, _, _, q_batch, _ = env
+    for i in range(N_QUERIES):
+        q_idx = _q_at(q_batch, i)
+        vd, jd, sd = search.topk_hausdorff(repo, q_idx, K)
+        vh, jh, sh = search.topk_hausdorff_host(repo, q_idx, K)
+        np.testing.assert_array_equal(np.asarray(vd), np.asarray(vh))
+        np.testing.assert_array_equal(np.asarray(jd), np.asarray(jh))
+        assert sd.exact_evaluations == sh.exact_evaluations
+        assert sd.candidates_after_bounds == sh.candidates_after_bounds
+        # engine path reuses the same device pipeline
+        ve, je = engine.topk_hausdorff(q_idx, K)
+        np.testing.assert_array_equal(np.asarray(ve), np.asarray(vd))
+        np.testing.assert_array_equal(np.asarray(je), np.asarray(jd))
+
+
+def test_exact_hausdorff_matches_brute(env):
+    datasets, repo, engine, _, _, q_sets, q_batch, _ = env
+    Q = q_sets[1]
+    truth = np.array([
+        np.sqrt(((Q[:, None] - d[None]) ** 2).sum(-1)).min(1).max()
+        for d in datasets
+    ])
+    vals, ids, stats = search.topk_hausdorff(repo, _q_at(q_batch, 1), K)
+    want = set(np.argsort(truth)[:K].tolist())
+    assert set(np.asarray(ids).tolist()) == want
+    np.testing.assert_allclose(np.sort(np.asarray(vals)),
+                               np.sort(truth)[:K], atol=1e-4)
+    assert stats.exact_evaluations < len(datasets)  # pruning works
+
+
+def test_topk_padding_sentinel(env):
+    """k beyond the valid datasets must yield -1 ids, not padded slots."""
+    datasets, repo, engine, lo, hi, _, _, sigs = env
+    n_valid = int(repo.ds_valid.sum())
+    k_over = repo.n_slots          # > n_valid by construction
+    assert k_over > n_valid
+    v, j = search.topk_ia(repo, jnp.asarray(lo[0]), jnp.asarray(hi[0]),
+                          k_over)
+    v, j = np.asarray(v), np.asarray(j)
+    assert (j[v < 0] == -1).all()
+    assert (j[n_valid:] == -1).all()
+    v, j = search.topk_gbo(repo, jnp.asarray(sigs[0]), k_over)
+    v, j = np.asarray(v), np.asarray(j)
+    assert (j[v < 0] == -1).all()
+    assert (j[n_valid:] == -1).all()
+    # batched forms inherit the sentinel
+    v, j = engine.topk_ia(lo, hi, k_over)
+    assert (np.asarray(j)[np.asarray(v) < 0] == -1).all()
+    v, j = engine.topk_gbo(sigs, k_over)
+    assert (np.asarray(j)[np.asarray(v) < 0] == -1).all()
+
+
+def test_range_search_pruned_fraction(env):
+    """pruned_fraction must reflect the traversal, not be hard-coded 0."""
+    _, repo, _, _, _, _, _, _ = env
+    # a far-away box prunes at the root -> high pruned fraction
+    far_lo = jnp.asarray(np.array([1e6, 1e6], np.float32))
+    far_hi = far_lo + 1.0
+    mask, stats = search.range_search(repo, far_lo, far_hi)
+    assert int(np.asarray(mask).sum()) == 0
+    assert stats.pruned_fraction > 0.5
+    # a box covering everything visits every nonempty node (only the
+    # empty padded subtrees count as pruned)
+    mask, stats = search.range_search(
+        repo, jnp.asarray(np.array([-1e6, -1e6], np.float32)),
+        jnp.asarray(np.array([1e6, 1e6], np.float32)))
+    assert int(np.asarray(mask).sum()) == 33
+    assert 0.0 <= stats.pruned_fraction < 0.5
+
+
+def test_executable_cache_reuse(env):
+    _, repo, engine, lo, hi, *_ = env
+    misses0 = engine.stats.cache_misses
+    hits0 = engine.stats.cache_hits
+    engine.topk_ia(lo, hi, 3)          # new (op, bucket, k) -> miss
+    assert engine.stats.cache_misses == misses0 + 1
+    engine.topk_ia(lo[:2], hi[:2], 3)  # bucket 2: new executable
+    assert engine.stats.cache_misses == misses0 + 2
+    engine.topk_ia(lo[:1], hi[:1], 3)  # bucket 1: new executable
+    engine.topk_ia(lo, hi, 3)          # same bucket+k -> hit
+    assert engine.stats.cache_hits == hits0 + 1
+    d0 = engine.stats.dispatches
+    engine.topk_ia(lo, hi, 3)
+    assert engine.stats.dispatches == d0 + 1   # one dispatch per batch
+
+
+def test_server_micro_batching(env):
+    """The serving front-end returns per-request results equal to the
+    engine's and actually groups requests into shared device batches."""
+    from repro.launch.serve_search import SearchServer
+    datasets, repo, engine, lo, hi, *_ = env
+    server = SearchServer(QueryEngine(repo), max_batch=8,
+                          max_wait_ms=20.0).start()
+    try:
+        futures = [
+            server.submit("topk_ia", q_lo=lo[i], q_hi=hi[i], k=K)
+            for i in range(N_QUERIES)
+        ]
+        got = [f.result(timeout=600) for f in futures]
+        vals, ids = engine.topk_ia(lo, hi, K)
+        for i, (v, j) in enumerate(got):
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(vals[i]))
+            np.testing.assert_array_equal(np.asarray(j),
+                                          np.asarray(ids[i]))
+        assert server.stats.batches < N_QUERIES   # grouping happened
+    finally:
+        server.stop()
