@@ -1,6 +1,8 @@
 """Engine QPS benchmark: batched multi-query dispatch vs per-query loop.
 
     PYTHONPATH=src python benchmarks/bench_engine.py [--out BENCH_engine.json]
+    REPRO_HOST_DEVICES=8 PYTHONPATH=src \
+        python benchmarks/bench_engine.py --sharded   # -> BENCH_engine_sharded.json
 
 For each dataset-granularity op (RangeS, top-k IA, top-k GBO, ApproHaus)
 and the point-granularity RangeP, measures queries-per-second of
@@ -11,7 +13,12 @@ and the point-granularity RangeP, measures queries-per-second of
   * the **engine batched path** at batch sizes 1 -> 256 (one device
     dispatch per batch via the QueryEngine's cached executables).
 
-Emits BENCH_engine.json with per-op QPS curves plus a summary of the
+With ``--sharded`` the engine is a :class:`ShardedQueryEngine` over a 1-D
+``data`` mesh spanning all local devices (set ``REPRO_HOST_DEVICES=N`` to
+force N host-platform devices on CPU) and the record lands in
+``BENCH_engine_sharded.json``.
+
+Emits the JSON record with per-op QPS curves plus a summary of the
 batch-64 speedup over the baseline.
 """
 from __future__ import annotations
@@ -21,6 +28,12 @@ import json
 import time
 from pathlib import Path
 
+from repro import hostdev
+
+# must happen before the first jax import: force N host-platform devices so
+# the sharded mode has something to shard over on CPU-only machines
+hostdev.apply()
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -28,7 +41,7 @@ import numpy as np
 from repro.core import point_search, search, zorder
 from repro.core.build import build_repository
 from repro.data import synthetic
-from repro.engine import QueryEngine
+from repro.engine import QueryEngine, ShardedQueryEngine
 
 BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
@@ -89,16 +102,29 @@ def bench_op(name, baseline_one, engine_batch, pool_size, *, repeats=8):
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--out", default=None,
+                    help="output json (default BENCH_engine.json, or "
+                         "BENCH_engine_sharded.json with --sharded)")
     ap.add_argument("--datasets", type=int, default=128)
     ap.add_argument("--repeats", type=int, default=8)
+    ap.add_argument("--sharded", action="store_true",
+                    help="benchmark the ShardedQueryEngine over a 1-D data "
+                         "mesh spanning all local devices")
     args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = ("BENCH_engine_sharded.json" if args.sharded
+                    else "BENCH_engine.json")
 
     lake = synthetic.trajectory_repository(args.datasets, seed=0,
                                            n_points=(100, 400))
     repo, info = build_repository(lake, leaf_capacity=16, theta=5,
                                   remove_outliers=False)
-    engine = QueryEngine(repo)
+    if args.sharded:
+        engine = ShardedQueryEngine(repo)
+        print(f"[bench_engine] sharded: {engine.dispatch.n_shards} shard(s) "
+              f"x {engine.dispatch.shard_slots} dataset slots")
+    else:
+        engine = QueryEngine(repo)
     n_pool = max(BATCHES)
     lo, hi, sigs = _query_pool(repo, lake, n_pool)
     lo_j, hi_j, sigs_j = jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(sigs)
@@ -157,8 +183,16 @@ def main(argv=None):
         for name, rec in ops.items()
     }
     rec = {
-        "bench": "engine_qps",
+        "bench": "engine_qps_sharded" if args.sharded else "engine_qps",
         "backend": jax.default_backend(),
+        "n_devices": jax.device_count(),
+        "sharded": bool(args.sharded),
+        "mesh": (
+            {"axis": engine.dispatch.axis,
+             "n_shards": engine.dispatch.n_shards,
+             "shard_slots": engine.dispatch.shard_slots}
+            if args.sharded else None
+        ),
         "n_datasets": args.datasets,
         "n_slots": info["n_slots"],
         "k": k,

@@ -3,7 +3,11 @@
 `QueryEngine` buckets incoming query batches into fixed shapes, caches one
 jitted executable per (op, shape-bucket, k), and answers B queries with a
 single device dispatch per op; `batched_ops` holds the pure-jax batched
-forms of every dataset- and point-granularity search operation.
+forms of every dataset- and point-granularity search operation.  Dispatch
+is pluggable: `ShardedQueryEngine` shards the resident repository's
+dataset slots over the ``data`` mesh axis and merges per-shard results on
+device (`merge` holds the O(k) top-k merge helpers), bit-identical to the
+single-device engine.
 """
 from repro.engine.batched_ops import (  # noqa: F401
     nnp_pruned_batched,
@@ -16,5 +20,12 @@ from repro.engine.batched_ops import (  # noqa: F401
 from repro.engine.engine import (  # noqa: F401
     DEFAULT_BUCKETS,
     EngineStats,
+    LocalDispatcher,
     QueryEngine,
+)
+from repro.engine.sharded import (  # noqa: F401
+    ShardedDispatcher,
+    ShardedQueryEngine,
+    data_mesh,
+    shard_repository,
 )

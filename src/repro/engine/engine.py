@@ -9,10 +9,20 @@ incoming queries into fixed-shape device work:
     traffic;
   * **executable cache** — one jitted executable per (op, bucket, k) key,
     built lazily on first use and reused for every later batch that lands
-    in the same bucket (hits/misses are counted for observability);
+    in the same bucket (every dispatch records a hit or a miss, so
+    `stats.cache_hits + stats.cache_misses == stats.dispatches`);
   * **single dispatch** — every op lowers to exactly one device computation
-    per batch via the vmapped forms in :mod:`repro.engine.batched_ops`;
-    no per-query Python loop, no per-chunk host sync.
+    per batch; no per-query Python loop, no per-chunk host sync.
+
+Dispatch is **pluggable**: the engine delegates the construction of every
+device callable to a dispatcher object.  :class:`LocalDispatcher` (the
+default) closes each executable over the single-device repository and the
+vmapped forms in :mod:`repro.engine.batched_ops`;
+:class:`repro.engine.sharded.ShardedDispatcher` (selected by passing
+``mesh=``) places the repository's dataset slots across a mesh axis and
+merges per-shard results on device.  Bucketing, the executable cache,
+query construction, and :class:`EngineStats` are shared between the two —
+sharded and unsharded engines differ ONLY in the callables they cache.
 
 Query point sets are themselves bucketed: `build_queries` pads a ragged
 list of point sets to a power-of-two point capacity and builds all their
@@ -42,23 +52,93 @@ DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 @dataclass
 class EngineStats:
-    """Cumulative engine observability counters."""
-    queries: int = 0
+    """Cumulative engine observability counters.
+
+    Every dispatch is recorded through :meth:`count`, which also books the
+    executable-cache outcome — the invariant
+    ``cache_hits + cache_misses == dispatches`` holds at all times and is
+    asserted in tests.  ``per_op`` keeps the same breakdown per op name.
+    """
+    queries: int = 0                 # client queries ANSWERED (ops only)
     dispatches: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
     padded_queries: int = 0          # bucket padding overhead actually paid
     per_op: dict = field(default_factory=dict)
 
-    def count(self, op: str, batch: int, bucket: int) -> None:
-        self.queries += batch
+    def count(self, op: str, batch: int, bucket: int, *,
+              cached: bool, internal: bool = False) -> None:
+        """Record ONE dispatch.  ``internal=True`` (build_queries) books the
+        dispatch and its cache outcome but keeps `queries`/`padded_queries`
+        counting only answered client queries — a query that flows through
+        build_queries AND an op must not be double-counted.  The per-op
+        breakdown still records the batch under the internal op's name."""
+        if not internal:
+            self.queries += batch
+            self.padded_queries += bucket - batch
         self.dispatches += 1
-        self.padded_queries += bucket - batch
-        self.per_op[op] = self.per_op.get(op, 0) + batch
+        if cached:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+        per = self.per_op.setdefault(
+            op, {"queries": 0, "dispatches": 0, "hits": 0, "misses": 0})
+        per["queries"] += batch
+        per["dispatches"] += 1
+        per["hits" if cached else "misses"] += 1
+
+
+class LocalDispatcher:
+    """Single-device dispatch: one jitted executable per op over the
+    resident repository.
+
+    Each ``build_*`` returns a callable taking only the query-side operands;
+    the repository rides along as a bound leading argument (not a closed-over
+    constant, so XLA never bakes the arrays into the executable).
+    """
+
+    name = "local"
+
+    def __init__(self, repo: Repository):
+        self.repo = repo
+        self.n_slots = repo.n_slots
+
+    def build_range_search(self):
+        return partial(jax.jit(batched_ops.range_search_batched), self.repo)
+
+    def build_topk_ia(self, k: int):
+        return partial(
+            jax.jit(partial(batched_ops.topk_ia_batched, k=k)), self.repo)
+
+    def build_topk_gbo(self, k: int):
+        return partial(
+            jax.jit(partial(batched_ops.topk_gbo_batched, k=k)), self.repo)
+
+    def build_topk_hausdorff_approx(self, k: int):
+        return partial(
+            jax.jit(partial(batched_ops.topk_hausdorff_approx_batched, k=k)),
+            self.repo)
+
+    def build_topk_hausdorff(self, k: int, refine_levels: int, chunk: int):
+        return partial(search._topk_hausdorff_device, self.repo, k=k,
+                       refine_levels=refine_levels, chunk=chunk)
+
+    def build_range_points(self):
+        return partial(jax.jit(batched_ops.range_points_batched), self.repo)
+
+    def build_nnp(self):
+        return partial(jax.jit(batched_ops.nnp_pruned_batched), self.repo)
 
 
 class QueryEngine:
-    """Batched search over a resident repository (see module docstring)."""
+    """Batched search over a resident repository (see module docstring).
+
+    Passing ``mesh=`` (a `jax.sharding.Mesh`) selects the sharded dispatch
+    path: dataset slots are placed across ``shard_spec`` (a mesh axis name,
+    default ``"data"``) and per-shard results are merged on device —
+    bit-identical to the local path (asserted in
+    tests/test_engine_sharded.py).
+    """
 
     def __init__(
         self,
@@ -66,12 +146,22 @@ class QueryEngine:
         *,
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         leaf_capacity: int = 16,
+        mesh=None,
+        shard_spec: str = "data",
+        dispatcher=None,
     ):
         self.repo = repo
         self.buckets = tuple(sorted(buckets))
         self.leaf_capacity = leaf_capacity
         self.stats = EngineStats()
         self._executables: dict = {}
+        if dispatcher is None:
+            if mesh is not None:
+                from repro.engine.sharded import ShardedDispatcher
+                dispatcher = ShardedDispatcher(repo, mesh, axis=shard_spec)
+            else:
+                dispatcher = LocalDispatcher(repo)
+        self.dispatch = dispatcher
 
     # -- bucketing ---------------------------------------------------------
 
@@ -101,14 +191,14 @@ class QueryEngine:
     # -- executable cache --------------------------------------------------
 
     def _executable(self, key, build):
+        """Cache lookup; returns (fn, cached) so the dispatch path can book
+        the hit/miss through `stats.count` uniformly for every op."""
         fn = self._executables.get(key)
-        if fn is None:
+        cached = fn is not None
+        if not cached:
             fn = build()
             self._executables[key] = fn
-            self.stats.cache_misses += 1
-        else:
-            self.stats.cache_hits += 1
-        return fn
+        return fn, cached
 
     # -- query construction ------------------------------------------------
 
@@ -119,7 +209,8 @@ class QueryEngine:
 
         Point counts are bucketed to the next power of two (so repeated
         traffic reuses executables) and the B tree builds run as one
-        vmapped dispatch.
+        vmapped dispatch.  Queries are replicated (never sharded): both
+        dispatch paths consume the same batched query index.
         """
         n_max = max(int(p.shape[0]) for p in pointsets)
         n_bucket = self.leaf_capacity
@@ -130,12 +221,14 @@ class QueryEngine:
         bucket = self.bucket_for(len(pointsets))
         pts = self._pad_rows(pts, bucket)
         val = self._pad_rows(val, bucket)
-        build = self._executable(
+        build, cached = self._executable(
             ("build", bucket, pts.shape[1], depth),
             lambda: jax.jit(partial(index_lib.build_index_batch,
                                     depth=depth)),
         )
         q_batch = build(pts, val)
+        self.stats.count("build_queries", len(pointsets), bucket,
+                         cached=cached, internal=True)
         return jax.tree.map(lambda x: x[: len(pointsets)], q_batch)
 
     # -- dataset-granularity ops ------------------------------------------
@@ -146,13 +239,11 @@ class QueryEngine:
         r_hi = jnp.atleast_2d(jnp.asarray(r_hi, jnp.float32))
         B = r_lo.shape[0]
         bucket = self.bucket_for(B)
-        fn = self._executable(
-            ("range_search", bucket),
-            lambda: jax.jit(batched_ops.range_search_batched),
-        )
-        masks, _ = fn(self.repo, self._pad_rows(r_lo, bucket),
+        fn, cached = self._executable(
+            ("range_search", bucket), self.dispatch.build_range_search)
+        masks, _ = fn(self._pad_rows(r_lo, bucket),
                       self._pad_rows(r_hi, bucket))
-        self.stats.count("range_search", B, bucket)
+        self.stats.count("range_search", B, bucket, cached=cached)
         return masks[:B]
 
     def topk_ia(self, q_lo, q_hi, k: int):
@@ -161,13 +252,12 @@ class QueryEngine:
         q_hi = jnp.atleast_2d(jnp.asarray(q_hi, jnp.float32))
         B = q_lo.shape[0]
         bucket = self.bucket_for(B)
-        fn = self._executable(
+        fn, cached = self._executable(
             ("topk_ia", bucket, k),
-            lambda: jax.jit(partial(batched_ops.topk_ia_batched, k=k)),
-        )
-        vals, ids = fn(self.repo, self._pad_rows(q_lo, bucket),
+            lambda: self.dispatch.build_topk_ia(k))
+        vals, ids = fn(self._pad_rows(q_lo, bucket),
                        self._pad_rows(q_hi, bucket))
-        self.stats.count("topk_ia", B, bucket)
+        self.stats.count("topk_ia", B, bucket, cached=cached)
         return vals[:B], ids[:B]
 
     def topk_gbo(self, q_sigs, k: int):
@@ -177,12 +267,11 @@ class QueryEngine:
             q_sigs = q_sigs[None, :]
         B = q_sigs.shape[0]
         bucket = self.bucket_for(B)
-        fn = self._executable(
+        fn, cached = self._executable(
             ("topk_gbo", bucket, k),
-            lambda: jax.jit(partial(batched_ops.topk_gbo_batched, k=k)),
-        )
-        vals, ids = fn(self.repo, self._pad_rows(q_sigs, bucket))
-        self.stats.count("topk_gbo", B, bucket)
+            lambda: self.dispatch.build_topk_gbo(k))
+        vals, ids = fn(self._pad_rows(q_sigs, bucket))
+        self.stats.count("topk_gbo", B, bucket, cached=cached)
         return vals[:B], ids[:B]
 
     def topk_hausdorff_approx(self, q_batch: DatasetIndex, k: int, eps):
@@ -190,28 +279,23 @@ class QueryEngine:
         B = q_batch.points.shape[0]
         bucket = self.bucket_for(B)
         key = ("approx_haus", bucket, q_batch.points.shape[1], k)
-        fn = self._executable(
-            key,
-            lambda: jax.jit(
-                partial(batched_ops.topk_hausdorff_approx_batched, k=k)
-            ),
-        )
+        fn, cached = self._executable(
+            key, lambda: self.dispatch.build_topk_hausdorff_approx(k))
         padded = self._pad_tree(q_batch, bucket)
-        vals, ids, eps_eff = fn(self.repo, padded, eps=jnp.float32(eps))
-        self.stats.count("topk_hausdorff_approx", B, bucket)
+        vals, ids, eps_eff = fn(padded, eps=jnp.float32(eps))
+        self.stats.count("topk_hausdorff_approx", B, bucket, cached=cached)
         return vals[:B], ids[:B], eps_eff[:B]
 
     def topk_hausdorff(self, q_idx: DatasetIndex, k: int, *,
                        refine_levels: int = 3, chunk: int = 32):
         """ExactHaus for ONE query — the device-resident branch-and-bound
         pipeline (single dispatch, `lax.while_loop` refinement)."""
-        fn = self._executable(
+        fn, cached = self._executable(
             ("exact_haus", q_idx.points.shape[0], k, refine_levels, chunk),
-            lambda: partial(search._topk_hausdorff_device, k=k,
-                            refine_levels=refine_levels, chunk=chunk),
-        )
-        vals, ids, *_ = fn(self.repo, q_idx)
-        self.stats.count("topk_hausdorff", 1, 1)
+            lambda: self.dispatch.build_topk_hausdorff(k, refine_levels,
+                                                       chunk))
+        vals, ids, *_ = fn(q_idx)
+        self.stats.count("topk_hausdorff", 1, 1, cached=cached)
         return vals, ids
 
     # -- point-granularity ops --------------------------------------------
@@ -223,14 +307,12 @@ class QueryEngine:
         r_hi = jnp.atleast_2d(jnp.asarray(r_hi, jnp.float32))
         B = ds_ids.shape[0]
         bucket = self.bucket_for(B)
-        fn = self._executable(
-            ("range_points", bucket),
-            lambda: jax.jit(batched_ops.range_points_batched),
-        )
-        take, _ = fn(self.repo, self._pad_rows(ds_ids, bucket),
+        fn, cached = self._executable(
+            ("range_points", bucket), self.dispatch.build_range_points)
+        take, _ = fn(self._pad_rows(ds_ids, bucket),
                      self._pad_rows(r_lo, bucket),
                      self._pad_rows(r_hi, bucket))
-        self.stats.count("range_points", B, bucket)
+        self.stats.count("range_points", B, bucket, cached=cached)
         return take[:B]
 
     def nnp(self, ds_ids, q_batch: DatasetIndex):
@@ -239,11 +321,10 @@ class QueryEngine:
         ds_ids = jnp.atleast_1d(jnp.asarray(ds_ids, jnp.int32))
         B = ds_ids.shape[0]
         bucket = self.bucket_for(B)
-        fn = self._executable(
+        fn, cached = self._executable(
             ("nnp", bucket, q_batch.points.shape[1]),
-            lambda: jax.jit(batched_ops.nnp_pruned_batched),
-        )
-        dists, idxs, _ = fn(self.repo, self._pad_rows(ds_ids, bucket),
+            self.dispatch.build_nnp)
+        dists, idxs, _ = fn(self._pad_rows(ds_ids, bucket),
                             self._pad_tree(q_batch, bucket))
-        self.stats.count("nnp", B, bucket)
+        self.stats.count("nnp", B, bucket, cached=cached)
         return dists[:B], idxs[:B]

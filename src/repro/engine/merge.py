@@ -1,0 +1,90 @@
+"""O(k) result-merge helpers for the sharded engine (kernels-adjacent).
+
+When the repository's dataset slots are sharded over a mesh axis, every
+dataset-granularity top-k op runs its score pass per shard and must merge
+per-shard candidate lists into the global top-k.  The merge is O(k) per
+shard (gather S*k candidates, one final top_k) instead of O(B_pad)
+(gathering every score), which is what makes the sharded engine's network
+cost independent of the repository size.
+
+Exactness contract (property-tested in tests/test_merge_properties.py):
+per-shard lists produced by `jax.lax.top_k` over CONTIGUOUS ascending
+global-id ranges, concatenated in shard order, merge bit-identically to a
+single global `jax.lax.top_k` over the concatenated scores — including
+duplicate scores, because top_k breaks ties toward the smallest index and
+the (shard, local-rank) concatenation order coincides with ascending
+global id for equal values.
+
+`merge_topk` / `local_topk` are pure (no collectives) so they can be
+property-tested on one device; `shard_topk` / `all_gather_topk` wrap them
+with the mesh collectives and must run inside `shard_map`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# pure forms (no collectives; property-tested)
+# ---------------------------------------------------------------------------
+
+
+def merge_topk(vals: Array, ids: Array, k: int) -> tuple[Array, Array]:
+    """Global top-k over concatenated per-shard top-k lists.
+
+    vals/ids: (..., M) with M >= k — per-shard descending lists laid out in
+    shard order along the last axis.  Returns (vals (..., k), ids (..., k)),
+    bit-identical to `jax.lax.top_k` over the unsharded scores (see module
+    docstring for why ties resolve identically).
+    """
+    top, pos = jax.lax.top_k(vals, k)
+    return top, jnp.take_along_axis(ids, pos, axis=-1)
+
+
+def local_topk(scores: Array, k: int, base: Array | int) -> tuple[Array, Array]:
+    """One shard's candidate list: local top-min(k, shard) + global ids.
+
+    scores: (..., shard_slots) local scores; `base` is the shard's first
+    global slot id.  min(k, shard) candidates per shard always suffice for
+    a global top-k with k <= total slots.
+    """
+    k_loc = min(k, scores.shape[-1])
+    vals, ids = jax.lax.top_k(scores, k_loc)
+    return vals, ids + base
+
+
+def sentinel_ids(vals: Array, ids: Array, sentinel: int = -1) -> Array:
+    """Mask ids of negative-scored (padded/invalid) slots with `sentinel`.
+
+    Commutes with the merge: applying it to per-shard lists before merging
+    or to the merged list afterwards yields the same ids, because the
+    sentinel only depends on the value riding along with each id.
+    """
+    return jnp.where(vals < 0, sentinel, ids)
+
+
+# ---------------------------------------------------------------------------
+# collective forms (inside shard_map only)
+# ---------------------------------------------------------------------------
+
+
+def all_gather_topk(
+    vals: Array, gids: Array, k: int, axis: str
+) -> tuple[Array, Array]:
+    """O(k) merge of per-shard lists across `axis`: all-gather the (..., k')
+    lists along the last axis (shard order == ascending global id) and run
+    the final top_k.  Output is replicated."""
+    cat_v = jax.lax.all_gather(vals, axis, axis=vals.ndim - 1, tiled=True)
+    cat_i = jax.lax.all_gather(gids, axis, axis=gids.ndim - 1, tiled=True)
+    return merge_topk(cat_v, cat_i, k)
+
+
+def shard_topk(scores: Array, k: int, axis: str) -> tuple[Array, Array]:
+    """Sharded top-k over the last (slot) axis: local top-k, O(k) all-gather
+    merge.  `scores` is the local (..., shard_slots) score slice."""
+    base = jax.lax.axis_index(axis) * scores.shape[-1]
+    vals, gids = local_topk(scores, k, base)
+    return all_gather_topk(vals, gids, k, axis)

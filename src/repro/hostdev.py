@@ -1,0 +1,36 @@
+"""Force N XLA host-platform devices BEFORE jax's first import.
+
+The one shared implementation of the CPU scale-out switch: XLA pins the
+device count at first jax init, so anything that wants a multi-device mesh
+on a CPU-only machine must set the flag before ``import jax`` anywhere in
+the process.  Entry points call::
+
+    from repro import hostdev
+    hostdev.apply()          # reads REPRO_HOST_DEVICES; no-op unless set
+
+Used by tests/conftest.py (the multi-device CI job), bench_engine.py, and
+serve_search.py.  This module must stay jax-free.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+ENV_VAR = "REPRO_HOST_DEVICES"
+_FLAG = "xla_force_host_platform_device_count"
+
+
+def apply(n_devices: int | str | None = None) -> bool:
+    """Request `n_devices` forced host devices (default: $REPRO_HOST_DEVICES).
+
+    Returns True iff the flag was installed.  A no-op (False) when the env
+    var is unset, jax is already imported (too late to take effect), or
+    XLA_FLAGS already pins a device count (first writer wins)."""
+    n = n_devices if n_devices is not None else os.environ.get(ENV_VAR)
+    if not n or "jax" in sys.modules:
+        return False
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _FLAG in flags:
+        return False
+    os.environ["XLA_FLAGS"] = f"{flags} --{_FLAG}={n}".strip()
+    return True

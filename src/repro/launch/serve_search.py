@@ -1,6 +1,8 @@
 """Search serving front-end: request queue + continuous micro-batching.
 
     PYTHONPATH=src python -m repro.launch.serve_search [--requests 256 ...]
+    REPRO_HOST_DEVICES=8 PYTHONPATH=src \
+        python -m repro.launch.serve_search --sharded   # data-sharded engine
 
 The production shape for the paper's *online* multi-granularity search:
 clients submit single queries (mixed types — RangeS / top-k IA / top-k
@@ -23,6 +25,12 @@ import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Any
+
+from repro import hostdev
+
+# before the first jax import: let --sharded shard over N forced host
+# devices on CPU-only machines (no-op unless REPRO_HOST_DEVICES is set)
+hostdev.apply()
 
 import jax
 import numpy as np
@@ -260,11 +268,23 @@ def main(argv=None):
     ap.add_argument("--datasets", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--sharded", action="store_true",
+                    help="serve from a ShardedQueryEngine with the resident "
+                         "repository sharded over a 1-D data mesh spanning "
+                         "all local devices")
     args = ap.parse_args(argv)
 
     lake = synthetic.trajectory_repository(args.datasets, seed=0)
     repo, _ = build_repository(lake, leaf_capacity=16, theta=5)
-    engine = QueryEngine(repo)
+    if args.sharded:
+        from repro.engine.sharded import ShardedQueryEngine
+        engine = ShardedQueryEngine(repo)
+        print(f"[serve_search] sharded engine: "
+              f"{engine.dispatch.n_shards} shard(s) x "
+              f"{engine.dispatch.shard_slots} dataset slots on the "
+              f"'{engine.dispatch.axis}' axis")
+    else:
+        engine = QueryEngine(repo)
     server = SearchServer(engine, max_batch=args.max_batch,
                           max_wait_ms=args.max_wait_ms).start()
 

@@ -1,8 +1,47 @@
+"""Shared test fixtures + the multi-device harness.
+
+Spec note: XLA's host-platform device count is pinned at first jax init, so
+the tier-1 session must NOT force it globally — smoke tests and benches see
+exactly 1 device, and multi-device tests run in subprocesses via `run_py`.
+
+The multi-device CI job opts in instead: it sets ``REPRO_HOST_DEVICES=N``
+in the environment, and `repro.hostdev.apply()` below (which runs before
+any test module imports jax) forces N host-platform devices for the whole
+session.  Tests that need a mesh (tests/test_engine_sharded.py) then run
+in-process; with the variable unset they transparently fall back to the
+subprocess path.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro import hostdev        # requires PYTHONPATH=src (tier-1 command)
+
+hostdev.apply()
+
 import numpy as np
 import pytest
 
-# NOTE (spec): do NOT set xla_force_host_platform_device_count here — smoke
-# tests and benches must see 1 device.  Multi-device tests run subprocesses.
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 560):
+    """Run a python snippet in a subprocess with N forced host devices.
+
+    PYTHONPATH includes src/, the repo root, and tests/ so snippets can
+    import both the package and test helpers (e.g. the equivalence bodies
+    in test_engine_sharded.py)."""
+    env = dict(os.environ)
+    env.pop("REPRO_HOST_DEVICES", None)   # the subprocess sets XLA_FLAGS
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = f"{REPO}/src:{REPO}:{REPO}/tests"
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env, cwd=REPO)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
 
 
 @pytest.fixture(scope="session")

@@ -1,26 +1,15 @@
 """Multi-device tests.  jax pins the device count at first init, so these
 run in SUBPROCESSES with XLA_FLAGS=--xla_force_host_platform_device_count=8
-(the spec forbids setting it globally for the test session)."""
+(the spec forbids setting it globally for the tier-1 test session; the
+shared harness lives in conftest.run_py)."""
 import os
 import subprocess
 import sys
-import textwrap
 from pathlib import Path
 
 import pytest
 
-REPO = Path(__file__).resolve().parents[1]
-
-
-def run_py(code: str, devices: int = 8, timeout: int = 560):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = f"{REPO}/src:{REPO}"
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                       capture_output=True, text=True, timeout=timeout,
-                       env=env, cwd=REPO)
-    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
-    return r.stdout
+from conftest import REPO, run_py
 
 
 def test_ring_hausdorff_and_sharded_search():

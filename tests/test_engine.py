@@ -227,6 +227,43 @@ def test_executable_cache_reuse(env):
     assert engine.stats.dispatches == d0 + 1   # one dispatch per batch
 
 
+def test_stats_hit_miss_consistent_across_ops(env):
+    """Every dispatch path must book exactly one cache hit or miss through
+    EngineStats.count — the invariant hits + misses == dispatches holds for
+    the engine totals AND for every per-op breakdown."""
+    datasets, repo, _, lo, hi, q_sets, _, sigs = env
+    engine = QueryEngine(repo)           # fresh engine: clean counters
+    ds_ids = np.array([1, 4, 7, 2, 9], np.int32)
+    q_batch = engine.build_queries(q_sets)      # counted: "build_queries"
+    for _ in range(2):                   # second pass: all hits
+        engine.range_search(lo, hi)
+        engine.topk_ia(lo, hi, K)
+        engine.topk_gbo(sigs, K)
+        engine.topk_hausdorff_approx(q_batch, K, 1.0)
+        engine.range_points(ds_ids, lo, hi)
+        engine.nnp(ds_ids, q_batch)
+    engine.topk_hausdorff(_q_at(q_batch, 0), K)
+    s = engine.stats
+    assert s.cache_hits + s.cache_misses == s.dispatches == 14
+    assert s.cache_misses == 8           # 6 ops + build + exact_haus
+    assert s.cache_hits == 6             # the second pass
+    for op, per in s.per_op.items():
+        assert per["hits"] + per["misses"] == per["dispatches"], op
+    for op in ("range_search", "topk_ia", "topk_gbo",
+               "topk_hausdorff_approx", "range_points", "nnp"):
+        assert s.per_op[op] == {"queries": 2 * N_QUERIES, "dispatches": 2,
+                                "hits": 1, "misses": 1}, op
+    assert s.per_op["build_queries"]["dispatches"] == 1
+    assert s.per_op["topk_hausdorff"] == {"queries": 1, "dispatches": 1,
+                                          "hits": 0, "misses": 1}
+    # engine totals count ANSWERED client queries only: build_queries is
+    # internal (a query through build + op must not be double-counted)
+    assert s.queries == 12 * N_QUERIES + 1
+    # padded_queries books the bucket padding: 5 -> 8 per 5-query dispatch
+    pad = engine.bucket_for(N_QUERIES) - N_QUERIES
+    assert s.padded_queries == 12 * pad  # 6 ops x 2 passes; not build/exact
+
+
 def test_server_micro_batching(env):
     """The serving front-end returns per-request results equal to the
     engine's and actually groups requests into shared device batches."""

@@ -1,0 +1,172 @@
+"""ShardedQueryEngine vs QueryEngine: bit-identical equivalence.
+
+Every op of the sharded engine must reproduce the unsharded engine
+bit-for-bit (values AND ids AND masks — np.testing.assert_array_equal, no
+tolerance) on forced 8-device host meshes, covering
+
+  * all six serving ops + the ExactHaus fallback path,
+  * uneven shard remainders (num_datasets not divisible by the shard
+    count, AND a 3-shard mesh whose slot padding is exercised:
+    64 slots -> 66),
+  * the shape-bucket padding interaction (batch sizes below, at, and
+    above a bucket boundary),
+  * top-k overrun past the valid dataset count (`-1` sentinel ids).
+
+When the session already has >= 8 devices (the multi-device CI job sets
+``REPRO_HOST_DEVICES=8``, applied by conftest before jax's first import)
+the checks run in-process; otherwise each test re-runs its body in a
+subprocess with XLA_FLAGS forcing 8 host devices (same pattern as
+tests/test_distributed.py).
+"""
+import numpy as np
+
+from conftest import make_clustered_datasets, run_py
+
+THETA = 5
+K = 6
+
+
+def _dispatch(fn_name: str):
+    """Run `fn_name` in-process when the session has >= 8 devices, else in
+    a forced-8-device subprocess."""
+    import jax
+    if jax.device_count() >= 8:
+        globals()[fn_name]()
+    else:
+        run_py(
+            f"from test_engine_sharded import {fn_name}\n"
+            f"{fn_name}()\n"
+        )
+
+
+def _build(n_datasets: int, seed: int = 2):
+    import jax.numpy as jnp
+    from repro.core import zorder
+    from repro.core.build import build_repository
+    from repro.engine import QueryEngine
+
+    datasets = make_clustered_datasets(n_datasets, seed=seed,
+                                       n_points=(30, 120))
+    repo, _ = build_repository(datasets, leaf_capacity=16, theta=THETA,
+                               remove_outliers=False)
+    eng = QueryEngine(repo)
+    q_sets = [datasets[i % n_datasets] for i in (0, 3, 9, 11, 20)]
+    sigs = np.stack([
+        np.asarray(zorder.signature(jnp.asarray(q),
+                                    jnp.ones(len(q), bool),
+                                    repo.space_lo, repo.space_hi, THETA))
+        for q in q_sets
+    ])
+    eps = float(zorder.default_epsilon(repo.space_lo, repo.space_hi, THETA))
+    return datasets, repo, eng, q_sets, sigs, eps
+
+
+def _assert_all_ops_equal(eng, sng, repo, q_batch, sigs, eps, lo, hi,
+                          ds_ids, ks):
+    eq = np.testing.assert_array_equal
+    eq(np.asarray(sng.range_search(lo, hi)),
+       np.asarray(eng.range_search(lo, hi)))
+    for k in ks:
+        v1, i1 = eng.topk_ia(lo, hi, k)
+        v2, i2 = sng.topk_ia(lo, hi, k)
+        eq(np.asarray(v2), np.asarray(v1))
+        eq(np.asarray(i2), np.asarray(i1))
+        v1, i1 = eng.topk_gbo(sigs, k)
+        v2, i2 = sng.topk_gbo(sigs, k)
+        eq(np.asarray(v2), np.asarray(v1))
+        eq(np.asarray(i2), np.asarray(i1))
+        v1, i1, e1 = eng.topk_hausdorff_approx(q_batch, k, eps)
+        v2, i2, e2 = sng.topk_hausdorff_approx(q_batch, k, eps)
+        eq(np.asarray(v2), np.asarray(v1))
+        eq(np.asarray(i2), np.asarray(i1))
+        eq(np.asarray(e2), np.asarray(e1))
+    eq(np.asarray(sng.range_points(ds_ids, lo, hi)),
+       np.asarray(eng.range_points(ds_ids, lo, hi)))
+    d1, x1 = eng.nnp(ds_ids, q_batch)
+    d2, x2 = sng.nnp(ds_ids, q_batch)
+    eq(np.asarray(d2), np.asarray(d1))
+    eq(np.asarray(x2), np.asarray(x1))
+
+
+def check_sharded_equivalence_8dev():
+    """All ops, 8 even shards, ragged batch (bucket padding), k overrun."""
+    import jax
+    from repro.engine import ShardedQueryEngine
+    from repro.engine.sharded import data_mesh
+
+    datasets, repo, eng, q_sets, sigs, eps = _build(33)
+    mesh = data_mesh(8)
+    sng = ShardedQueryEngine(repo, mesh=mesh)
+    assert sng.dispatch.n_shards == 8
+    assert sng.dispatch.n_slots_sharded == repo.n_slots  # 64: even split
+
+    rng = np.random.default_rng(0)
+    B = len(q_sets)                       # 5 -> bucket 8: padding exercised
+    assert eng.bucket_for(B) > B
+    lo = rng.uniform(-60, 40, (B, 2)).astype(np.float32)
+    hi = lo + rng.uniform(5, 40, (B, 2)).astype(np.float32)
+    ds_ids = np.array([1, 4, 7, 2, 9], np.int32)
+    q_batch = eng.build_queries(q_sets)
+    # k = K (normal), k crossing the per-shard slot count (8), and k at the
+    # full slot count (> n_valid: the -1 sentinel rows must merge identically)
+    _assert_all_ops_equal(eng, sng, repo, q_batch, sigs, eps, lo, hi,
+                          ds_ids, ks=(K, 33, repo.n_slots))
+    v, j = sng.topk_ia(lo, hi, repo.n_slots)
+    v, j = np.asarray(v), np.asarray(j)
+    assert (j[v < 0] == -1).all() and (v < 0).any()
+
+    # ExactHaus fallback path (single-device pipeline under the sharded
+    # engine) must match the unsharded engine bit-for-bit too
+    qi = jax.tree.map(lambda x: x[0], q_batch)
+    v1, i1 = eng.topk_hausdorff(qi, K)
+    v2, i2 = sng.topk_hausdorff(qi, K)
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i1))
+
+    # shared stats plumbing: every sharded dispatch books a hit or a miss
+    s = sng.stats
+    assert s.cache_hits + s.cache_misses == s.dispatches
+    print("SHARDED_8DEV_OK")
+
+
+def check_sharded_uneven_shards():
+    """3-shard mesh over 64 slots: the slot-padding path (64 -> 66) and
+    num_datasets not divisible by the shard count, at several buckets."""
+    from repro.engine import ShardedQueryEngine
+    from repro.engine.sharded import data_mesh
+
+    datasets, repo, eng, q_sets, sigs, eps = _build(33)
+    sng = ShardedQueryEngine(repo, mesh=data_mesh(3))
+    assert sng.dispatch.n_slots_sharded == 66       # padded: 64 % 3 != 0
+    assert sng.dispatch.shard_slots == 22
+
+    rng = np.random.default_rng(1)
+    q_batch = eng.build_queries(q_sets)
+    for B in (1, 5, 12):                 # below/at/above bucket boundaries
+        lo = rng.uniform(-60, 40, (B, 2)).astype(np.float32)
+        hi = lo + rng.uniform(5, 40, (B, 2)).astype(np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(sng.range_search(lo, hi)),
+            np.asarray(eng.range_search(lo, hi)))
+        for k in (K, repo.n_slots):      # k > shard_slots crosses shards
+            v1, i1 = eng.topk_ia(lo, hi, k)
+            v2, i2 = sng.topk_ia(lo, hi, k)
+            np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
+            np.testing.assert_array_equal(np.asarray(i2), np.asarray(i1))
+        ds_ids = rng.integers(0, 33, B).astype(np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(sng.range_points(ds_ids, lo, hi)),
+            np.asarray(eng.range_points(ds_ids, lo, hi)))
+    lo = rng.uniform(-60, 40, (5, 2)).astype(np.float32)
+    hi = lo + rng.uniform(5, 40, (5, 2)).astype(np.float32)
+    _assert_all_ops_equal(eng, sng, repo, q_batch, sigs, eps, lo, hi,
+                          np.arange(5, dtype=np.int32), ks=(K, 33))
+    print("SHARDED_UNEVEN_OK")
+
+
+def test_sharded_equivalence_8dev():
+    _dispatch("check_sharded_equivalence_8dev")
+
+
+def test_sharded_uneven_shards():
+    _dispatch("check_sharded_uneven_shards")

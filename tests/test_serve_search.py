@@ -1,0 +1,131 @@
+"""Serving front-end (continuous micro-batching) behaviors.
+
+Direct coverage for `repro.launch.serve_search.SearchServer`: mixed op
+types in one queue drain, request -> response id mapping under grouping,
+the queue-timeout flush (partial batches must not stall), and stop()
+failing still-queued requests instead of hanging their futures.
+"""
+import numpy as np
+import pytest
+
+from conftest import make_clustered_datasets
+from repro.core import zorder
+from repro.core.build import build_repository
+from repro.engine import QueryEngine
+from repro.launch.serve_search import OPS, Request, SearchServer, make_traffic
+
+THETA = 5
+K = 4
+
+
+@pytest.fixture(scope="module")
+def env():
+    datasets = make_clustered_datasets(17, seed=4, n_points=(20, 60))
+    repo, _ = build_repository(datasets, leaf_capacity=16, theta=THETA,
+                               remove_outliers=False)
+    return datasets, repo
+
+
+def test_mixed_ops_one_drain(env):
+    """A burst covering all six op types is answered correctly and grouped:
+    one device batch per compatible (op, k, eps) group, not per request."""
+    datasets, repo = env
+    engine = QueryEngine(repo)
+    server = SearchServer(engine, max_batch=64, max_wait_ms=250.0).start()
+    try:
+        traffic = make_traffic(repo, datasets, 18, seed=3)  # 3 of each op
+        assert {op for op, _ in traffic} == set(OPS)
+        futures = [server.submit(op, **p) for op, p in traffic]
+        results = [f.result(timeout=600) for f in futures]
+        assert len(results) == 18
+        assert server.stats.requests == 18
+        # grouping: far fewer device batches than requests (6 op groups if
+        # the whole burst landed in one drain; allow a couple of stragglers)
+        assert server.stats.batches <= 10
+        assert server.stats.mean_batch > 1.0
+        # spot-check each op type against a direct engine call
+        for (op, payload), res in zip(traffic, results):
+            if op == "range_search":
+                want = engine.range_search(payload["r_lo"][None],
+                                           payload["r_hi"][None])[0]
+                np.testing.assert_array_equal(np.asarray(res),
+                                              np.asarray(want))
+            elif op == "topk_gbo":
+                vals, ids = engine.topk_gbo(payload["q_sig"][None],
+                                            payload["k"])
+                np.testing.assert_array_equal(np.asarray(res[0]),
+                                              np.asarray(vals[0]))
+                np.testing.assert_array_equal(np.asarray(res[1]),
+                                              np.asarray(ids[0]))
+    finally:
+        server.stop()
+
+
+def test_request_response_id_mapping(env):
+    """Each future must receive ITS query's rows even though requests are
+    grouped and answered as one batch — distinct queries, per-request
+    verification against single-query engine calls."""
+    datasets, repo = env
+    engine = QueryEngine(repo)
+    server = SearchServer(QueryEngine(repo), max_batch=16,
+                          max_wait_ms=100.0).start()
+    try:
+        rng = np.random.default_rng(7)
+        lo = rng.uniform(-60, 40, (9, 2)).astype(np.float32)
+        hi = lo + rng.uniform(5, 40, (9, 2)).astype(np.float32)
+        futures = [server.submit("topk_ia", q_lo=lo[i], q_hi=hi[i], k=K)
+                   for i in range(9)]
+        got = [f.result(timeout=600) for f in futures]
+        for i, (v, j) in enumerate(got):
+            want_v, want_j = engine.topk_ia(lo[i][None], hi[i][None], K)
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(want_v[0]))
+            np.testing.assert_array_equal(np.asarray(j),
+                                          np.asarray(want_j[0]))
+    finally:
+        server.stop()
+
+
+def test_queue_timeout_flush(env):
+    """A partial batch (far below max_batch) must flush after max_wait and
+    resolve its futures — the server never waits for a full batch."""
+    datasets, repo = env
+    server = SearchServer(QueryEngine(repo), max_batch=1024,
+                          max_wait_ms=5.0).start()
+    try:
+        rng = np.random.default_rng(11)
+        lo = rng.uniform(-60, 40, (3, 2)).astype(np.float32)
+        hi = lo + 5.0
+        futures = [server.submit("range_search", r_lo=lo[i], r_hi=hi[i])
+                   for i in range(3)]
+        for f in futures:
+            f.result(timeout=120)        # completing at all proves the flush
+        assert server.stats.requests == 3
+        assert server.stats.batches >= 1
+    finally:
+        server.stop()
+
+
+def test_submit_unknown_op_and_stopped_server(env):
+    datasets, repo = env
+    server = SearchServer(QueryEngine(repo), max_batch=8)
+    with pytest.raises(RuntimeError):
+        server.submit("range_search", r_lo=np.zeros(2), r_hi=np.ones(2))
+    server.start()
+    with pytest.raises(ValueError):
+        server.submit("not_an_op")
+    server.stop()
+
+
+def test_stop_fails_queued_requests(env):
+    """Requests still queued when the server stops get an exception, not a
+    forever-pending future."""
+    datasets, repo = env
+    server = SearchServer(QueryEngine(repo), max_batch=8).start()
+    server.stop()                        # dispatcher fully exited
+    req = Request("range_search", dict(r_lo=np.zeros(2), r_hi=np.ones(2)))
+    server._queue.put(req)               # lands after the dispatcher died
+    server.stop()                        # second stop drains + fails it
+    assert req.future.done()
+    with pytest.raises(RuntimeError):
+        req.future.result(timeout=0)
