@@ -16,7 +16,10 @@ and the point-granularity RangeP, measures queries-per-second of
 With ``--sharded`` the engine is a :class:`ShardedQueryEngine` over a 1-D
 ``data`` mesh spanning all local devices (set ``REPRO_HOST_DEVICES=N`` to
 force N host-platform devices on CPU) and the record lands in
-``BENCH_engine_sharded.json``.
+``BENCH_engine_sharded.json``; the record also gains an ``exact_hausdorff``
+section — single-query ExactHaus latency AND per-device resident
+repository bytes at 1/3/8 shards, showing memory dropping ~1/N now that
+the sharded branch-and-bound keeps no replicated repository copy.
 
 Emits the JSON record with per-op QPS curves plus a summary of the
 batch-64 speedup over the baseline.
@@ -42,8 +45,57 @@ from repro.core import point_search, search, zorder
 from repro.core.build import build_repository
 from repro.data import synthetic
 from repro.engine import QueryEngine, ShardedQueryEngine
+from repro.engine.sharded import data_mesh, repo_device_bytes
 
 BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+EXACT_SHARD_COUNTS = (1, 3, 8)
+
+
+def bench_exacthaus(repo, qi, k, repeats):
+    """Sharded ExactHaus: single-query latency + per-device resident
+    repository bytes at 1/3/8 shards (clipped to the available devices).
+
+    The memory column is the point of the row: the dispatcher keeps NO
+    replicated repository copy, so the per-device dataset bytes drop
+    ~1/N with the shard count while the upper tree stays replicated.
+    Includes the unsharded LocalDispatcher pipeline as the reference.
+    """
+    le = QueryEngine(repo)
+    t = _time(lambda: le.topk_hausdorff(qi, k)[0], repeats=repeats)
+    rec = {
+        "k": k,
+        "local": {
+            "seconds_per_query": t,
+            "qps": 1.0 / t,
+            "per_device_repo_bytes": max(repo_device_bytes(le.repo).values()),
+        },
+        "rows": [],
+    }
+    for s in EXACT_SHARD_COUNTS:
+        if s > jax.device_count():
+            print(f"[bench_engine] exacthaus: skipping {s} shards "
+                  f"({jax.device_count()} devices available)")
+            continue
+        e = ShardedQueryEngine(repo, mesh=data_mesh(s))
+        last = {}
+
+        def run(e=e, last=last):
+            vals, _, last["stats"] = e.topk_hausdorff(qi, k)
+            return vals
+
+        t = _time(run, repeats=repeats)
+        stats = last["stats"]
+        per_dev = repo_device_bytes(e.dispatch.repo)
+        total = sum(x.nbytes for x in jax.tree.leaves(e.dispatch.repo))
+        rec["rows"].append({
+            "shards": s,
+            "seconds_per_query": t,
+            "qps": 1.0 / t,
+            "per_device_repo_bytes": max(per_dev.values()),
+            "total_repo_bytes": total,
+            "exact_evaluations": stats.exact_evaluations,
+        })
+    return rec
 
 
 def _time(fn, *, repeats: int, warmup: int = 2) -> float:
@@ -176,12 +228,24 @@ def main(argv=None):
         n_pool, repeats=args.repeats,
     )
 
+    exact = None
+    if args.sharded:
+        # single-query ExactHaus across shard counts: latency + per-device
+        # resident repository memory (the scale-out win of the sharded
+        # branch-and-bound; no replicated copy remains)
+        qi = jax.tree.map(lambda x: x[0], q_batch_all)
+        exact = bench_exacthaus(repo, qi, k, max(2, args.repeats // 2))
+
     summary = {
         f"{name}_speedup_at_64": next(
             r["speedup_vs_loop"] for r in rec["batches"] if r["batch"] == 64
         )
         for name, rec in ops.items()
     }
+    if exact is not None and exact["rows"]:
+        base_bytes = exact["rows"][0]["per_device_repo_bytes"]
+        summary["exacthaus_per_device_mem_ratio_max_shards"] = (
+            exact["rows"][-1]["per_device_repo_bytes"] / base_bytes)
     rec = {
         "bench": "engine_qps_sharded" if args.sharded else "engine_qps",
         "backend": jax.default_backend(),
@@ -197,6 +261,7 @@ def main(argv=None):
         "n_slots": info["n_slots"],
         "k": k,
         "ops": ops,
+        "exact_hausdorff": exact,
         "summary": summary,
         "engine_stats": {
             "dispatches": engine.stats.dispatches,

@@ -52,6 +52,26 @@ def _pvary(x, axis):
 # ---------------------------------------------------------------------------
 
 
+def global_kth_smallest(x: Array, k: int, axis: str) -> Array:
+    """kth-smallest over a vector sharded on ``axis`` — O(k) per shard.
+
+    Inside shard_map only.  Each shard contributes its min(k, shard_slots)
+    smallest entries; the union of those lists always contains the global k
+    smallest (at most k - 1 values can precede any of them, globally or
+    per shard), so sorting the all-gathered S * min(k, shard) candidates
+    and indexing position k - 1 (clamped) selects exactly the element
+    `jnp.sort(global_x)[min(k - 1, n - 1)]` would — the VALUE is the same
+    float bit pattern because no arithmetic touches it, only selection.
+    This is the tau reduction of sharded ExactHaus (phases 0/1 and the
+    per-chunk phase-2 tightening) and mirrors the loc_ub gather in
+    :func:`sharded_topk_bounds`.
+    """
+    k_loc = min(k, x.shape[-1])
+    small = -jax.lax.top_k(-x, k_loc)[0]          # ascending k_loc smallest
+    small = jax.lax.all_gather(small, axis, axis=small.ndim - 1, tiled=True)
+    return jnp.sort(small)[..., min(k - 1, small.shape[-1] - 1)]
+
+
 def sharded_topk_bounds(
     mesh: Mesh,
     axis: str | tuple[str, ...],

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import geometry, zorder
+from repro.core import distributed, geometry, zorder
 from repro.core.index import DatasetIndex
 from repro.core.repo_index import Repository
 from repro.kernels import ops
@@ -226,23 +226,58 @@ def _kth_smallest(x: Array, k: int) -> Array:
 
 
 def _hausdorff_bound_phases(
-    repo: Repository, q_idx: DatasetIndex, k: int, refine_levels: int
+    repo: Repository,
+    q_idx: DatasetIndex,
+    k: int,
+    refine_levels: int,
+    *,
+    axis: str | None = None,
+    n_slots_total: int | None = None,
 ):
     """Phases 0+1 of ExactHaus, pure jax (no host syncs).
 
-    Returns (LB, tau, cand, nodes_evaluated, cand_after_bounds) with the two
-    counters as device scalars so the whole pipeline can live under one jit.
+    Shard-mappable over a slot slice: with ``axis=None`` (the single-device
+    pipeline) `repo` spans every dataset slot and all reductions are local.
+    Inside shard_map (``axis`` a mesh axis name) `repo` is the LOCAL shard
+    slice; per-slot bounds are computed by the identical arithmetic on the
+    identical rows (slicing the slot axis changes no values) and only the
+    two repository-global reductions become collectives — tau (the
+    kth-smallest upper bound, via the O(k)
+    :func:`~repro.core.distributed.global_kth_smallest` gather) and the
+    candidate counters (psum).  ``n_slots_total`` pins the phase-0 node
+    count to the unsharded slot count so stats match the local pipeline
+    exactly even when shard padding widens the local slice.
+
+    Returns (LB, tau, cand, nodes_evaluated, cand_after_bounds); LB/cand
+    cover this slice's slots, the counters are device scalars (global when
+    sharded) so the whole pipeline can live under one jit.
     """
     B = repo.n_slots
     valid = repo.ds_valid
+
+    def kth_ub(ub):
+        if axis is None:
+            return _kth_smallest(ub, k)
+        return distributed.global_kth_smallest(ub, k, axis)
+
+    def count(mask):
+        s = mask.sum().astype(jnp.int32)
+        return s if axis is None else jax.lax.psum(s, axis)
 
     # ---- phase 0: dense root-granularity Eq. 4 bound pass -----------------
     LB, UB = frontier_bounds(q_idx, repo.ds_index, 0, 0)
     LB = jnp.where(valid, LB, BIG)
     UB = jnp.where(valid, UB, BIG)
-    tau = _kth_smallest(UB, k)
+    tau = kth_ub(UB)
     cand = LB <= tau
-    nodes_evaluated = jnp.asarray(B, jnp.int32)
+    if axis is not None and n_slots_total is not None:
+        # shard padding widened the slot range: keep those slots out of
+        # cand so the counters match the unsharded pipeline even when
+        # tau == BIG (k past the valid count makes EVERY slot a candidate)
+        gid = jax.lax.axis_index(axis) * B + jnp.arange(B)
+        cand = cand & (gid < n_slots_total)
+    nodes_evaluated = jnp.asarray(
+        B if n_slots_total is None else n_slots_total, jnp.int32)
 
     # ---- phase 1: level-synchronous refinement ----------------------------
     max_level = min(q_idx.depth, repo.ds_index.depth, refine_levels)
@@ -251,11 +286,121 @@ def _hausdorff_bound_phases(
         # refinement can only tighten; keep the monotone envelope
         LB = jnp.where(cand, jnp.maximum(LB, LB_l), LB)
         UB = jnp.where(cand, jnp.minimum(UB, UB_l), UB)
-        tau = _kth_smallest(jnp.where(valid, UB, BIG), k)
+        tau = kth_ub(jnp.where(valid, UB, BIG))
         cand = cand & (LB <= tau)
-        nodes_evaluated += cand.sum().astype(jnp.int32) * (1 << level)
+        nodes_evaluated += count(cand) * (1 << level)
 
-    return LB, tau, cand, nodes_evaluated, cand.sum().astype(jnp.int32)
+    return LB, tau, cand, nodes_evaluated, count(cand)
+
+
+def _phase2_exact_loop(
+    LB: Array,
+    cand: Array,
+    tau: Array,
+    q_idx: DatasetIndex,
+    ds_index: DatasetIndex,
+    k: int,
+    chunk: int,
+    *,
+    axis: str | None = None,
+):
+    """Phase 2 of ExactHaus: chunked exact refinement under a tightening
+    threshold, over this slice's dataset slots.
+
+    ``axis=None`` reproduces the seed host loop exactly: one scan over the
+    GLOBAL ascending-lower-bound candidate order, evaluating `chunk`
+    candidates per `lax.while_loop` iteration and re-deriving tau from the
+    k smallest finite exacts after each chunk.
+
+    Inside shard_map (``axis`` set) each shard scans its OWN ascending-LB
+    candidate order and tau is all-reduced after every chunk (the same O(k)
+    gather as the bound phases), so every shard prunes with the global
+    threshold.  The while cond must be collective-free and replicated, so
+    the continue flag (any shard still has work, psum > 0) is computed at
+    the end of the body and carried.  A shard's stop test is re-evaluated
+    every iteration, NOT latched: tau is non-increasing once k finite
+    exacts exist, but the single handoff from the bound-phase tau to the
+    kth exact can RAISE it (the k smallest-UB datasets need not be the
+    first evaluated), and an idle shard whose head LB dips back under the
+    raised tau simply resumes — the soundness argument below never relies
+    on stops being permanent.
+
+    Exactness under EITHER schedule: tau is always >= the true kth-smallest
+    Hausdorff H_k (it is derived from the k smallest of a SUBSET of exact
+    values, or from the sound phase-0/1 upper bounds before k exacts
+    exist), so a skipped candidate has LB > tau >= H_k and hence
+    H >= LB > H_k — strictly outside the top-k, ties included.  Every
+    candidate with H <= H_k therefore gets evaluated under every chunk
+    schedule, and the final full-slot top_k (ties toward the smallest slot
+    id) returns bit-identical values and ids; only WHICH extra candidates
+    beyond H_k get evaluated — the `evaluated` counter — depends on the
+    schedule.
+
+    Returns (exact_vals over this slice's slots, evaluated), `evaluated`
+    being the global count when sharded.
+    """
+    B = LB.shape[0]
+    lb_masked = jnp.where(cand, LB, BIG)
+    order = jnp.argsort(lb_masked)        # stable: LB ties keep slot order
+    lb_sorted = lb_masked[order]
+    n_pad = ((B + chunk - 1) // chunk) * chunk
+    # pad ids with 0 (masked out by the BIG lb pad; .at[].min makes the
+    # duplicate-id write a no-op)
+    order_p = jnp.pad(order, (0, n_pad - B))
+    lb_p = jnp.pad(lb_sorted, (0, n_pad - B), constant_values=BIG)
+
+    q_pts, q_val = q_idx.points, q_idx.valid
+    d_pts_all, d_val_all = ds_index.points, ds_index.valid
+
+    def has_work(pos, tau_c):
+        lb0 = lb_p[pos]
+        # seed stopping rule: candidates remain, chunk head not pruned
+        return (pos < B) & (lb0 < BIG / 2) & (lb0 <= tau_c)
+
+    def reduce_any(go):
+        if axis is None:
+            return go
+        return jax.lax.psum(go.astype(jnp.int32), axis) > 0
+
+    def cond(carry):
+        return carry[0]
+
+    def body(carry):
+        _, pos, vals, tau_c, evaluated = carry
+        go = has_work(pos, tau_c)         # this shard's chunk still counts
+        ids = jax.lax.dynamic_slice(order_p, (pos,), (chunk,))
+        lbs = jax.lax.dynamic_slice(lb_p, (pos,), (chunk,))
+        live = (lbs < BIG / 2) & go
+        hs = ops.directed_hausdorff_batched(
+            q_pts, d_pts_all[ids], q_val, d_val_all[ids]
+        )
+        vals = vals.at[ids].min(jnp.where(live, hs, BIG))
+        evaluated = evaluated + live.sum().astype(jnp.int32)
+        pos = jnp.where(go, pos + chunk, pos)
+        # monotone threshold tightening from the k finite exacts so far
+        finite = vals < BIG / 2
+        if axis is None:
+            kth = jnp.sort(jnp.where(finite, vals, BIG))[k - 1]
+            n_fin = finite.sum()
+        else:
+            kth = distributed.global_kth_smallest(
+                jnp.where(finite, vals, BIG), k, axis)
+            n_fin = jax.lax.psum(finite.sum().astype(jnp.int32), axis)
+        tau_c = jnp.where(n_fin >= k, kth, tau_c)
+        return (reduce_any(has_work(pos, tau_c)), pos, vals, tau_c,
+                evaluated)
+
+    init = (
+        reduce_any(has_work(jnp.zeros((), jnp.int32), tau)),
+        jnp.zeros((), jnp.int32),
+        jnp.full((B,), BIG, jnp.float32),
+        tau.astype(jnp.float32),
+        jnp.zeros((), jnp.int32),
+    )
+    _, _, exact_vals, _, evaluated = jax.lax.while_loop(cond, body, init)
+    if axis is not None:
+        evaluated = jax.lax.psum(evaluated, axis)
+    return exact_vals, evaluated
 
 
 @functools.partial(
@@ -274,56 +419,18 @@ def _topk_hausdorff_device(
     chunks with on-device threshold tightening — the same evaluation order,
     stopping rule, and arithmetic as the seed host loop
     (`topk_hausdorff_host`), so results are bit-identical; the per-chunk
-    device->host sync is gone.
+    device->host sync is gone.  Both phases are the shard-mappable helpers
+    (`_hausdorff_bound_phases` / `_phase2_exact_loop`) in their
+    ``axis=None`` form; the sharded engine runs the same helpers per shard
+    with collective tau reductions.
     """
-    B = repo.n_slots
     valid = repo.ds_valid
     LB, tau, cand, nodes_evaluated, cand_after = _hausdorff_bound_phases(
         repo, q_idx, k, refine_levels
     )
-
-    lb_masked = jnp.where(cand, LB, BIG)
-    order = jnp.argsort(lb_masked)
-    lb_sorted = lb_masked[order]
-    n_pad = ((B + chunk - 1) // chunk) * chunk
-    # pad ids with 0 (masked out by the BIG lb pad; .at[].min makes the
-    # duplicate-id write a no-op)
-    order_p = jnp.pad(order, (0, n_pad - B))
-    lb_p = jnp.pad(lb_sorted, (0, n_pad - B), constant_values=BIG)
-
-    q_pts, q_val = q_idx.points, q_idx.valid
-    d_pts_all, d_val_all = repo.ds_index.points, repo.ds_index.valid
-
-    def cond(carry):
-        pos, _, tau_c, _ = carry
-        lb0 = lb_p[pos]
-        # seed stopping rule: candidates remain, chunk head not pruned
-        return (pos < B) & (lb0 < BIG / 2) & (lb0 <= tau_c)
-
-    def body(carry):
-        pos, vals, tau_c, evaluated = carry
-        ids = jax.lax.dynamic_slice(order_p, (pos,), (chunk,))
-        lbs = jax.lax.dynamic_slice(lb_p, (pos,), (chunk,))
-        live = lbs < BIG / 2
-        hs = ops.directed_hausdorff_batched(
-            q_pts, d_pts_all[ids], q_val, d_val_all[ids]
-        )
-        vals = vals.at[ids].min(jnp.where(live, hs, BIG))
-        evaluated = evaluated + live.sum().astype(jnp.int32)
-        # monotone threshold tightening from the k finite exacts so far
-        finite = vals < BIG / 2
-        kth = jnp.sort(jnp.where(finite, vals, BIG))[k - 1]
-        tau_c = jnp.where(finite.sum() >= k, kth, tau_c)
-        return pos + chunk, vals, tau_c, evaluated
-
-    init = (
-        jnp.zeros((), jnp.int32),
-        jnp.full((B,), BIG, jnp.float32),
-        tau.astype(jnp.float32),
-        jnp.zeros((), jnp.int32),
+    exact_vals, evaluated = _phase2_exact_loop(
+        LB, cand, tau, q_idx, repo.ds_index, k, chunk
     )
-    _, exact_vals, _, evaluated = jax.lax.while_loop(cond, body, init)
-
     vals = jnp.where(valid, exact_vals, BIG)
     top_vals, top_ids = jax.lax.top_k(-vals, k)
     return -top_vals, top_ids, nodes_evaluated, cand_after, evaluated

@@ -27,5 +27,6 @@ from repro.engine.sharded import (  # noqa: F401
     ShardedDispatcher,
     ShardedQueryEngine,
     data_mesh,
+    repo_device_bytes,
     shard_repository,
 )

@@ -87,6 +87,22 @@ class EngineStats:
         per["dispatches"] += 1
         per["hits" if cached else "misses"] += 1
 
+    def record_search(self, op: str, stats) -> None:
+        """Fold one dispatch's :class:`~repro.core.search.SearchStats` into
+        the per-op breakdown: cumulative node/candidate/exact-evaluation
+        counters plus the latest pruned fraction.  ExactHaus books these on
+        every call (the engine no longer discards its SearchStats)."""
+        per = self.per_op.setdefault(
+            op, {"queries": 0, "dispatches": 0, "hits": 0, "misses": 0})
+        per["nodes_evaluated"] = (
+            per.get("nodes_evaluated", 0) + stats.nodes_evaluated)
+        per["candidates_after_bounds"] = (
+            per.get("candidates_after_bounds", 0)
+            + stats.candidates_after_bounds)
+        per["exact_evaluations"] = (
+            per.get("exact_evaluations", 0) + stats.exact_evaluations)
+        per["pruned_fraction"] = stats.pruned_fraction
+
 
 class LocalDispatcher:
     """Single-device dispatch: one jitted executable per op over the
@@ -150,11 +166,11 @@ class QueryEngine:
         shard_spec: str = "data",
         dispatcher=None,
     ):
-        self.repo = repo
         self.buckets = tuple(sorted(buckets))
         self.leaf_capacity = leaf_capacity
         self.stats = EngineStats()
         self._executables: dict = {}
+        self._n_valid = int(repo.ds_valid.sum())
         if dispatcher is None:
             if mesh is not None:
                 from repro.engine.sharded import ShardedDispatcher
@@ -162,6 +178,10 @@ class QueryEngine:
             else:
                 dispatcher = LocalDispatcher(repo)
         self.dispatch = dispatcher
+        # hold the dispatcher's PLACED repository (the sharded copy under a
+        # ShardedDispatcher) rather than the builder's, so the engine never
+        # pins an extra replicated copy once the caller drops theirs
+        self.repo = getattr(dispatcher, "repo", repo)
 
     # -- bucketing ---------------------------------------------------------
 
@@ -289,14 +309,25 @@ class QueryEngine:
     def topk_hausdorff(self, q_idx: DatasetIndex, k: int, *,
                        refine_levels: int = 3, chunk: int = 32):
         """ExactHaus for ONE query — the device-resident branch-and-bound
-        pipeline (single dispatch, `lax.while_loop` refinement)."""
+        pipeline (single dispatch, `lax.while_loop` refinement; per-shard
+        loops + tau all-reduce under a ShardedDispatcher).
+
+        Returns (vals (k,), ids (k,), SearchStats); the stats are also
+        folded into ``self.stats`` (cumulative evaluated count and the
+        pruned fraction per op) instead of being discarded.
+        """
         fn, cached = self._executable(
             ("exact_haus", q_idx.points.shape[0], k, refine_levels, chunk),
             lambda: self.dispatch.build_topk_hausdorff(k, refine_levels,
                                                        chunk))
-        vals, ids, *_ = fn(q_idx)
+        vals, ids, nodes, cand_after, evaluated = fn(q_idx)
         self.stats.count("topk_hausdorff", 1, 1, cached=cached)
-        return vals, ids
+        stats = search.SearchStats(
+            int(nodes), int(cand_after), int(evaluated),
+            1.0 - int(evaluated) / max(self._n_valid, 1),
+        )
+        self.stats.record_search("topk_hausdorff", stats)
+        return vals, ids, stats
 
     # -- point-granularity ops --------------------------------------------
 

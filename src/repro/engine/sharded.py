@@ -44,10 +44,31 @@ epsilon's dataset radius term — so the shard pass reduces them with
 `pmin`/`pmax` collectives before scoring (boolean AND of the per-shard
 level checks, max of the per-shard frontier radii; both are exact).
 
-ExactHaus (`topk_hausdorff`) keeps the single-device pipeline for now: its
-`lax.while_loop` threshold tightening is inherently sequential over the
-global ascending-lower-bound candidate order (sharding it is the
-"multi-query ExactHaus" follow-up in ROADMAP.md).
+ExactHaus (`topk_hausdorff`) is genuinely sharded end to end — no
+replicated repository copy, so resident repository bytes per device are
+~1/N:
+
+  * phases 0/1 (Eq. 4 bound passes) run per shard on the local slot slice;
+    the batch-prune threshold tau (kth-smallest upper bound) is the one
+    repository-global quantity and is reduced with the O(k)
+    `global_kth_smallest` gather (`core/distributed.py`), the same
+    collective pattern as `sharded_topk_bounds`;
+  * phase 2 runs one `lax.while_loop` per shard over the shard's OWN
+    ascending-lower-bound candidate order; after every chunk of exact
+    `directed_hausdorff_batched` evaluations tau is all-reduced again
+    (k smallest finite exacts per shard -> gather -> kth), so every shard
+    prunes with the global threshold while it scans.  The loop's continue
+    flag (any shard still has work) is psum-reduced into the carry so the
+    while cond stays collective-free and replicated;
+  * the final top-k is the same O(k) all-gather merge as IA/GBO.
+
+Tie-order contract (documented in `search._phase2_exact_loop`, asserted
+against the host oracle in tests): per-shard chunking changes WHICH
+extra candidates beyond the kth Hausdorff value get exact-evaluated (the
+`evaluated` stat), but never the returned set — tau always upper-bounds
+the true kth value, so a chunk skipped under either schedule lies
+strictly outside the top-k, ties included; values and ids are
+bit-identical to `topk_hausdorff_host`.
 """
 from __future__ import annotations
 
@@ -130,6 +151,23 @@ def shard_repository(
     return sharded, specs, n_padded
 
 
+def repo_device_bytes(repo: Repository) -> dict:
+    """Resident repository bytes per device, from the placed buffers.
+
+    Sums `addressable_shards[*].data.nbytes` over every array leaf, so
+    sharded leaves contribute 1/N per device while replicated leaves (the
+    upper tree, space bounds) count fully on each — the number a device's
+    memory actually pays.  Works on sharded and single-device repositories
+    alike (the regression tests and `bench_engine --sharded` use it to
+    prove ExactHaus no longer needs a replicated copy).
+    """
+    out: dict = {}
+    for leaf in jax.tree.leaves(repo):
+        for sh in leaf.addressable_shards:
+            out[sh.device] = out.get(sh.device, 0) + sh.data.nbytes
+    return out
+
+
 class ShardedDispatcher:
     """Builds the sharded device callables the QueryEngine caches.
 
@@ -146,8 +184,10 @@ class ShardedDispatcher:
         self.mesh = mesh
         self.axis = axis
         self.n_shards = int(mesh.shape[axis])
-        self.repo_host = repo              # replicated form (ExactHaus path)
         self.n_slots = repo.n_slots
+        # the sharded placement is the ONLY repository copy this dispatcher
+        # retains — every op (ExactHaus included) runs on the shard slices,
+        # so per-device resident bytes are ~total/N (asserted in tests)
         self.repo, self.specs, self.n_slots_sharded = shard_repository(
             repo, mesh, axis)
         self.shard_slots = self.n_slots_sharded // self.n_shards
@@ -294,10 +334,36 @@ class ShardedDispatcher:
         return self._bind(impl)
 
     def build_topk_hausdorff(self, k: int, refine_levels: int, chunk: int):
-        # single-device ExactHaus pipeline on the replicated repository (see
-        # module docstring); the sharded resident arrays are untouched
-        return partial(search._topk_hausdorff_device, self.repo_host, k=k,
-                       refine_levels=refine_levels, chunk=chunk)
+        """Sharded ExactHaus: per-shard bound phases + per-shard phase-2
+        loops with the tau all-reduce schedule from the module docstring,
+        then the O(k) all-gather top-k merge.  Values and ids are
+        bit-identical to the single-device pipeline and the host oracle;
+        only the `evaluated` stat is schedule-dependent."""
+        axis = self.axis
+        n_total = self.n_slots
+        shard = self.shard_slots
+
+        def local(repo_loc, q_idx):
+            LB, tau, cand, nodes, cand_after = search._hausdorff_bound_phases(
+                repo_loc, q_idx, k, refine_levels, axis=axis,
+                n_slots_total=n_total)
+            exact_vals, evaluated = search._phase2_exact_loop(
+                LB, cand, tau, q_idx, repo_loc.ds_index, k, chunk, axis=axis)
+            vals = jnp.where(repo_loc.ds_valid, exact_vals, BIG)
+            # shard-padded slots carry BIG like invalid ones and lose every
+            # smallest-index tie, so k <= n_slots never surfaces a pad id
+            base = jax.lax.axis_index(axis) * shard
+            neg, gids = merge.local_topk(-vals, k, base)
+            neg, ids = merge.all_gather_topk(neg, gids, k, axis)
+            return -neg, ids, nodes, cand_after, evaluated
+
+        sm = self._smap(local, in_specs=(self.specs, P()),
+                        out_specs=(P(),) * 5)
+
+        def impl(repo_s, q_idx):
+            return sm(repo_s, q_idx)
+
+        return self._bind(impl)
 
     # -- point granularity -------------------------------------------------
 

@@ -6,8 +6,9 @@
 
 The production shape for the paper's *online* multi-granularity search:
 clients submit single queries (mixed types — RangeS / top-k IA / top-k
-GBO / ApproHaus at dataset granularity, RangeP / NNP at point granularity)
-into a queue; a dispatcher thread drains the queue continuously, groups
+GBO / ApproHaus / ExactHaus at dataset granularity, RangeP / NNP at point
+granularity) into a queue; a dispatcher thread drains the queue
+continuously, groups
 compatible requests (same op, same k), and executes each group as ONE
 batched device dispatch through the :class:`QueryEngine`.  Under load the
 batch size grows toward `max_batch` on its own — classic continuous
@@ -38,10 +39,13 @@ import numpy as np
 from repro.core.repo_index import Repository
 from repro.engine import QueryEngine
 
-# ops the dispatcher knows how to group and batch
+# ops the dispatcher knows how to group and batch; topk_hausdorff (the
+# exact branch-and-bound) shares one grouped query-index build but runs
+# one engine dispatch per request, and its results carry the SearchStats
+# (evaluated count, pruned fraction) the engine now surfaces
 OPS = (
     "range_search", "topk_ia", "topk_gbo", "topk_hausdorff_approx",
-    "range_points", "nnp",
+    "topk_hausdorff", "range_points", "nnp",
 )
 
 
@@ -195,6 +199,13 @@ class SearchServer:
             results = [
                 (vals[i], ids[i], eps_eff[i]) for i in range(len(reqs))
             ]
+        elif op == "topk_hausdorff":
+            q_batch = eng.build_queries([r.payload["q"] for r in reqs])
+            results = []
+            for i in range(len(reqs)):
+                qi = jax.tree.map(lambda x, i=i: x[i], q_batch)
+                results.append(
+                    eng.topk_hausdorff(qi, reqs[0].payload["k"]))
         elif op == "range_points":
             ds = np.asarray([r.payload["ds_id"] for r in reqs])
             lo = np.stack([r.payload["r_lo"] for r in reqs])
@@ -224,9 +235,10 @@ class SearchServer:
 
 
 def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0):
-    """Pre-build a mixed stream of (op, payload) requests covering all six
-    serving ops.  Payload construction (signatures etc.) happens here, off
-    the submission path, like a real client would send ready-made queries."""
+    """Pre-build a mixed stream of (op, payload) requests covering all
+    seven serving ops.  Payload construction (signatures etc.) happens here,
+    off the submission path, like a real client would send ready-made
+    queries."""
     from repro.core import zorder
 
     rng = np.random.default_rng(seed)
@@ -236,7 +248,7 @@ def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0):
     for i in range(n_requests):
         c = rng.uniform(20, 80, 2).astype(np.float32)
         lo, hi = c - 2.0, c + 2.0
-        kind = i % 6
+        kind = i % 7
         if kind == 0:
             out.append(("range_search", dict(r_lo=lo, r_hi=hi)))
         elif kind == 1:
@@ -251,6 +263,9 @@ def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0):
             q = datasets[int(rng.integers(n_ds))][:64]
             out.append(("topk_hausdorff_approx", dict(q=q, k=5, eps=eps)))
         elif kind == 4:
+            q = datasets[int(rng.integers(n_ds))][:64]
+            out.append(("topk_hausdorff", dict(q=q, k=5)))
+        elif kind == 5:
             out.append(("range_points", dict(
                 ds_id=int(rng.integers(n_ds)), r_lo=lo, r_hi=hi)))
         else:
@@ -289,8 +304,8 @@ def main(argv=None):
                           max_wait_ms=args.max_wait_ms).start()
 
     # warmup: submit a full-width burst so the big-bucket executables
-    # compile off the measured path (per-op batch ~= max_batch/6)
-    warm = make_traffic(repo, lake, 6 * args.max_batch, seed=1)
+    # compile off the measured path (per-op batch ~= max_batch/7)
+    warm = make_traffic(repo, lake, 7 * args.max_batch, seed=1)
     for f in [server.submit(op, **p) for op, p in warm]:
         f.result(timeout=600)
     server.stats = ServerStats()       # report the measured window only

@@ -150,10 +150,12 @@ def test_exact_hausdorff_device_bitwise_matches_host(env):
         np.testing.assert_array_equal(np.asarray(jd), np.asarray(jh))
         assert sd.exact_evaluations == sh.exact_evaluations
         assert sd.candidates_after_bounds == sh.candidates_after_bounds
-        # engine path reuses the same device pipeline
-        ve, je = engine.topk_hausdorff(q_idx, K)
+        # engine path reuses the same device pipeline AND surfaces the
+        # SearchStats instead of discarding them
+        ve, je, se = engine.topk_hausdorff(q_idx, K)
         np.testing.assert_array_equal(np.asarray(ve), np.asarray(vd))
         np.testing.assert_array_equal(np.asarray(je), np.asarray(jd))
+        assert se == sd
 
 
 def test_exact_hausdorff_matches_brute(env):
@@ -242,7 +244,7 @@ def test_stats_hit_miss_consistent_across_ops(env):
         engine.topk_hausdorff_approx(q_batch, K, 1.0)
         engine.range_points(ds_ids, lo, hi)
         engine.nnp(ds_ids, q_batch)
-    engine.topk_hausdorff(_q_at(q_batch, 0), K)
+    _, _, hstats = engine.topk_hausdorff(_q_at(q_batch, 0), K)
     s = engine.stats
     assert s.cache_hits + s.cache_misses == s.dispatches == 14
     assert s.cache_misses == 8           # 6 ops + build + exact_haus
@@ -254,8 +256,16 @@ def test_stats_hit_miss_consistent_across_ops(env):
         assert s.per_op[op] == {"queries": 2 * N_QUERIES, "dispatches": 2,
                                 "hits": 1, "misses": 1}, op
     assert s.per_op["build_queries"]["dispatches"] == 1
-    assert s.per_op["topk_hausdorff"] == {"queries": 1, "dispatches": 1,
-                                          "hits": 0, "misses": 1}
+    per_h = s.per_op["topk_hausdorff"]
+    assert {k: per_h[k] for k in ("queries", "dispatches", "hits", "misses")
+            } == {"queries": 1, "dispatches": 1, "hits": 0, "misses": 1}
+    # the ExactHaus dispatch folded its SearchStats into the breakdown:
+    # evaluated count and pruned fraction are recorded, not discarded
+    assert per_h["exact_evaluations"] == hstats.exact_evaluations > 0
+    assert per_h["candidates_after_bounds"] == hstats.candidates_after_bounds
+    assert per_h["exact_evaluations"] <= per_h["candidates_after_bounds"]
+    assert per_h["pruned_fraction"] == hstats.pruned_fraction
+    assert 0.0 <= per_h["pruned_fraction"] < 1.0
     # engine totals count ANSWERED client queries only: build_queries is
     # internal (a query through build + op must not be double-counted)
     assert s.queries == 12 * N_QUERIES + 1

@@ -4,13 +4,20 @@ Every op of the sharded engine must reproduce the unsharded engine
 bit-for-bit (values AND ids AND masks — np.testing.assert_array_equal, no
 tolerance) on forced 8-device host meshes, covering
 
-  * all six serving ops + the ExactHaus fallback path,
+  * all seven serving ops, including the genuinely sharded ExactHaus
+    (per-shard phase-2 loops + tau all-reduce) checked against the host
+    oracle `topk_hausdorff_host` — values and ids bit-identical, bound
+    counters equal, `evaluated <= candidates_after_bounds`,
+  * duplicate-LB / duplicate-value ties at the top-k boundary (cloned
+    datasets) under 8- and 3-shard schedules,
   * uneven shard remainders (num_datasets not divisible by the shard
     count, AND a 3-shard mesh whose slot padding is exercised:
     64 slots -> 66),
   * the shape-bucket padding interaction (batch sizes below, at, and
     above a bucket boundary),
-  * top-k overrun past the valid dataset count (`-1` sentinel ids).
+  * top-k overrun past the valid dataset count (`-1` sentinel ids),
+  * the no-replicated-repository regression: per-device resident bytes
+    of the dataset-axis arrays are total/N.
 
 When the session already has >= 8 devices (the multi-device CI job sets
 ``REPRO_HOST_DEVICES=8``, applied by conftest before jax's first import)
@@ -115,13 +122,25 @@ def check_sharded_equivalence_8dev():
     v, j = np.asarray(v), np.asarray(j)
     assert (j[v < 0] == -1).all() and (v < 0).any()
 
-    # ExactHaus fallback path (single-device pipeline under the sharded
-    # engine) must match the unsharded engine bit-for-bit too
-    qi = jax.tree.map(lambda x: x[0], q_batch)
-    v1, i1 = eng.topk_hausdorff(qi, K)
-    v2, i2 = sng.topk_hausdorff(qi, K)
-    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
-    np.testing.assert_array_equal(np.asarray(i2), np.asarray(i1))
+    # ExactHaus, genuinely sharded: per-shard phase-2 loops with the tau
+    # all-reduce must match the unsharded engine AND the host oracle
+    # bit-for-bit (values and ids), including k past the valid count;
+    # only `evaluated` is schedule-dependent (asserted bounded, not equal)
+    from repro.core import search
+    for qi_ix in (0, 1):
+        qi = jax.tree.map(lambda x, i=qi_ix: x[i], q_batch)
+        for k in (K, 33, repo.n_slots):
+            vh, ih, sh = search.topk_hausdorff_host(repo, qi, k)
+            v1, i1, s1 = eng.topk_hausdorff(qi, k)
+            v2, i2, s2 = sng.topk_hausdorff(qi, k)
+            np.testing.assert_array_equal(np.asarray(v1), np.asarray(vh))
+            np.testing.assert_array_equal(np.asarray(i1), np.asarray(ih))
+            np.testing.assert_array_equal(np.asarray(v2), np.asarray(vh))
+            np.testing.assert_array_equal(np.asarray(i2), np.asarray(ih))
+            # bound phases are slot-deterministic: counters match exactly
+            assert s2.nodes_evaluated == sh.nodes_evaluated
+            assert s2.candidates_after_bounds == sh.candidates_after_bounds
+            assert 0 < s2.exact_evaluations <= s2.candidates_after_bounds
 
     # shared stats plumbing: every sharded dispatch books a hit or a miss
     s = sng.stats
@@ -161,7 +180,94 @@ def check_sharded_uneven_shards():
     hi = lo + rng.uniform(5, 40, (5, 2)).astype(np.float32)
     _assert_all_ops_equal(eng, sng, repo, q_batch, sigs, eps, lo, hi,
                           np.arange(5, dtype=np.int32), ks=(K, 33))
+
+    # sharded ExactHaus across the 64 -> 66 slot padding: the pad slots
+    # must neither surface in the top-k nor perturb the stats counters
+    import jax
+    from repro.core import search
+    qi = jax.tree.map(lambda x: x[2], q_batch)
+    for k in (K, repo.n_slots):
+        vh, ih, sh = search.topk_hausdorff_host(repo, qi, k)
+        v2, i2, s2 = sng.topk_hausdorff(qi, k)
+        np.testing.assert_array_equal(np.asarray(v2), np.asarray(vh))
+        np.testing.assert_array_equal(np.asarray(i2), np.asarray(ih))
+        assert s2.nodes_evaluated == sh.nodes_evaluated
+        assert s2.candidates_after_bounds == sh.candidates_after_bounds
+        assert s2.exact_evaluations <= s2.candidates_after_bounds
     print("SHARDED_UNEVEN_OK")
+
+
+def check_sharded_exacthaus_ties():
+    """Duplicate datasets force duplicate LBs (the Eq. 4 zero-clamp) AND
+    duplicate exact Hausdorff values at the top-k boundary; every schedule
+    must return the host oracle's ids (ties toward the smallest slot id)."""
+    import jax
+    from repro.core import search
+    from repro.core.build import build_repository
+    from repro.engine import QueryEngine, ShardedQueryEngine
+    from repro.engine.sharded import data_mesh
+
+    base = make_clustered_datasets(9, seed=7, n_points=(20, 50))
+    # interleave exact copies: slots i and i+9 hold identical datasets
+    datasets = base + [d.copy() for d in base] + base[:4]
+    repo, _ = build_repository(datasets, leaf_capacity=16, theta=THETA,
+                               remove_outliers=False)
+    eng = QueryEngine(repo)
+    q_batch = eng.build_queries([base[0], base[4]])
+    for mesh_n in (8, 3):
+        sng = ShardedQueryEngine(repo, mesh=data_mesh(mesh_n))
+        for qi_ix in (0, 1):
+            qi = jax.tree.map(lambda x, i=qi_ix: x[i], q_batch)
+            # k = 9 lands the boundary ON a duplicated value; 5 mid-tie
+            for k in (5, 9, 18, repo.n_slots):
+                vh, ih, sh = search.topk_hausdorff_host(repo, qi, k)
+                v2, i2, s2 = sng.topk_hausdorff(qi, k)
+                np.testing.assert_array_equal(np.asarray(v2),
+                                              np.asarray(vh))
+                np.testing.assert_array_equal(np.asarray(i2),
+                                              np.asarray(ih))
+                assert s2.candidates_after_bounds == \
+                    sh.candidates_after_bounds
+    print("SHARDED_TIES_OK")
+
+
+def check_sharded_no_replicated_repo():
+    """Regression: ShardedDispatcher must not retain a replicated
+    repository copy — per-device bytes of the dataset-axis arrays are
+    exactly total/N, and the only full-size arrays on every device are the
+    (tiny) upper tree and space bounds."""
+    import jax
+    from repro.engine import ShardedQueryEngine
+    from repro.engine.sharded import data_mesh, repo_device_bytes
+
+    datasets, repo, eng, *_ = _build(33)
+    sng = ShardedQueryEngine(repo, mesh=data_mesh(8))
+    d = sng.dispatch
+    assert not hasattr(d, "repo_host")
+    # the engine holds the PLACED repository, not the builder's copy
+    assert sng.repo is d.repo
+
+    ds_arrays = (d.repo.ds_index, d.repo.ds_sigs, d.repo.ds_valid)
+    ds_total = sum(x.nbytes for x in jax.tree.leaves(ds_arrays))
+    per_dev = repo_device_bytes(ds_arrays)
+    assert len(per_dev) == 8
+    assert max(per_dev.values()) == ds_total // 8     # even 64/8 split
+
+    # full accounting: per-device = 1/N of the dataset arrays + the
+    # replicated upper tree/space bounds (which must stay small)
+    rep_total = sum(x.nbytes for x in jax.tree.leaves(
+        (d.repo.repo, d.repo.space_lo, d.repo.space_hi)))
+    full = repo_device_bytes(d.repo)
+    assert len(full) == 8
+    assert max(full.values()) == ds_total // 8 + rep_total
+    assert rep_total < ds_total // 4    # the replicated part is not the repo
+
+    # and the sharded ExactHaus actually runs on that placement
+    q_batch = eng.build_queries([datasets[0]])
+    qi = jax.tree.map(lambda x: x[0], q_batch)
+    vals, ids, stats = sng.topk_hausdorff(qi, K)
+    assert stats.exact_evaluations > 0
+    print("SHARDED_NO_REPLICA_OK")
 
 
 def test_sharded_equivalence_8dev():
@@ -170,3 +276,11 @@ def test_sharded_equivalence_8dev():
 
 def test_sharded_uneven_shards():
     _dispatch("check_sharded_uneven_shards")
+
+
+def test_sharded_exacthaus_ties():
+    _dispatch("check_sharded_exacthaus_ties")
+
+
+def test_sharded_no_replicated_repo():
+    _dispatch("check_sharded_no_replicated_repo")

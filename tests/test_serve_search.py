@@ -27,21 +27,24 @@ def env():
 
 
 def test_mixed_ops_one_drain(env):
-    """A burst covering all six op types is answered correctly and grouped:
-    one device batch per compatible (op, k, eps) group, not per request."""
+    """A burst covering all seven op types is answered correctly and
+    grouped: one device batch per compatible (op, k, eps) group, not per
+    request."""
+    import jax
+
     datasets, repo = env
     engine = QueryEngine(repo)
     server = SearchServer(engine, max_batch=64, max_wait_ms=250.0).start()
     try:
-        traffic = make_traffic(repo, datasets, 18, seed=3)  # 3 of each op
+        traffic = make_traffic(repo, datasets, 21, seed=3)  # 3 of each op
         assert {op for op, _ in traffic} == set(OPS)
         futures = [server.submit(op, **p) for op, p in traffic]
         results = [f.result(timeout=600) for f in futures]
-        assert len(results) == 18
-        assert server.stats.requests == 18
-        # grouping: far fewer device batches than requests (6 op groups if
+        assert len(results) == 21
+        assert server.stats.requests == 21
+        # grouping: far fewer device batches than requests (7 op groups if
         # the whole burst landed in one drain; allow a couple of stragglers)
-        assert server.stats.batches <= 10
+        assert server.stats.batches <= 11
         assert server.stats.mean_batch > 1.0
         # spot-check each op type against a direct engine call
         for (op, payload), res in zip(traffic, results):
@@ -57,6 +60,19 @@ def test_mixed_ops_one_drain(env):
                                               np.asarray(vals[0]))
                 np.testing.assert_array_equal(np.asarray(res[1]),
                                               np.asarray(ids[0]))
+            elif op == "topk_hausdorff":
+                # ExactHaus responses carry (vals, ids, SearchStats) — the
+                # engine no longer discards the stats; top-k values/ids
+                # are padding-invariant, so a solo rebuild must agree
+                q_batch = engine.build_queries([payload["q"]])
+                qi = jax.tree.map(lambda x: x[0], q_batch)
+                vals, ids, stats = engine.topk_hausdorff(qi, payload["k"])
+                np.testing.assert_array_equal(np.asarray(res[0]),
+                                              np.asarray(vals))
+                np.testing.assert_array_equal(np.asarray(res[1]),
+                                              np.asarray(ids))
+                assert res[2].exact_evaluations > 0
+                assert 0.0 <= res[2].pruned_fraction <= 1.0
     finally:
         server.stop()
 
