@@ -21,8 +21,17 @@ section — single-query ExactHaus latency AND per-device resident
 repository bytes at 1/3/8 shards, showing memory dropping ~1/N now that
 the sharded branch-and-bound keeps no replicated repository copy.
 
+Both modes also run the BATCHED ExactHaus sweep (`exact_hausdorff_batched`
+section): batch 1..64 query-index batches answered in ONE branch-and-bound
+dispatch (shared phase-2 work frontier) vs the per-query dispatch loop
+(one engine dispatch per query — the pre-batching serving shape), on a
+serving-shaped corpus of its own.  All engines run with the result cache
+disabled so repeated timing iterations measure dispatch, not memoization.
+``--max-batch`` trims every sweep (the CI bench-smoke step uses it).
+
 Emits the JSON record with per-op QPS curves plus a summary of the
-batch-64 speedup over the baseline.
+batch-64 speedup over the baseline and the batch-32 batched-ExactHaus
+speedup.
 """
 from __future__ import annotations
 
@@ -48,7 +57,82 @@ from repro.engine import QueryEngine, ShardedQueryEngine
 from repro.engine.sharded import data_mesh, repo_device_bytes
 
 BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+EXACT_BATCHES = (1, 2, 4, 8, 16, 32, 64)
 EXACT_SHARD_COUNTS = (1, 3, 8)
+
+# ExactHaus batched-QPS corpus: the online serving shape — many small-ish
+# datasets, small exemplar queries (distinct from the main op corpus so the
+# branch-and-bound sweep isn't dominated by one giant padded point axis)
+EXACT_DATASETS = 128
+EXACT_N_POINTS = (40, 100)
+EXACT_Q_POINTS = 24
+EXACT_K = 10
+EXACT_CHUNK = 8
+
+
+def bench_exacthaus_batched(engine_ctor, repeats, *, max_batch=None,
+                            seed=1):
+    """Batched ExactHaus QPS sweep: batch 1..64 in ONE dispatch each vs
+    the per-query dispatch loop (the pre-batching serving shape: one
+    engine dispatch per query, as serve_search used to issue).
+
+    Builds its own serving-shaped corpus (EXACT_* constants), constructs
+    an engine via `engine_ctor(repo)` (local or sharded; result cache off
+    so repeats measure dispatch), and returns the op record with per-batch
+    QPS and speedup-vs-loop.  The baseline loop for each row runs the
+    SAME b queries as the batched dispatch (per-query branch-and-bound
+    work varies across the pool, so a fixed baseline query set would bias
+    the ratio — at batch 1 both sides run the identical single dispatch
+    and the speedup is ~1 by construction)."""
+    lake = synthetic.trajectory_repository(EXACT_DATASETS, seed=seed,
+                                           n_points=EXACT_N_POINTS)
+    repo, _ = build_repository(lake, leaf_capacity=16, theta=5,
+                               remove_outliers=False)
+    engine = engine_ctor(repo)
+    n_pool = max(EXACT_BATCHES)
+    q_sets = [lake[i % len(lake)][:EXACT_Q_POINTS] for i in range(n_pool)]
+    q_batch_all = engine.build_queries(q_sets)
+    k, chunk = EXACT_K, EXACT_CHUNK
+
+    def q_at(i):
+        return jax.tree.map(lambda x: x[i], q_batch_all)
+
+    def q_slice(b):
+        return jax.tree.map(lambda x: x[:b], q_batch_all)
+
+    engine.topk_hausdorff(q_at(0), k, chunk=chunk)     # warm bucket 1
+
+    batches = [b for b in EXACT_BATCHES
+               if max_batch is None or b <= max_batch]
+    rows = []
+    for b in batches:
+        def loop(b=b):                 # matched set: queries 0..b-1
+            out = None
+            for i in range(b):
+                out = engine.topk_hausdorff(q_at(i), k, chunk=chunk)[0]
+            return out
+
+        t_loop = _time_best(loop, repeats=max(2, repeats // 2))
+        tb = _time_best(lambda: engine.topk_hausdorff(q_slice(b), k,
+                                                      chunk=chunk)[0],
+                        repeats=repeats)
+        rows.append({
+            "batch": b,
+            "seconds_per_batch": tb,
+            "qps": b / tb,
+            "loop_seconds": t_loop,
+            "loop_qps": b / t_loop,
+            "speedup_vs_loop": t_loop / tb,
+        })
+    return {
+        "corpus": {
+            "n_datasets": EXACT_DATASETS, "n_points": EXACT_N_POINTS,
+            "query_points": EXACT_Q_POINTS, "k": k, "chunk": chunk,
+            "ds_points_padded": int(repo.ds_index.points.shape[1]),
+            "query_points_padded": int(q_batch_all.points.shape[1]),
+        },
+        "batches": rows,
+    }
 
 
 def bench_exacthaus(repo, qi, k, repeats):
@@ -60,7 +144,7 @@ def bench_exacthaus(repo, qi, k, repeats):
     ~1/N with the shard count while the upper tree stays replicated.
     Includes the unsharded LocalDispatcher pipeline as the reference.
     """
-    le = QueryEngine(repo)
+    le = QueryEngine(repo, result_cache_size=0)
     t = _time(lambda: le.topk_hausdorff(qi, k)[0], repeats=repeats)
     rec = {
         "k": k,
@@ -76,7 +160,8 @@ def bench_exacthaus(repo, qi, k, repeats):
             print(f"[bench_engine] exacthaus: skipping {s} shards "
                   f"({jax.device_count()} devices available)")
             continue
-        e = ShardedQueryEngine(repo, mesh=data_mesh(s))
+        e = ShardedQueryEngine(repo, mesh=data_mesh(s),
+                               result_cache_size=0)
         last = {}
 
         def run(e=e, last=last):
@@ -106,6 +191,13 @@ def _time(fn, *, repeats: int, warmup: int = 2) -> float:
         out = fn()
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / repeats
+
+
+def _time_best(fn, *, repeats: int, trials: int = 3) -> float:
+    """Best-of-`trials` mean timing — robust to scheduler noise spikes on
+    small shared CPUs (one descheduled trial can't poison a committed
+    row)."""
+    return min(_time(fn, repeats=repeats) for _ in range(trials))
 
 
 def _query_pool(repo, datasets, n: int, seed: int = 0):
@@ -159,10 +251,17 @@ def main(argv=None):
                          "BENCH_engine_sharded.json with --sharded)")
     ap.add_argument("--datasets", type=int, default=128)
     ap.add_argument("--repeats", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="trim every batch sweep to <= this size (CI "
+                         "bench-smoke uses a tiny cap so the scripts "
+                         "stay cheap but can't rot)")
     ap.add_argument("--sharded", action="store_true",
                     help="benchmark the ShardedQueryEngine over a 1-D data "
                          "mesh spanning all local devices")
     args = ap.parse_args(argv)
+    if args.max_batch is not None:
+        global BATCHES
+        BATCHES = tuple(b for b in BATCHES if b <= args.max_batch)
     if args.out is None:
         args.out = ("BENCH_engine_sharded.json" if args.sharded
                     else "BENCH_engine.json")
@@ -171,12 +270,14 @@ def main(argv=None):
                                            n_points=(100, 400))
     repo, info = build_repository(lake, leaf_capacity=16, theta=5,
                                   remove_outliers=False)
+    # result cache OFF: the sweeps repeat identical inputs to time
+    # dispatch, which the result LRU would short-circuit
     if args.sharded:
-        engine = ShardedQueryEngine(repo)
+        engine = ShardedQueryEngine(repo, result_cache_size=0)
         print(f"[bench_engine] sharded: {engine.dispatch.n_shards} shard(s) "
               f"x {engine.dispatch.shard_slots} dataset slots")
     else:
-        engine = QueryEngine(repo)
+        engine = QueryEngine(repo, result_cache_size=0)
     n_pool = max(BATCHES)
     lo, hi, sigs = _query_pool(repo, lake, n_pool)
     lo_j, hi_j, sigs_j = jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(sigs)
@@ -236,12 +337,29 @@ def main(argv=None):
         qi = jax.tree.map(lambda x: x[0], q_batch_all)
         exact = bench_exacthaus(repo, qi, k, max(2, args.repeats // 2))
 
-    summary = {
-        f"{name}_speedup_at_64": next(
-            r["speedup_vs_loop"] for r in rec["batches"] if r["batch"] == 64
-        )
-        for name, rec in ops.items()
-    }
+    # batched ExactHaus QPS sweep (both modes): one shared phase-2 work
+    # frontier per dispatch vs the per-query dispatch loop
+    if args.sharded:
+        exact_ctor = lambda r: ShardedQueryEngine(r, result_cache_size=0)
+    else:
+        exact_ctor = lambda r: QueryEngine(r, result_cache_size=0)
+    exact_batched = bench_exacthaus_batched(
+        exact_ctor, max(2, args.repeats // 2), max_batch=args.max_batch)
+
+    def speedup_at(rec_op, b):
+        """(actual_batch, speedup) for the largest swept batch <= b — the
+        key is NAMED with the actual batch so a --max-batch smoke record
+        can never be misread as a full-size speedup."""
+        rows = [r for r in rec_op["batches"] if r["batch"] <= b]
+        return (rows[-1]["batch"], rows[-1]["speedup_vs_loop"]) if rows \
+            else (None, None)
+
+    summary = {}
+    for name, rec_op in ops.items():
+        b, s = speedup_at(rec_op, 64)
+        summary[f"{name}_speedup_at_{b}"] = s
+    b, s = speedup_at(exact_batched, 32)
+    summary[f"exact_hausdorff_batched_speedup_at_{b}"] = s
     if exact is not None and exact["rows"]:
         base_bytes = exact["rows"][0]["per_device_repo_bytes"]
         summary["exacthaus_per_device_mem_ratio_max_shards"] = (
@@ -262,6 +380,7 @@ def main(argv=None):
         "k": k,
         "ops": ops,
         "exact_hausdorff": exact,
+        "exact_hausdorff_batched": exact_batched,
         "summary": summary,
         "engine_stats": {
             "dispatches": engine.stats.dispatches,

@@ -14,9 +14,19 @@ TPU adaptation (DESIGN.md sec. 2): branch-and-bound becomes
   phase 1   level-synchronous frontier refinement of surviving candidates
             (bound matrices between Q's level-l nodes and each candidate's
             level-l nodes, masked),
-  phase 2   exact Hausdorff (Pallas streaming kernel) on the shortlist,
-            host-chunked in ascending-lower-bound order with monotone
-            threshold tightening — sound and exact.
+  phase 2   exact Hausdorff on the shortlist, chunked in ascending-lower-
+            bound order with monotone threshold tightening — sound and
+            exact.
+
+The pruning-in-batch theme extends across QUERIES: `_hausdorff_bound_
+phases` and `_phase2_exact_loop` natively operate on a (B, ...) query
+batch — phases 0/1 compute every query's bound matrices in one vmapped
+pass and phase 2 is a single `lax.while_loop` over a shared (query,
+candidate-chunk) work frontier with per-query taus — so B concurrent
+ExactHaus queries cost ONE device dispatch (`_topk_hausdorff_device_
+batched`, the engine hot path).  Single-query inputs are auto-promoted to
+a batch of one; `topk_hausdorff_host` keeps the seed host-chunked loop as
+the bit-identity oracle.
 """
 from __future__ import annotations
 
@@ -222,7 +232,18 @@ def frontier_bounds(q_idx: DatasetIndex, ds_index: DatasetIndex, level_q: int,
 
 
 def _kth_smallest(x: Array, k: int) -> Array:
-    return jnp.sort(x)[jnp.minimum(k - 1, x.shape[0] - 1)]
+    """kth-smallest along the LAST axis (selection only: the returned float
+    bit pattern is an element of x, identical to jnp.sort(x)[..., k-1])."""
+    kk = min(k, x.shape[-1])
+    return -jax.lax.top_k(-x, kk)[0][..., kk - 1]
+
+
+def _as_query_batch(q_idx: DatasetIndex):
+    """Promote a single-query index to a (1, ...) batch; returns
+    (batched index, was_single)."""
+    if q_idx.points.ndim == 2:
+        return jax.tree.map(lambda x: x[None], q_idx), True
+    return q_idx, False
 
 
 def _hausdorff_bound_phases(
@@ -234,25 +255,35 @@ def _hausdorff_bound_phases(
     axis: str | None = None,
     n_slots_total: int | None = None,
 ):
-    """Phases 0+1 of ExactHaus, pure jax (no host syncs).
+    """Phases 0+1 of ExactHaus for a (B, ...) QUERY BATCH, pure jax.
+
+    ``q_idx`` may carry a leading query-batch axis or be a single query
+    (auto-promoted to a batch of one and squeezed on return).  Phases 0/1
+    compute the Eq. 4 bound matrices for ALL B queries in one pass (the
+    per-slot bound kernels vmapped over the query axis) and each query
+    carries its own tau.
 
     Shard-mappable over a slot slice: with ``axis=None`` (the single-device
     pipeline) `repo` spans every dataset slot and all reductions are local.
     Inside shard_map (``axis`` a mesh axis name) `repo` is the LOCAL shard
     slice; per-slot bounds are computed by the identical arithmetic on the
     identical rows (slicing the slot axis changes no values) and only the
-    two repository-global reductions become collectives — tau (the
-    kth-smallest upper bound, via the O(k)
-    :func:`~repro.core.distributed.global_kth_smallest` gather) and the
-    candidate counters (psum).  ``n_slots_total`` pins the phase-0 node
-    count to the unsharded slot count so stats match the local pipeline
-    exactly even when shard padding widens the local slice.
+    two repository-global reductions become collectives — each query's tau
+    (the kth-smallest upper bound, via the O(k)
+    :func:`~repro.core.distributed.global_kth_smallest` gather, batched
+    over queries) and the candidate counters (psum).  ``n_slots_total``
+    pins the phase-0 node count to the unsharded slot count so stats match
+    the local pipeline exactly even when shard padding widens the local
+    slice.
 
-    Returns (LB, tau, cand, nodes_evaluated, cand_after_bounds); LB/cand
-    cover this slice's slots, the counters are device scalars (global when
-    sharded) so the whole pipeline can live under one jit.
+    Returns (LB (B, S), tau (B,), cand (B, S), nodes_evaluated (B,),
+    cand_after_bounds (B,)); LB/cand cover this slice's slots, the
+    counters are device vectors (global when sharded) so the whole
+    pipeline can live under one jit.  Single-query inputs get the same
+    tuple with the query axis squeezed.
     """
-    B = repo.n_slots
+    q_idx, single = _as_query_batch(q_idx)
+    S = repo.n_slots
     valid = repo.ds_valid
 
     def kth_ub(ub):
@@ -261,36 +292,42 @@ def _hausdorff_bound_phases(
         return distributed.global_kth_smallest(ub, k, axis)
 
     def count(mask):
-        s = mask.sum().astype(jnp.int32)
+        s = mask.sum(axis=-1).astype(jnp.int32)
         return s if axis is None else jax.lax.psum(s, axis)
 
+    bounds = jax.vmap(frontier_bounds, in_axes=(0, None, None, None))
+
     # ---- phase 0: dense root-granularity Eq. 4 bound pass -----------------
-    LB, UB = frontier_bounds(q_idx, repo.ds_index, 0, 0)
-    LB = jnp.where(valid, LB, BIG)
-    UB = jnp.where(valid, UB, BIG)
+    LB, UB = bounds(q_idx, repo.ds_index, 0, 0)          # (B, S) each
+    LB = jnp.where(valid[None, :], LB, BIG)
+    UB = jnp.where(valid[None, :], UB, BIG)
     tau = kth_ub(UB)
-    cand = LB <= tau
+    cand = LB <= tau[:, None]
     if axis is not None and n_slots_total is not None:
         # shard padding widened the slot range: keep those slots out of
         # cand so the counters match the unsharded pipeline even when
         # tau == BIG (k past the valid count makes EVERY slot a candidate)
-        gid = jax.lax.axis_index(axis) * B + jnp.arange(B)
-        cand = cand & (gid < n_slots_total)
-    nodes_evaluated = jnp.asarray(
-        B if n_slots_total is None else n_slots_total, jnp.int32)
+        gid = jax.lax.axis_index(axis) * S + jnp.arange(S)
+        cand = cand & (gid < n_slots_total)[None, :]
+    nodes_evaluated = jnp.full(
+        (LB.shape[0],),
+        S if n_slots_total is None else n_slots_total, jnp.int32)
 
     # ---- phase 1: level-synchronous refinement ----------------------------
     max_level = min(q_idx.depth, repo.ds_index.depth, refine_levels)
     for level in range(1, max_level + 1):
-        LB_l, UB_l = frontier_bounds(q_idx, repo.ds_index, level, level)
+        LB_l, UB_l = bounds(q_idx, repo.ds_index, level, level)
         # refinement can only tighten; keep the monotone envelope
         LB = jnp.where(cand, jnp.maximum(LB, LB_l), LB)
         UB = jnp.where(cand, jnp.minimum(UB, UB_l), UB)
-        tau = kth_ub(jnp.where(valid, UB, BIG))
-        cand = cand & (LB <= tau)
-        nodes_evaluated += count(cand) * (1 << level)
+        tau = kth_ub(jnp.where(valid[None, :], UB, BIG))
+        cand = cand & (LB <= tau[:, None])
+        nodes_evaluated = nodes_evaluated + count(cand) * (1 << level)
 
-    return LB, tau, cand, nodes_evaluated, count(cand)
+    out = (LB, tau, cand, nodes_evaluated, count(cand))
+    if single:
+        out = tuple(x[0] for x in out)
+    return out
 
 
 def _phase2_exact_loop(
@@ -307,16 +344,29 @@ def _phase2_exact_loop(
     """Phase 2 of ExactHaus: chunked exact refinement under a tightening
     threshold, over this slice's dataset slots.
 
-    ``axis=None`` reproduces the seed host loop exactly: one scan over the
-    GLOBAL ascending-lower-bound candidate order, evaluating `chunk`
-    candidates per `lax.while_loop` iteration and re-deriving tau from the
-    k smallest finite exacts after each chunk.
+    Operates on a (B, ...) QUERY BATCH (single queries are auto-promoted
+    and squeezed): ONE `lax.while_loop` over a shared (query,
+    candidate-chunk) work frontier.  Per iteration it evaluates one
+    ascending-lower-bound chunk for EVERY query that still has work (one
+    fused `ops.directed_hausdorff_grid` call for the whole (B, chunk)
+    pair grid), tightens each query's tau on device, and the loop
+    condition is "any query has work" — so B queries cost one while_loop
+    instead of B.  A query with no work idles: its chunk lanes are masked,
+    its position does not advance, and its tau re-derivation is
+    idempotent, so each query's (vals, tau, evaluated) trajectory is
+    EXACTLY the trajectory of its solo loop run in lockstep.
+
+    ``axis=None`` reproduces the seed host loop exactly per query: a scan
+    over that query's GLOBAL ascending-lower-bound candidate order,
+    evaluating `chunk` candidates per iteration and re-deriving tau from
+    the k smallest finite exacts after each chunk.
 
     Inside shard_map (``axis`` set) each shard scans its OWN ascending-LB
-    candidate order and tau is all-reduced after every chunk (the same O(k)
-    gather as the bound phases), so every shard prunes with the global
-    threshold.  The while cond must be collective-free and replicated, so
-    the continue flag (any shard still has work, psum > 0) is computed at
+    candidate order per query and tau is all-reduced after every chunk
+    (the same O(k) gather as the bound phases, batched over queries), so
+    every shard prunes with the global per-query threshold.  The while
+    cond must be collective-free and replicated, so the per-query continue
+    flags (any shard still has work for query b, psum > 0) are computed at
     the end of the body and carried.  A shard's stop test is re-evaluated
     every iteration, NOT latched: tau is non-increasing once k finite
     exacts exist, but the single handoff from the bound-phase tau to the
@@ -325,37 +375,45 @@ def _phase2_exact_loop(
     raised tau simply resumes — the soundness argument below never relies
     on stops being permanent.
 
-    Exactness under EITHER schedule: tau is always >= the true kth-smallest
-    Hausdorff H_k (it is derived from the k smallest of a SUBSET of exact
-    values, or from the sound phase-0/1 upper bounds before k exacts
-    exist), so a skipped candidate has LB > tau >= H_k and hence
-    H >= LB > H_k — strictly outside the top-k, ties included.  Every
-    candidate with H <= H_k therefore gets evaluated under every chunk
-    schedule, and the final full-slot top_k (ties toward the smallest slot
-    id) returns bit-identical values and ids; only WHICH extra candidates
-    beyond H_k get evaluated — the `evaluated` counter — depends on the
-    schedule.
+    Exactness under ANY schedule: each query's tau is always >= its true
+    kth-smallest Hausdorff H_k (it is derived from the k smallest of a
+    SUBSET of exact values, or from the sound phase-0/1 upper bounds
+    before k exacts exist), so a skipped candidate has LB > tau >= H_k and
+    hence H >= LB > H_k — strictly outside the top-k, ties included.
+    Every candidate with H <= H_k therefore gets evaluated under every
+    chunk schedule, and the final full-slot top_k (ties toward the
+    smallest slot id) returns bit-identical values and ids; only WHICH
+    extra candidates beyond H_k get evaluated — the `evaluated` counter —
+    depends on the schedule.  (The same argument makes evaluating a
+    SUPERSET of any sound schedule's candidates bit-safe: an extra exact
+    value is > H_k and never enters the top-k.)
 
-    Returns (exact_vals over this slice's slots, evaluated), `evaluated`
-    being the global count when sharded.
+    Returns (exact_vals (B, S) over this slice's slots, evaluated (B,)),
+    `evaluated` being the global count when sharded; single-query inputs
+    get the query axis squeezed.
     """
-    B = LB.shape[0]
+    single = LB.ndim == 1
+    if single:
+        LB, cand, tau = LB[None], cand[None], tau[None]
+    q_idx, _ = _as_query_batch(q_idx)
+    B, S = LB.shape
     lb_masked = jnp.where(cand, LB, BIG)
-    order = jnp.argsort(lb_masked)        # stable: LB ties keep slot order
-    lb_sorted = lb_masked[order]
-    n_pad = ((B + chunk - 1) // chunk) * chunk
+    order = jnp.argsort(lb_masked, axis=-1)   # stable: LB ties keep slots
+    lb_sorted = jnp.take_along_axis(lb_masked, order, axis=-1)
+    n_pad = ((S + chunk - 1) // chunk) * chunk
     # pad ids with 0 (masked out by the BIG lb pad; .at[].min makes the
     # duplicate-id write a no-op)
-    order_p = jnp.pad(order, (0, n_pad - B))
-    lb_p = jnp.pad(lb_sorted, (0, n_pad - B), constant_values=BIG)
+    order_p = jnp.pad(order, ((0, 0), (0, n_pad - S)))
+    lb_p = jnp.pad(lb_sorted, ((0, 0), (0, n_pad - S)), constant_values=BIG)
 
     q_pts, q_val = q_idx.points, q_idx.valid
     d_pts_all, d_val_all = ds_index.points, ds_index.valid
 
     def has_work(pos, tau_c):
-        lb0 = lb_p[pos]
-        # seed stopping rule: candidates remain, chunk head not pruned
-        return (pos < B) & (lb0 < BIG / 2) & (lb0 <= tau_c)
+        # seed stopping rule per query: candidates remain, head not pruned
+        lb0 = jnp.take_along_axis(lb_p, pos[:, None], axis=1,
+                                  mode="clip")[:, 0]
+        return (pos < S) & (lb0 < BIG / 2) & (lb0 <= tau_c)
 
     def reduce_any(go):
         if axis is None:
@@ -363,49 +421,88 @@ def _phase2_exact_loop(
         return jax.lax.psum(go.astype(jnp.int32), axis) > 0
 
     def cond(carry):
-        return carry[0]
+        return jnp.any(carry[0])
 
     def body(carry):
         _, pos, vals, tau_c, evaluated = carry
-        go = has_work(pos, tau_c)         # this shard's chunk still counts
-        ids = jax.lax.dynamic_slice(order_p, (pos,), (chunk,))
-        lbs = jax.lax.dynamic_slice(lb_p, (pos,), (chunk,))
-        live = (lbs < BIG / 2) & go
-        hs = ops.directed_hausdorff_batched(
+        go = has_work(pos, tau_c)         # this shard's chunks still count
+        idx = pos[:, None] + jnp.arange(chunk, dtype=pos.dtype)[None, :]
+        ids = jnp.take_along_axis(order_p, idx, axis=1, mode="clip")
+        lbs = jnp.take_along_axis(lb_p, idx, axis=1, mode="clip")
+        live = (lbs < BIG / 2) & go[:, None]
+        hs = ops.directed_hausdorff_grid(
             q_pts, d_pts_all[ids], q_val, d_val_all[ids]
         )
-        vals = vals.at[ids].min(jnp.where(live, hs, BIG))
-        evaluated = evaluated + live.sum().astype(jnp.int32)
+        vals = jax.vmap(lambda v, i, h: v.at[i].min(h))(
+            vals, ids, jnp.where(live, hs, BIG))
+        evaluated = evaluated + live.sum(axis=-1).astype(jnp.int32)
         pos = jnp.where(go, pos + chunk, pos)
-        # monotone threshold tightening from the k finite exacts so far
+        # monotone per-query threshold tightening from the k finite exacts
         finite = vals < BIG / 2
         if axis is None:
-            kth = jnp.sort(jnp.where(finite, vals, BIG))[k - 1]
-            n_fin = finite.sum()
+            kth = _kth_smallest(jnp.where(finite, vals, BIG), k)
+            n_fin = finite.sum(axis=-1)
         else:
             kth = distributed.global_kth_smallest(
                 jnp.where(finite, vals, BIG), k, axis)
-            n_fin = jax.lax.psum(finite.sum().astype(jnp.int32), axis)
+            n_fin = jax.lax.psum(finite.sum(axis=-1).astype(jnp.int32),
+                                 axis)
         tau_c = jnp.where(n_fin >= k, kth, tau_c)
         return (reduce_any(has_work(pos, tau_c)), pos, vals, tau_c,
                 evaluated)
 
     init = (
-        reduce_any(has_work(jnp.zeros((), jnp.int32), tau)),
-        jnp.zeros((), jnp.int32),
-        jnp.full((B,), BIG, jnp.float32),
+        reduce_any(has_work(jnp.zeros((B,), jnp.int32), tau)),
+        jnp.zeros((B,), jnp.int32),
+        jnp.full((B, S), BIG, jnp.float32),
         tau.astype(jnp.float32),
-        jnp.zeros((), jnp.int32),
+        jnp.zeros((B,), jnp.int32),
     )
     _, _, exact_vals, _, evaluated = jax.lax.while_loop(cond, body, init)
     if axis is not None:
         evaluated = jax.lax.psum(evaluated, axis)
+    if single:
+        return exact_vals[0], evaluated[0]
     return exact_vals, evaluated
 
 
 @functools.partial(
     jax.jit, static_argnames=("k", "refine_levels", "chunk")
 )
+def _topk_hausdorff_device_batched(
+    repo: Repository,
+    q_batch: DatasetIndex,
+    k: int,
+    refine_levels: int,
+    chunk: int,
+):
+    """Batched ExactHaus, entirely on device: B queries, ONE dispatch.
+
+    Phases 0/1 compute every query's Eq. 4 bound matrices in one vmapped
+    pass; phase 2 is a SINGLE `lax.while_loop` over the shared (query,
+    candidate-chunk) work frontier with per-query tau tightening — the
+    same evaluation order, stopping rule, and arithmetic per query as the
+    seed host loop (`topk_hausdorff_host`), so per-query results are
+    bit-identical; the B per-query dispatches are gone.  Both phases are
+    the shard-mappable helpers (`_hausdorff_bound_phases` /
+    `_phase2_exact_loop`) in their ``axis=None`` form; the sharded engine
+    runs the same helpers per shard with collective tau reductions.
+
+    Returns (vals (B, k), ids (B, k), nodes (B,), cand_after (B,),
+    evaluated (B,)).
+    """
+    valid = repo.ds_valid
+    LB, tau, cand, nodes_evaluated, cand_after = _hausdorff_bound_phases(
+        repo, q_batch, k, refine_levels
+    )
+    exact_vals, evaluated = _phase2_exact_loop(
+        LB, cand, tau, q_batch, repo.ds_index, k, chunk
+    )
+    vals = jnp.where(valid[None, :], exact_vals, BIG)
+    top_vals, top_ids = jax.lax.top_k(-vals, k)
+    return -top_vals, top_ids, nodes_evaluated, cand_after, evaluated
+
+
 def _topk_hausdorff_device(
     repo: Repository,
     q_idx: DatasetIndex,
@@ -413,27 +510,12 @@ def _topk_hausdorff_device(
     refine_levels: int,
     chunk: int,
 ):
-    """ExactHaus, entirely on device: phases 0-2 under ONE dispatch.
-
-    Phase 2 is a `lax.while_loop` over ascending-lower-bound candidate
-    chunks with on-device threshold tightening — the same evaluation order,
-    stopping rule, and arithmetic as the seed host loop
-    (`topk_hausdorff_host`), so results are bit-identical; the per-chunk
-    device->host sync is gone.  Both phases are the shard-mappable helpers
-    (`_hausdorff_bound_phases` / `_phase2_exact_loop`) in their
-    ``axis=None`` form; the sharded engine runs the same helpers per shard
-    with collective tau reductions.
-    """
-    valid = repo.ds_valid
-    LB, tau, cand, nodes_evaluated, cand_after = _hausdorff_bound_phases(
-        repo, q_idx, k, refine_levels
+    """Single-query ExactHaus on device: the batched pipeline at B = 1."""
+    q_batch, _ = _as_query_batch(q_idx)
+    vals, ids, nodes, cand_after, evaluated = _topk_hausdorff_device_batched(
+        repo, q_batch, k=k, refine_levels=refine_levels, chunk=chunk
     )
-    exact_vals, evaluated = _phase2_exact_loop(
-        LB, cand, tau, q_idx, repo.ds_index, k, chunk
-    )
-    vals = jnp.where(valid, exact_vals, BIG)
-    top_vals, top_ids = jax.lax.top_k(-vals, k)
-    return -top_vals, top_ids, nodes_evaluated, cand_after, evaluated
+    return vals[0], ids[0], nodes[0], cand_after[0], evaluated[0]
 
 
 def topk_hausdorff(

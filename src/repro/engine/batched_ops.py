@@ -155,6 +155,34 @@ def topk_hausdorff_approx_batched(
 
 
 # ---------------------------------------------------------------------------
+# ExactHaus, batched branch-and-bound
+# ---------------------------------------------------------------------------
+
+
+def topk_hausdorff_batched(
+    repo: Repository, q_batch: DatasetIndex, k: int,
+    refine_levels: int = 3, chunk: int = 32,
+):
+    """ExactHaus for a (B, ...) batch of query indexes, ONE dispatch.
+
+    Phases 0/1 compute the Eq. 4 bound matrices for all B queries in one
+    vmapped pass; phase 2 is a single `lax.while_loop` over the shared
+    (query, candidate-chunk) work frontier with per-query tau tightening
+    (`search._topk_hausdorff_device_batched`).  Per-query (vals, ids) are
+    bit-identical to the solo pipeline and the seed host loop
+    `topk_hausdorff_host`; with the same ``chunk`` the per-query
+    `evaluated` counters match the solo loop too (each query's trajectory
+    is its solo loop run in lockstep).
+
+    Returns (vals (B, k), ids (B, k), nodes (B,), cand_after (B,),
+    evaluated (B,)).
+    """
+    return search._topk_hausdorff_device_batched(
+        repo, q_batch, k=k, refine_levels=refine_levels, chunk=chunk
+    )
+
+
+# ---------------------------------------------------------------------------
 # point granularity
 # ---------------------------------------------------------------------------
 

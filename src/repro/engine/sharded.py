@@ -48,19 +48,23 @@ ExactHaus (`topk_hausdorff`) is genuinely sharded end to end — no
 replicated repository copy, so resident repository bytes per device are
 ~1/N:
 
-  * phases 0/1 (Eq. 4 bound passes) run per shard on the local slot slice;
-    the batch-prune threshold tau (kth-smallest upper bound) is the one
+  * phases 0/1 (Eq. 4 bound passes) run per shard on the local slot slice
+    for the WHOLE (B, ...) query batch in one vmapped pass; each query's
+    batch-prune threshold tau (kth-smallest upper bound) is the one
     repository-global quantity and is reduced with the O(k)
-    `global_kth_smallest` gather (`core/distributed.py`), the same
-    collective pattern as `sharded_topk_bounds`;
-  * phase 2 runs one `lax.while_loop` per shard over the shard's OWN
-    ascending-lower-bound candidate order; after every chunk of exact
-    `directed_hausdorff_batched` evaluations tau is all-reduced again
-    (k smallest finite exacts per shard -> gather -> kth), so every shard
-    prunes with the global threshold while it scans.  The loop's continue
-    flag (any shard still has work) is psum-reduced into the carry so the
-    while cond stays collective-free and replicated;
-  * the final top-k is the same O(k) all-gather merge as IA/GBO.
+    `global_kth_smallest` gather (`core/distributed.py`, batched over the
+    query axis), the same collective pattern as `sharded_topk_bounds`;
+  * phase 2 runs ONE `lax.while_loop` per shard for the whole batch, over
+    each query's OWN ascending-lower-bound candidate order on that
+    shard's slots (a shared (query, candidate-chunk) work frontier);
+    after every chunk of exact `directed_hausdorff_grid` evaluations the
+    per-query taus are all-reduced again (k smallest finite exacts per
+    shard -> gather -> kth), so every shard prunes with each query's
+    global threshold while it scans.  The loop's per-query continue flags
+    (any shard still has work for that query) are psum-reduced into the
+    carry so the while cond stays collective-free and replicated;
+  * the final top-k is the same O(k) all-gather merge as IA/GBO, batched
+    over queries.
 
 Tie-order contract (documented in `search._phase2_exact_loop`, asserted
 against the host oracle in tests): per-shard chunking changes WHICH
@@ -83,7 +87,8 @@ from repro.core import geometry, point_search, search
 from repro.core.distributed import _shard_map
 from repro.core.repo_index import Repository
 from repro.engine import batched_ops, merge
-from repro.engine.engine import DEFAULT_BUCKETS, QueryEngine
+from repro.engine.engine import (DEFAULT_BUCKETS, DEFAULT_RESULT_CACHE,
+                                 QueryEngine)
 from repro.kernels import ops as kernel_ops
 
 Array = jax.Array
@@ -334,22 +339,25 @@ class ShardedDispatcher:
         return self._bind(impl)
 
     def build_topk_hausdorff(self, k: int, refine_levels: int, chunk: int):
-        """Sharded ExactHaus: per-shard bound phases + per-shard phase-2
-        loops with the tau all-reduce schedule from the module docstring,
-        then the O(k) all-gather top-k merge.  Values and ids are
+        """Sharded BATCHED ExactHaus: per-shard bound phases and ONE
+        per-shard phase-2 while_loop for the whole (B, ...) query batch,
+        with each query's tau all-reduced after every chunk (the schedule
+        from the module docstring, batched over queries), then the O(k)
+        all-gather top-k merge per query.  Per-query values and ids are
         bit-identical to the single-device pipeline and the host oracle;
         only the `evaluated` stat is schedule-dependent."""
         axis = self.axis
         n_total = self.n_slots
         shard = self.shard_slots
 
-        def local(repo_loc, q_idx):
+        def local(repo_loc, q_batch):
             LB, tau, cand, nodes, cand_after = search._hausdorff_bound_phases(
-                repo_loc, q_idx, k, refine_levels, axis=axis,
+                repo_loc, q_batch, k, refine_levels, axis=axis,
                 n_slots_total=n_total)
             exact_vals, evaluated = search._phase2_exact_loop(
-                LB, cand, tau, q_idx, repo_loc.ds_index, k, chunk, axis=axis)
-            vals = jnp.where(repo_loc.ds_valid, exact_vals, BIG)
+                LB, cand, tau, q_batch, repo_loc.ds_index, k, chunk,
+                axis=axis)
+            vals = jnp.where(repo_loc.ds_valid[None, :], exact_vals, BIG)
             # shard-padded slots carry BIG like invalid ones and lose every
             # smallest-index tie, so k <= n_slots never surfaces a pad id
             base = jax.lax.axis_index(axis) * shard
@@ -360,8 +368,8 @@ class ShardedDispatcher:
         sm = self._smap(local, in_specs=(self.specs, P()),
                         out_specs=(P(),) * 5)
 
-        def impl(repo_s, q_idx):
-            return sm(repo_s, q_idx)
+        def impl(repo_s, q_batch):
+            return sm(repo_s, q_batch)
 
         return self._bind(impl)
 
@@ -428,8 +436,10 @@ class ShardedQueryEngine(QueryEngine):
         shard_spec: str = "data",
         buckets=DEFAULT_BUCKETS,
         leaf_capacity: int = 16,
+        result_cache_size: int = DEFAULT_RESULT_CACHE,
     ):
         if mesh is None:
             mesh = data_mesh(axis=shard_spec)
         super().__init__(repo, buckets=buckets, leaf_capacity=leaf_capacity,
-                         mesh=mesh, shard_spec=shard_spec)
+                         mesh=mesh, shard_spec=shard_spec,
+                         result_cache_size=result_cache_size)

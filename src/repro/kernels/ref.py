@@ -14,11 +14,38 @@ Array = jax.Array
 BIG = jnp.float32(3.4e38)
 
 
+def unrolled_sq_dists(a: Array, b: Array) -> Array:
+    """sum_c (a[..., c] - b[..., c])**2 with the coordinate axis UNROLLED
+    into a running per-coordinate accumulation.
+
+    `a` and `b` must already be broadcast-compatible up to the trailing
+    coordinate axis.  Unrolling avoids materializing a (..., dim) diff
+    tensor and reducing it — XLA:CPU emits a far better loop nest (the
+    exact-Hausdorff hot path) — and the arithmetic per entry is the same
+    squares added in the same coordinate order, so results stay bit-stable
+    across eager/jit/vmap contexts.  This is the ONE definition of the
+    squared-distance accumulation shared by every site that must stay
+    bitwise identical (masked_sq_dists, bound_matrix, and the slab loop in
+    `ops.directed_hausdorff_grid`); the ExactHaus bit-identity suites
+    assert the contract.
+    """
+    d2 = None
+    for c in range(a.shape[-1]):
+        diff = a[..., c] - b[..., c]
+        sq = diff * diff
+        d2 = sq if d2 is None else d2 + sq
+    return d2
+
+
+def masked_sq_dists(q: Array, d: Array, d_valid: Array) -> Array:
+    """(nq, nd) squared distances with invalid D columns masked to BIG."""
+    d2 = unrolled_sq_dists(q[:, None, :], d[None, :, :])
+    return jnp.where(d_valid[None, :], d2, BIG)
+
+
 def directed_hausdorff(q: Array, d: Array, q_valid: Array, d_valid: Array) -> Array:
     """H(Q -> D) = max_{p in Q} min_{p' in D} ||p - p'|| with masks."""
-    diff = q[:, None, :] - d[None, :, :]
-    d2 = jnp.sum(diff * diff, axis=-1)
-    d2 = jnp.where(d_valid[None, :], d2, BIG)
+    d2 = masked_sq_dists(q, d, d_valid)
     nnd = jnp.sqrt(jnp.min(d2, axis=1))
     nnd = jnp.where(q_valid, nnd, -BIG)
     return jnp.max(nnd)
@@ -41,9 +68,13 @@ def bound_matrix(oq: Array, rq: Array, od: Array, rd: Array):
 
     oq (nq, dim), rq (nq,), od (nd, dim), rd (nd,) ->
     (lb, ub) each (nq, nd).
+
+    The center-distance matrix uses :func:`unrolled_sq_dists` (same bits,
+    bit-stable across eager/jit/vmap — the bound phases run eager in the
+    host oracle and vmapped under jit in the batched engine, and their
+    candidate counters are asserted equal).
     """
-    diff = oq[:, None, :] - od[None, :, :]
-    cd2 = jnp.sum(diff * diff, axis=-1)
+    cd2 = unrolled_sq_dists(oq[:, None, :], od[None, :, :])
     cd = jnp.sqrt(cd2)
     lb = jnp.maximum(cd - rd[None, :], 0.0)
     ub = jnp.sqrt(cd2 + (rd * rd)[None, :]) + rq[:, None]

@@ -40,9 +40,10 @@ from repro.core.repo_index import Repository
 from repro.engine import QueryEngine
 
 # ops the dispatcher knows how to group and batch; topk_hausdorff (the
-# exact branch-and-bound) shares one grouped query-index build but runs
-# one engine dispatch per request, and its results carry the SearchStats
-# (evaluated count, pruned fraction) the engine now surfaces
+# exact branch-and-bound) is batched like every other op — one grouped
+# query-index build and ONE engine dispatch for the group (shared phase-2
+# work frontier) — and its per-request results carry the SearchStats
+# (evaluated count, pruned fraction) the engine surfaces
 OPS = (
     "range_search", "topk_ia", "topk_gbo", "topk_hausdorff_approx",
     "topk_hausdorff", "range_points", "nnp",
@@ -200,12 +201,14 @@ class SearchServer:
                 (vals[i], ids[i], eps_eff[i]) for i in range(len(reqs))
             ]
         elif op == "topk_hausdorff":
+            # batched end-to-end: one grouped query-index build AND one
+            # engine dispatch for the whole group (shared phase-2 frontier)
             q_batch = eng.build_queries([r.payload["q"] for r in reqs])
-            results = []
-            for i in range(len(reqs)):
-                qi = jax.tree.map(lambda x, i=i: x[i], q_batch)
-                results.append(
-                    eng.topk_hausdorff(qi, reqs[0].payload["k"]))
+            vals, ids, stats = eng.topk_hausdorff(
+                q_batch, reqs[0].payload["k"])
+            results = [
+                (vals[i], ids[i], stats[i]) for i in range(len(reqs))
+            ]
         elif op == "range_points":
             ds = np.asarray([r.payload["ds_id"] for r in reqs])
             lo = np.stack([r.payload["r_lo"] for r in reqs])

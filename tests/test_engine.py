@@ -24,11 +24,14 @@ K = 6
 
 @pytest.fixture(scope="module")
 def env():
-    # 33 datasets -> 64 padded slots, so top-k can overrun the valid count
+    # 33 datasets -> 64 padded slots, so top-k can overrun the valid count.
+    # result_cache_size=0: the equivalence tests here repeat identical
+    # inputs on purpose and must measure DISPATCH semantics, not the
+    # result LRU (covered separately in test_result_cache_*).
     datasets = make_clustered_datasets(33, seed=2, n_points=(30, 120))
     repo, _ = build_repository(datasets, leaf_capacity=16, theta=THETA,
                                remove_outliers=False)
-    engine = QueryEngine(repo)
+    engine = QueryEngine(repo, result_cache_size=0)
     rng = np.random.default_rng(0)
     lo = rng.uniform(-60, 40, (N_QUERIES, 2)).astype(np.float32)
     hi = lo + rng.uniform(5, 40, (N_QUERIES, 2)).astype(np.float32)
@@ -158,6 +161,158 @@ def test_exact_hausdorff_device_bitwise_matches_host(env):
         assert se == sd
 
 
+def test_exact_hausdorff_batched_matches_solo(env):
+    """A (B, ...) ExactHaus batch costs ONE dispatch and every row is
+    bit-identical to its solo run — with the same chunk, each query's
+    phase-2 trajectory is its solo loop in lockstep, so even the per-query
+    `evaluated` counters match."""
+    _, repo, engine, _, _, _, q_batch, _ = env
+    d0 = engine.stats.dispatches
+    vals, ids, stats = engine.topk_hausdorff(q_batch, K)
+    assert engine.stats.dispatches == d0 + 1
+    assert vals.shape == (N_QUERIES, K) and len(stats) == N_QUERIES
+    for i in range(N_QUERIES):
+        q_idx = _q_at(q_batch, i)
+        vh, jh, sh = search.topk_hausdorff_host(repo, q_idx, K)
+        np.testing.assert_array_equal(np.asarray(vals[i]), np.asarray(vh))
+        np.testing.assert_array_equal(np.asarray(ids[i]), np.asarray(jh))
+        assert stats[i].exact_evaluations == sh.exact_evaluations
+        assert stats[i].candidates_after_bounds == sh.candidates_after_bounds
+        assert stats[i].nodes_evaluated == sh.nodes_evaluated
+    # a different chunk schedule changes WHICH extras get evaluated but
+    # never the returned values/ids (tau soundness, ties included)
+    v8, i8, s8 = engine.topk_hausdorff(q_batch, K, chunk=8)
+    np.testing.assert_array_equal(np.asarray(v8), np.asarray(vals))
+    np.testing.assert_array_equal(np.asarray(i8), np.asarray(ids))
+    for i in range(N_QUERIES):
+        assert 0 <= s8[i].exact_evaluations <= s8[i].candidates_after_bounds
+
+
+def test_record_search_batched_aggregation(env):
+    """EngineStats.record_search must aggregate per-query SearchStats
+    across a batched dispatch: summed counters, mean pruned fraction —
+    not assume one query per call."""
+    datasets, repo, _, _, _, q_sets, _, _ = env
+    engine = QueryEngine(repo, result_cache_size=0)
+    q_batch = engine.build_queries(q_sets)
+    _, _, stats = engine.topk_hausdorff(q_batch, K)
+    per = engine.stats.per_op["topk_hausdorff"]
+    assert per["queries"] == N_QUERIES
+    assert per["dispatches"] == 1
+    assert per["exact_evaluations"] == sum(
+        s.exact_evaluations for s in stats)
+    assert per["candidates_after_bounds"] == sum(
+        s.candidates_after_bounds for s in stats)
+    assert per["nodes_evaluated"] == sum(s.nodes_evaluated for s in stats)
+    assert per["pruned_fraction"] == pytest.approx(
+        sum(s.pruned_fraction for s in stats) / N_QUERIES)
+    # a second batch ACCUMULATES counters and refreshes the mean fraction
+    _, _, stats2 = engine.topk_hausdorff(q_batch, K + 1)
+    per = engine.stats.per_op["topk_hausdorff"]
+    assert per["exact_evaluations"] == (
+        sum(s.exact_evaluations for s in stats)
+        + sum(s.exact_evaluations for s in stats2))
+    assert per["pruned_fraction"] == pytest.approx(
+        sum(s.pruned_fraction for s in stats2) / N_QUERIES)
+
+
+def test_result_cache_short_circuits(env):
+    """Repeated queries are answered from the result LRU before bucketing:
+    no new dispatch, result-cache counters booked (distinct from the
+    executable-cache ones), results identical to the fresh dispatch."""
+    datasets, repo, ref_engine, lo, hi, q_sets, _, sigs = env
+    engine = QueryEngine(repo)            # default: result cache ON
+    q_batch = engine.build_queries(q_sets)
+
+    m1 = engine.range_search(lo, hi)
+    v1, j1 = engine.topk_ia(lo, hi, K)
+    g1, gj1 = engine.topk_gbo(sigs, K)
+    a1, aj1, e1 = engine.topk_hausdorff_approx(q_batch, K, 1.0)
+    h1, hj1, hs1 = engine.topk_hausdorff(q_batch, K)
+    d0 = engine.stats.dispatches
+    hits0 = engine.stats.result_cache_hits
+    misses0 = engine.stats.result_cache_misses
+    assert hits0 == 0 and misses0 == 5 * N_QUERIES
+    assert engine.stats.queries == 5 * N_QUERIES
+
+    # identical second pass: zero dispatches, all rows from the cache
+    m2 = engine.range_search(lo, hi)
+    v2, j2 = engine.topk_ia(lo, hi, K)
+    g2, gj2 = engine.topk_gbo(sigs, K)
+    a2, aj2, e2 = engine.topk_hausdorff_approx(q_batch, K, 1.0)
+    h2, hj2, hs2 = engine.topk_hausdorff(q_batch, K)
+    assert engine.stats.dispatches == d0
+    assert engine.stats.result_cache_hits == hits0 + 5 * N_QUERIES
+    assert engine.stats.result_cache_misses == misses0
+    # cache-hit rows are still ANSWERED client queries: stats.queries
+    # counts every answered row exactly once (hit or dispatched)
+    assert engine.stats.queries == 10 * N_QUERIES
+    assert engine.stats.per_op["topk_ia"]["queries"] == 2 * N_QUERIES
+    for a, b in ((m1, m2), (v1, v2), (j1, j2), (g1, g2), (gj1, gj2),
+                 (a1, a2), (aj1, aj2), (e1, e2), (h1, h2), (hj1, hj2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert hs1 == hs2                     # SearchStats memoized alongside
+
+    # results equal the cache-disabled reference engine's
+    np.testing.assert_array_equal(np.asarray(v2),
+                                  np.asarray(ref_engine.topk_ia(lo, hi, K)[0]))
+
+    # partial hit: one cached row + one new row -> exactly one dispatch of
+    # the 1-row miss sub-batch (bucket 1), cached row untouched
+    d1 = engine.stats.dispatches
+    lo2 = np.stack([lo[0], lo[0] + 101.0])
+    hi2 = np.stack([hi[0], hi[0] + 101.0])
+    v3, j3 = engine.topk_ia(lo2, hi2, K)
+    assert engine.stats.dispatches == d1 + 1
+    assert engine.stats.result_cache_hits == hits0 + 5 * N_QUERIES + 1
+    np.testing.assert_array_equal(np.asarray(v3[0]), np.asarray(v1[0]))
+
+    # per-op result counters ride along in per_op
+    per = engine.stats.per_op["topk_ia"]
+    assert per["result_hits"] == N_QUERIES + 1
+    assert per["result_misses"] == N_QUERIES + 1
+    # the executable-cache invariant is untouched by the result cache
+    s = engine.stats
+    assert s.cache_hits + s.cache_misses == s.dispatches
+
+
+def test_result_cache_dedupes_in_batch_duplicates(env):
+    """Duplicate queries INSIDE one cold batch dispatch once: the twin
+    rows ride the same dispatch (booked as result-cache hits), and every
+    answered row is counted in stats.queries exactly once."""
+    datasets, repo, _, lo, hi, *_ = env
+    engine = QueryEngine(repo)
+    lo2 = np.stack([lo[0], lo[0]])
+    hi2 = np.stack([hi[0], hi[0]])
+    v, j = engine.topk_ia(lo2, hi2, K)
+    np.testing.assert_array_equal(np.asarray(v[0]), np.asarray(v[1]))
+    np.testing.assert_array_equal(np.asarray(j[0]), np.asarray(j[1]))
+    s = engine.stats
+    assert s.result_cache_misses == 1      # one distinct row dispatched
+    assert s.result_cache_hits == 1        # its twin rode that dispatch
+    assert s.queries == 2                  # both rows answered + counted
+    assert s.per_op["topk_ia"]["queries"] == 2
+    assert s.per_op["topk_ia"]["dispatches"] == 1
+
+
+def test_result_cache_lru_bound(env):
+    """The result cache is a bounded LRU: old entries are evicted and
+    re-dispatch on the next request."""
+    datasets, repo, _, lo, hi, *_ = env
+    engine = QueryEngine(repo, result_cache_size=4)
+    rng = np.random.default_rng(3)
+    los = rng.uniform(-60, 40, (6, 2)).astype(np.float32)
+    his = los + 5.0
+    for i in range(6):                     # 6 distinct queries, cache of 4
+        engine.topk_ia(los[i][None], his[i][None], K)
+    assert len(engine._result_cache) == 4
+    d0 = engine.stats.dispatches
+    engine.topk_ia(los[0][None], his[0][None], K)   # evicted -> re-dispatch
+    assert engine.stats.dispatches == d0 + 1
+    engine.topk_ia(los[5][None], his[5][None], K)   # still resident -> hit
+    assert engine.stats.dispatches == d0 + 1
+
+
 def test_exact_hausdorff_matches_brute(env):
     datasets, repo, engine, _, _, q_sets, q_batch, _ = env
     Q = q_sets[1]
@@ -234,7 +389,9 @@ def test_stats_hit_miss_consistent_across_ops(env):
     EngineStats.count — the invariant hits + misses == dispatches holds for
     the engine totals AND for every per-op breakdown."""
     datasets, repo, _, lo, hi, q_sets, _, sigs = env
-    engine = QueryEngine(repo)           # fresh engine: clean counters
+    # fresh engine, result cache off: this test repeats identical inputs
+    # to exercise the EXECUTABLE cache, which the result LRU would mask
+    engine = QueryEngine(repo, result_cache_size=0)
     ds_ids = np.array([1, 4, 7, 2, 9], np.int32)
     q_batch = engine.build_queries(q_sets)      # counted: "build_queries"
     for _ in range(2):                   # second pass: all hits

@@ -7,7 +7,10 @@ tolerance) on forced 8-device host meshes, covering
   * all seven serving ops, including the genuinely sharded ExactHaus
     (per-shard phase-2 loops + tau all-reduce) checked against the host
     oracle `topk_hausdorff_host` — values and ids bit-identical, bound
-    counters equal, `evaluated <= candidates_after_bounds`,
+    counters equal, `evaluated <= candidates_after_bounds` — both
+    per-query AND as a (B, ...) batch in one dispatch (the shared
+    per-shard phase-2 work frontier, across query-bucket and slot
+    padding),
   * duplicate-LB / duplicate-value ties at the top-k boundary (cloned
     datasets) under 8- and 3-shard schedules,
   * uneven shard remainders (num_datasets not divisible by the shard
@@ -142,6 +145,22 @@ def check_sharded_equivalence_8dev():
             assert s2.candidates_after_bounds == sh.candidates_after_bounds
             assert 0 < s2.exact_evaluations <= s2.candidates_after_bounds
 
+    # BATCHED ExactHaus on the sharded engine: the whole ragged batch in
+    # ONE dispatch (shared per-shard phase-2 frontier, batched tau
+    # all-reduce) — every row bit-identical to its solo host-oracle run
+    for k in (K, repo.n_slots):
+        vb, ib, sb = sng.topk_hausdorff(q_batch, k)
+        assert vb.shape[0] == B and len(sb) == B
+        for i in range(B):
+            qi = jax.tree.map(lambda x, i=i: x[i], q_batch)
+            vh, ih, sh = search.topk_hausdorff_host(repo, qi, k)
+            np.testing.assert_array_equal(np.asarray(vb[i]), np.asarray(vh))
+            np.testing.assert_array_equal(np.asarray(ib[i]), np.asarray(ih))
+            assert sb[i].nodes_evaluated == sh.nodes_evaluated
+            assert (sb[i].candidates_after_bounds
+                    == sh.candidates_after_bounds)
+            assert sb[i].exact_evaluations <= sb[i].candidates_after_bounds
+
     # shared stats plumbing: every sharded dispatch books a hit or a miss
     s = sng.stats
     assert s.cache_hits + s.cache_misses == s.dispatches
@@ -194,6 +213,15 @@ def check_sharded_uneven_shards():
         assert s2.nodes_evaluated == sh.nodes_evaluated
         assert s2.candidates_after_bounds == sh.candidates_after_bounds
         assert s2.exact_evaluations <= s2.candidates_after_bounds
+    # batched ExactHaus across the same slot padding AND the query-bucket
+    # padding (5 queries -> bucket 8): rows bit-identical to solo host runs
+    vb, ib, sb = sng.topk_hausdorff(q_batch, K)
+    for i in range(len(q_sets)):
+        qi = jax.tree.map(lambda x, i=i: x[i], q_batch)
+        vh, ih, sh = search.topk_hausdorff_host(repo, qi, K)
+        np.testing.assert_array_equal(np.asarray(vb[i]), np.asarray(vh))
+        np.testing.assert_array_equal(np.asarray(ib[i]), np.asarray(ih))
+        assert sb[i].candidates_after_bounds == sh.candidates_after_bounds
     print("SHARDED_UNEVEN_OK")
 
 

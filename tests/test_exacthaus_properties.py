@@ -14,7 +14,11 @@ and sharded):
     extra candidates get evaluated, never the returned set);
   * phase 2 never evaluates more candidates than survive the bound
     phases: `exact_evaluations <= candidates_after_bounds`, and the
-    bound-phase counters agree across every schedule.
+    bound-phase counters agree across every schedule;
+  * BATCHED runs (one shared phase-2 work frontier per dispatch): every
+    query in a random batch — ragged per-query point counts, duplicate
+    queries, batch sizes straddling bucket boundaries — is bit-identical
+    to its solo `topk_hausdorff_host` run on both dispatchers.
 
 Runs under hypothesis when installed (the CI path); without it the same
 properties run over a seeded random sweep so the suite never silently
@@ -123,12 +127,79 @@ def _run_case(repo_seed: int, q_seed: int, q_size: int, k: int):
     assert sd.exact_evaluations == sh.exact_evaluations
 
 
+BATCH_SIZES = (1, 3, 5, 9)   # below / straddling / above bucket boundaries
+
+
+def _run_batched_case(repo_seed: int, q_seed: int, batch: int, k: int):
+    """Every query in a random (B, ...) ExactHaus batch must be
+    bit-identical to its solo `topk_hausdorff_host` run, on BOTH
+    dispatchers — ragged per-query point counts (mixed sizes padded into
+    one bucket), duplicate queries inside the batch, duplicate-LB ties
+    (the repo pool interleaves cloned datasets), and batch sizes that
+    straddle bucket boundaries."""
+    datasets, repo, eng, sng = _env(repo_seed)
+    rng = np.random.default_rng(q_seed)
+    qs = []
+    for _ in range(batch):
+        base = datasets[int(rng.integers(len(datasets)))]
+        q_size = Q_SIZES[int(rng.integers(len(Q_SIZES)))]   # ragged sizes
+        take = rng.integers(0, len(base), q_size)
+        qs.append((base[take]
+                   + rng.normal(size=(q_size, 2)) * 0.5).astype(np.float32))
+    if batch >= 2:
+        qs[-1] = qs[0].copy()     # duplicate query inside the batch
+
+    q_batch = eng.build_queries(qs)
+    for engine in (eng, sng):
+        vals, ids, stats = engine.topk_hausdorff(q_batch, k)
+        assert vals.shape == (batch, min(k, repo.n_slots))
+        assert len(stats) == batch
+        for b in range(batch):
+            qi = jax.tree.map(lambda x, b=b: x[b], q_batch)
+            vh, ih, sh = search.topk_hausdorff_host(repo, qi, k)
+            np.testing.assert_array_equal(np.asarray(vals[b]),
+                                          np.asarray(vh))
+            np.testing.assert_array_equal(np.asarray(ids[b]),
+                                          np.asarray(ih))
+            # bound phases are schedule-independent; phase-2 never
+            # evaluates more than the candidate set
+            assert stats[b].nodes_evaluated == sh.nodes_evaluated
+            assert (stats[b].candidates_after_bounds
+                    == sh.candidates_after_bounds)
+            assert 0 <= stats[b].exact_evaluations \
+                <= stats[b].candidates_after_bounds
+        if engine is eng:
+            # same chunk => each query's phase-2 trajectory is its solo
+            # loop in lockstep: evaluated matches the host loop exactly
+            for b in range(batch):
+                qi = jax.tree.map(lambda x, b=b: x[b], q_batch)
+                _, _, sh = search.topk_hausdorff_host(repo, qi, k)
+                assert stats[b].exact_evaluations == sh.exact_evaluations
+    # duplicate rows in one batch return identical answers
+    if batch >= 2:
+        vals, ids, _ = eng.topk_hausdorff(q_batch, k)
+        np.testing.assert_array_equal(np.asarray(vals[-1]),
+                                      np.asarray(vals[0]))
+        np.testing.assert_array_equal(np.asarray(ids[-1]),
+                                      np.asarray(ids[0]))
+
+
 def _case_from_seed(seed: int):
     rng = np.random.default_rng(seed)
     return (
         REPO_SEEDS[int(rng.integers(len(REPO_SEEDS)))],
         int(rng.integers(2**31 - 1)),
         Q_SIZES[int(rng.integers(len(Q_SIZES)))],
+        K_POOL[int(rng.integers(len(K_POOL)))],
+    )
+
+
+def _batched_case_from_seed(seed: int):
+    rng = np.random.default_rng(seed)
+    return (
+        REPO_SEEDS[int(rng.integers(len(REPO_SEEDS)))],
+        int(rng.integers(2**31 - 1)),
+        BATCH_SIZES[int(rng.integers(len(BATCH_SIZES)))],
         K_POOL[int(rng.integers(len(K_POOL)))],
     )
 
@@ -145,7 +216,23 @@ if HAVE_HYPOTHESIS:
     def test_exacthaus_matches_brute_and_host(repo_seed, q_seed, q_size, k):
         _run_case(repo_seed, q_seed, q_size, k)
 
+    @given(
+        repo_seed=st.sampled_from(REPO_SEEDS),
+        q_seed=st.integers(0, 2**31 - 1),
+        batch=st.sampled_from(BATCH_SIZES),
+        k=st.sampled_from(K_POOL),
+    )
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_exacthaus_batched_matches_solo_host(repo_seed, q_seed, batch,
+                                                 k):
+        _run_batched_case(repo_seed, q_seed, batch, k)
+
 else:
     @pytest.mark.parametrize("seed", range(10))
     def test_exacthaus_matches_brute_and_host(seed):
         _run_case(*_case_from_seed(seed))
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_exacthaus_batched_matches_solo_host(seed):
+        _run_batched_case(*_batched_case_from_seed(seed))
