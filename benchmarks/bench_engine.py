@@ -25,7 +25,12 @@ Both modes also run the BATCHED ExactHaus sweep (`exact_hausdorff_batched`
 section): batch 1..64 query-index batches answered in ONE branch-and-bound
 dispatch (shared phase-2 work frontier) vs the per-query dispatch loop
 (one engine dispatch per query — the pre-batching serving shape), on a
-serving-shaped corpus of its own.  All engines run with the result cache
+serving-shaped corpus of its own, AND the MIXED-OP sweep (`mixed_ops`
+section): heterogeneous declarative batches — all seven ops plus a
+dataset->point pipeline kind — answered with ONE `engine.search` call vs
+the per-op grouped-dispatch loop over the same rows (hand grouping + one
+engine call per (op, statics) group + host id handoff for pipelines, the
+pre-redesign serving shape).  All engines run with the result cache
 disabled so repeated timing iterations measure dispatch, not memoization.
 ``--max-batch`` trims every sweep (the CI bench-smoke step uses it).
 
@@ -58,6 +63,7 @@ from repro.engine.sharded import data_mesh, repo_device_bytes
 
 BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 EXACT_BATCHES = (1, 2, 4, 8, 16, 32, 64)
+MIXED_BATCHES = (1, 2, 4, 8, 16, 32, 64)
 EXACT_SHARD_COUNTS = (1, 3, 8)
 
 # ExactHaus batched-QPS corpus: the online serving shape — many small-ish
@@ -133,6 +139,134 @@ def bench_exacthaus_batched(engine_ctor, repeats, *, max_batch=None,
         },
         "batches": rows,
     }
+
+
+def _block_mixed(outs):
+    """Block on every device leaf of a mixed result list (SearchResults
+    and raw arrays alike)."""
+    leaves = []
+    for r in outs:
+        if hasattr(r, "op"):
+            for x in (r.vals, r.ids, r.mask):
+                if x is not None:
+                    leaves.append(x)
+        else:
+            leaves.append(r)
+    jax.block_until_ready(leaves)
+    return outs
+
+
+def make_mixed_pool(repo, lake, n: int, k: int, eps, seed: int = 2):
+    """A declarative query pool cycling all seven ops plus a pipeline kind
+    (top-3 IA datasets -> RangeP inside the winners) — the heterogeneous
+    traffic shape the unified search() API exists for."""
+    from repro.core import zorder as zorder_lib
+    from repro.engine.query import Pipeline, Query
+
+    rng = np.random.default_rng(seed)
+    n_ds = len(lake)
+    sig_fn = jax.jit(lambda p, v: zorder_lib.signature(
+        p, v, repo.space_lo, repo.space_hi, 5))
+    pool = []
+    for i in range(n):
+        c = rng.uniform(10, 90, 2).astype(np.float32)
+        lo, hi = c - 4.0, c + 4.0
+        kind = i % 8
+        if kind == 0:
+            pool.append(Query(op="range_search", r_lo=lo, r_hi=hi))
+        elif kind == 1:
+            pool.append(Query(op="topk_ia", r_lo=lo, r_hi=hi, k=k))
+        elif kind == 2:
+            q = lake[int(rng.integers(n_ds))]
+            sig = np.asarray(sig_fn(jnp.asarray(q),
+                                    jnp.ones(len(q), bool)))
+            pool.append(Query(op="topk_gbo", q_sig=sig, k=k))
+        elif kind == 3:
+            q = lake[int(rng.integers(n_ds))][:64]
+            pool.append(Query(op="topk_hausdorff_approx", q=q, k=k,
+                              eps=eps))
+        elif kind == 4:
+            q = lake[int(rng.integers(n_ds))][:24]
+            pool.append(Query(op="topk_hausdorff", q=q, k=k, chunk=8))
+        elif kind == 5:
+            pool.append(Query(op="range_points",
+                              ds_id=int(rng.integers(n_ds)),
+                              r_lo=lo, r_hi=hi))
+        elif kind == 6:
+            q = lake[int(rng.integers(n_ds))][:64]
+            pool.append(Query(op="nnp", ds_id=int(rng.integers(n_ds)),
+                              q=q))
+        else:
+            pool.append(Pipeline(
+                Query(op="topk_ia", r_lo=c - 10.0, r_hi=c + 10.0, k=3),
+                Query(op="range_points", r_lo=lo, r_hi=hi)))
+    return pool
+
+
+def bench_mixed_ops(engine, repo, lake, k, eps, repeats, *,
+                    max_batch=None):
+    """Mixed-op QPS sweep: ONE declarative `engine.search` call for a
+    heterogeneous batch vs the per-op grouped-dispatch loop (group the
+    same rows by (op, statics) by hand, one engine call per group, with
+    the HOST id handoff for pipelines — the pre-redesign serving shape).
+    Both sides run the SAME query rows per batch size, on the same engine
+    with the result cache off, so the ratio isolates the single-entry
+    planning win (shared drains, no per-op Python passes, device-side
+    pipeline handoff)."""
+    from collections import OrderedDict
+
+    from repro.engine.query import Pipeline
+
+    batches = [b for b in MIXED_BATCHES
+               if max_batch is None or b <= max_batch]
+    pool = make_mixed_pool(repo, lake, max(batches), k, eps)
+
+    def grouped(items):
+        out = []
+        groups: "OrderedDict[tuple, list]" = OrderedDict()
+        for it in items:
+            if isinstance(it, Pipeline):
+                key = ("pipeline", it.dataset_stage.op,
+                       it.dataset_stage.statics())
+            else:
+                key = (it.op,) + it.statics()
+            groups.setdefault(key, []).append(it)
+        for key, its in groups.items():
+            if key[0] == "pipeline":
+                # two-call host baseline: ids leave the device per request
+                s1 = engine.search([it.dataset_stage for it in its])
+                for it, r1 in zip(its, s1):
+                    ids = np.asarray(r1.ids)
+                    safe = np.where(ids >= 0, ids, 0)
+                    kk = len(ids)
+                    ps = it.point_stage
+                    out.append(engine.range_points(
+                        safe, np.broadcast_to(ps.r_lo, (kk, 2)),
+                        np.broadcast_to(ps.r_hi, (kk, 2))))
+            else:
+                out.extend(engine.search(its))
+        return out
+
+    rows = []
+    for b in batches:
+        items = pool[:b]
+        # 5 best-of trials: the mixed/grouped ratio is near 1 by
+        # construction (same dispatch groups), so scheduler noise on small
+        # shared CPUs — especially under an 8-forced-device host mesh —
+        # needs more trials than the coarser sweeps to not flip the sign
+        t_mixed = _time_best(lambda: _block_mixed(engine.search(items)),
+                             repeats=repeats, trials=5)
+        t_grouped = _time_best(lambda: _block_mixed(grouped(items)),
+                               repeats=repeats, trials=5)
+        rows.append({
+            "batch": b,
+            "seconds_per_batch": t_mixed,
+            "qps": b / t_mixed,
+            "grouped_seconds": t_grouped,
+            "grouped_qps": b / t_grouped,
+            "speedup_vs_grouped": t_grouped / t_mixed,
+        })
+    return {"kinds": 8, "pipeline_every": 8, "batches": rows}
 
 
 def bench_exacthaus(repo, qi, k, repeats):
@@ -346,6 +480,12 @@ def main(argv=None):
     exact_batched = bench_exacthaus_batched(
         exact_ctor, max(2, args.repeats // 2), max_batch=args.max_batch)
 
+    # mixed-op declarative batches through the unified search() entry
+    # point vs the per-op grouped-dispatch loop, on the main corpus
+    mixed = bench_mixed_ops(engine, repo, lake, k, eps,
+                            max(2, args.repeats // 2),
+                            max_batch=args.max_batch)
+
     def speedup_at(rec_op, b):
         """(actual_batch, speedup) for the largest swept batch <= b — the
         key is NAMED with the actual batch so a --max-batch smoke record
@@ -360,6 +500,10 @@ def main(argv=None):
         summary[f"{name}_speedup_at_{b}"] = s
     b, s = speedup_at(exact_batched, 32)
     summary[f"exact_hausdorff_batched_speedup_at_{b}"] = s
+    mrows = [r for r in mixed["batches"] if r["batch"] <= 32]
+    if mrows:
+        summary[f"mixed_ops_speedup_at_{mrows[-1]['batch']}"] = \
+            mrows[-1]["speedup_vs_grouped"]
     if exact is not None and exact["rows"]:
         base_bytes = exact["rows"][0]["per_device_repo_bytes"]
         summary["exacthaus_per_device_mem_ratio_max_shards"] = (
@@ -381,6 +525,7 @@ def main(argv=None):
         "ops": ops,
         "exact_hausdorff": exact,
         "exact_hausdorff_batched": exact_batched,
+        "mixed_ops": mixed,
         "summary": summary,
         "engine_stats": {
             "dispatches": engine.stats.dispatches,

@@ -3,11 +3,14 @@
     PYTHONPATH=src python examples/serve_points.py
 
 Simulates the deployed system: a resident Spadas QueryEngine answers
-micro-batched RangeP/NNP requests through the search serving front-end
+declarative search requests through the unified `engine.search` API
 (retrieval), while the trajectory LM serves batched decode steps
-(generation) — the two workloads the production mesh hosts.  The old
-per-request host loop is gone: every group of requests is one device
-dispatch.
+(generation) — the two workloads the production mesh hosts.  Requests are
+frozen `Query` / `Pipeline` specs: one mixed batch covers point queries
+(RangeP), dataset queries, and the paper's dataset->point pipeline (top-k
+datasets, then search points inside the winners) in a single engine call;
+the online path pushes the same specs through the SearchServer's
+continuous micro-batching.
 """
 import time
 
@@ -15,9 +18,9 @@ import numpy as np
 
 from repro.core.build import build_repository
 from repro.data import synthetic
-from repro.engine import QueryEngine
+from repro.engine import Pipeline, Query, QueryEngine
 from repro.launch import serve as serve_driver
-from repro.launch.serve_search import SearchServer, ServerStats
+from repro.launch.serve_search import SearchServer
 
 
 def main():
@@ -25,33 +28,40 @@ def main():
     lake = synthetic.trajectory_repository(64, seed=0)
     repo, info = build_repository(lake, leaf_capacity=16, theta=5)
     engine = QueryEngine(repo)
-    server = SearchServer(engine, max_batch=32).start()
 
     rng = np.random.default_rng(0)
     n_requests = 16
     boxes = [rng.uniform(20, 80, 2).astype(np.float32)
              for _ in range(n_requests)]
 
-    # warmup burst (compile the bucketed executables once)
-    warm = [server.submit("range_points", ds_id=i % 64, r_lo=c - 2.0,
-                          r_hi=c + 2.0) for i, c in enumerate(boxes)]
-    for f in warm:
-        f.result(timeout=600)
-    server.stats = ServerStats()       # report the measured window only
-
-    t0 = time.time()
-    futures = [
-        server.submit("range_points", ds_id=i % 64, r_lo=c - 2.0,
-                      r_hi=c + 2.0)
+    # one declarative mixed batch: RangeP rows for every box PLUS a
+    # dataset->point pipeline (top-3 IA datasets, then RangeP inside the
+    # winners — the id handoff never leaves the device)
+    batch = [
+        Query(op="range_points", ds_id=i % 64, r_lo=c - 2.0, r_hi=c + 2.0)
         for i, c in enumerate(boxes)
     ]
-    hits = sum(int(np.asarray(f.result(timeout=600)).sum())
-               for f in futures)
-    dt = time.time() - t0
-    print(f"[retrieval] {n_requests} RangeP requests in {dt*1e3:.1f} ms "
-          f"({hits} points returned, "
-          f"{server.stats.batches} device batches)")
+    c0 = boxes[0]
+    batch.append(Pipeline(
+        Query(op="topk_ia", r_lo=c0 - 10.0, r_hi=c0 + 10.0, k=3),
+        Query(op="range_points", r_lo=c0 - 2.0, r_hi=c0 + 2.0)))
 
+    engine.search(batch)               # warmup: compile the bucketed execs
+    g0 = engine.stats.plan_groups
+    t0 = time.time()
+    results = engine.search(batch)
+    hits = sum(int(np.asarray(r.mask).sum()) for r in results[:-1])
+    pipe = results[-1]
+    dt = time.time() - t0
+    print(f"[retrieval] {n_requests} RangeP + 1 pipeline in {dt*1e3:.1f} ms "
+          f"({hits} points returned; pipeline winners "
+          f"{np.asarray(pipe.extras['ds_ids']).tolist()} -> "
+          f"{int(np.asarray(pipe.mask).sum())} points, "
+          f"{engine.stats.plan_groups - g0} dispatch groups planned)")
+
+    # the same specs flow through the online server (continuous
+    # micro-batching; submit() is a thin Query-constructing shim)
+    server = SearchServer(engine, max_batch=32).start()
     Q = lake[1][:256]
     server.submit("nnp", ds_id=0, q=Q).result(timeout=600)  # warmup
     d0 = engine.stats.dispatches

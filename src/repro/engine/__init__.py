@@ -8,6 +8,11 @@ is pluggable: `ShardedQueryEngine` shards the resident repository's
 dataset slots over the ``data`` mesh axis and merges per-shard results on
 device (`merge` holds the O(k) top-k merge helpers), bit-identical to the
 single-device engine.
+
+The DECLARATIVE front door is `QueryEngine.search(list[Query | Pipeline])
+-> list[SearchResult]` (`query` holds the frozen specs, `plan` the
+mixed-batch planner); the per-op batch methods survive as deprecated
+shims over it.
 """
 from repro.engine.batched_ops import (  # noqa: F401
     nnp_pruned_batched,
@@ -22,6 +27,14 @@ from repro.engine.engine import (  # noqa: F401
     EngineStats,
     LocalDispatcher,
     QueryEngine,
+)
+from repro.engine.query import (  # noqa: F401
+    DATASET_TOPK_OPS,
+    OPS,
+    POINT_OPS,
+    Pipeline,
+    Query,
+    SearchResult,
 )
 from repro.engine.sharded import (  # noqa: F401
     ShardedDispatcher,

@@ -43,6 +43,15 @@ callables they cache.
 Query point sets are themselves bucketed: `build_queries` pads a ragged
 list of point sets to a power-of-two point capacity and builds all their
 ball-tree indexes in one vmapped build.
+
+The public entry point is the DECLARATIVE one: :meth:`QueryEngine.search`
+takes a mixed ``list[Query | Pipeline]`` (see :mod:`repro.engine.query`),
+compiles it into per-(op, statics, query-shape) dispatch groups
+(:mod:`repro.engine.plan`), and returns one uniform :class:`SearchResult`
+per input, in input order.  The per-op batch methods (``range_search``,
+``topk_ia``, ...) are kept as DEPRECATED wrappers that construct Query
+rows and delegate to ``search()`` — same results, same stats accounting,
+one extra split/stack per batch.
 """
 from __future__ import annotations
 
@@ -57,11 +66,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import index as index_lib
-from repro.core import search
+from repro.core import point_search, search
 from repro.core.build import pad_batch
 from repro.core.index import DatasetIndex
 from repro.core.repo_index import Repository
 from repro.engine import batched_ops
+from repro.engine import plan as plan_lib
+from repro.engine.query import Pipeline, Query, SearchResult  # noqa: F401
 
 Array = jax.Array
 
@@ -118,6 +129,13 @@ class EngineStats:
     query rows answered from memoized results (no dispatch at all), while
     ``cache_hits``/``cache_misses`` keep describing compiled-executable
     reuse for the dispatches that do run.
+
+    The PLANNER books its own counters on top (:meth:`count_group`):
+    ``plan_groups`` / ``group_counts[op]`` count the dispatch groups a
+    ``search()`` call compiled (one group = one batched dispatch path, op
+    groups and pipeline stage-2 groups alike), and ``pipeline_stage1`` /
+    ``pipeline_stage2`` count pipeline queries whose respective stage
+    executed.  None of these touch the executable-cache invariant.
     """
     queries: int = 0                 # client queries ANSWERED (ops only)
     dispatches: int = 0
@@ -126,6 +144,10 @@ class EngineStats:
     padded_queries: int = 0          # bucket padding overhead actually paid
     result_cache_hits: int = 0       # query rows served from the result LRU
     result_cache_misses: int = 0     # query rows that had to dispatch
+    plan_groups: int = 0             # dispatch groups compiled by search()
+    pipeline_stage1: int = 0         # pipelines whose dataset stage ran
+    pipeline_stage2: int = 0         # pipelines whose point stage ran
+    group_counts: dict = field(default_factory=dict)   # op -> groups
     per_op: dict = field(default_factory=dict)
 
     def count(self, op: str, batch: int, bucket: int, *,
@@ -167,30 +189,46 @@ class EngineStats:
         per["result_hits"] = per.get("result_hits", 0) + hits
         per["result_misses"] = per.get("result_misses", 0) + misses
 
-    def record_search(self, op: str, stats) -> None:
-        """Fold one dispatch's :class:`~repro.core.search.SearchStats` into
-        the per-op breakdown — a single query's stats or a SEQUENCE of
-        per-query stats from one batched dispatch.  Counters (nodes,
-        candidates, exact evaluations) accumulate as sums across the batch;
-        ``pruned_fraction`` records the latest dispatch's mean across its
-        queries.  ExactHaus books these on every dispatch (the engine never
-        discards its SearchStats)."""
+    def count_group(self, op: str) -> None:
+        """Record ONE dispatch group compiled by the planner (an op group
+        of a mixed batch, or a pipeline stage-2 group booked under its
+        point op's name).  Kept in ``group_counts`` — NOT inside
+        ``per_op`` — so the per-op hit/miss/dispatch breakdown stays
+        exactly the executable-dispatch accounting."""
+        self.plan_groups += 1
+        self.group_counts[op] = self.group_counts.get(op, 0) + 1
+
+    def _fold_stats(self, op: str, stats, fields: tuple) -> None:
+        """Shared fold for one dispatch's per-query stats (a single stats
+        value or a sequence from one batched dispatch): each named counter
+        field accumulates as a sum across the batch, ``pruned_fraction``
+        records the latest dispatch's mean across its queries."""
         batch = list(stats) if isinstance(stats, (list, tuple)) else [stats]
         if not batch:
             return
         per = self.per_op.setdefault(
             op, {"queries": 0, "dispatches": 0, "hits": 0, "misses": 0})
-        per["nodes_evaluated"] = (
-            per.get("nodes_evaluated", 0)
-            + sum(s.nodes_evaluated for s in batch))
-        per["candidates_after_bounds"] = (
-            per.get("candidates_after_bounds", 0)
-            + sum(s.candidates_after_bounds for s in batch))
-        per["exact_evaluations"] = (
-            per.get("exact_evaluations", 0)
-            + sum(s.exact_evaluations for s in batch))
+        for name in fields:
+            per[name] = (per.get(name, 0)
+                         + sum(getattr(s, name) for s in batch))
         per["pruned_fraction"] = (
             sum(s.pruned_fraction for s in batch) / len(batch))
+
+    def record_point_search(self, op: str, stats) -> None:
+        """Fold one point-granularity dispatch's per-query
+        :class:`~repro.core.point_search.PointStats` into the per-op
+        breakdown — the point-op sibling of :meth:`record_search`
+        (RangeP books leaf-slab pruning, NNP the Eq. 4 pair-grid
+        pruning)."""
+        self._fold_stats(op, stats, ("nodes_evaluated", "leaves_scanned"))
+
+    def record_search(self, op: str, stats) -> None:
+        """Fold one dispatch's :class:`~repro.core.search.SearchStats` into
+        the per-op breakdown.  ExactHaus books these on every dispatch
+        (the engine never discards its SearchStats)."""
+        self._fold_stats(op, stats, ("nodes_evaluated",
+                                     "candidates_after_bounds",
+                                     "exact_evaluations"))
 
 
 class LocalDispatcher:
@@ -400,19 +438,28 @@ class QueryEngine:
                          cached=cached, internal=True)
         return jax.tree.map(lambda x: x[: len(pointsets)], q_batch)
 
-    # -- dataset-granularity ops ------------------------------------------
+    # -- declarative entry point ------------------------------------------
 
-    def _range_search_dispatch(self, r_lo, r_hi):
-        B = r_lo.shape[0]
-        bucket = self.bucket_for(B)
-        fn, cached = self._executable(
-            ("range_search", bucket), self.dispatch.build_range_search)
-        masks, _ = fn(self._pad_rows(r_lo, bucket),
-                      self._pad_rows(r_hi, bucket))
-        self.stats.count("range_search", B, bucket, cached=cached)
-        return masks[:B]
+    def search(self, queries: Sequence) -> list:
+        """THE unified entry point: answer a mixed declarative batch.
 
-    def range_search(self, r_lo, r_hi):
+        ``queries`` is a list of :class:`~repro.engine.query.Query` and/or
+        :class:`~repro.engine.query.Pipeline` values covering any mix of
+        the seven ops.  The planner (:mod:`repro.engine.plan`) compiles
+        the batch into per-(op, statics, query-shape) dispatch groups —
+        each group one batched dispatch over the bucket ladder, executable
+        cache, and result cache (cache hits short-circuit per row) — runs
+        pipeline dataset stages inside those groups, then feeds the
+        winning dataset ids to the point stages with the id handoff
+        staying on device.  Returns one
+        :class:`~repro.engine.query.SearchResult` per input, in INPUT
+        order.
+        """
+        return plan_lib.execute(self, queries)
+
+    # -- per-op group executors (one batched dispatch path each) ----------
+
+    def _exec_range_search(self, r_lo, r_hi):
         """RangeS for B query boxes -> dataset masks (B, B_pad)."""
         r_lo = jnp.atleast_2d(jnp.asarray(r_lo, jnp.float32))
         r_hi = jnp.atleast_2d(jnp.asarray(r_hi, jnp.float32))
@@ -428,18 +475,17 @@ class QueryEngine:
             split=lambda masks: [masks[i] for i in range(masks.shape[0])],
             join=jnp.stack)
 
-    def _topk_ia_dispatch(self, q_lo, q_hi, k: int):
-        B = q_lo.shape[0]
+    def _range_search_dispatch(self, r_lo, r_hi):
+        B = r_lo.shape[0]
         bucket = self.bucket_for(B)
         fn, cached = self._executable(
-            ("topk_ia", bucket, k),
-            lambda: self.dispatch.build_topk_ia(k))
-        vals, ids = fn(self._pad_rows(q_lo, bucket),
-                       self._pad_rows(q_hi, bucket))
-        self.stats.count("topk_ia", B, bucket, cached=cached)
-        return vals[:B], ids[:B]
+            ("range_search", bucket), self.dispatch.build_range_search)
+        masks, _ = fn(self._pad_rows(r_lo, bucket),
+                      self._pad_rows(r_hi, bucket))
+        self.stats.count("range_search", B, bucket, cached=cached)
+        return masks[:B]
 
-    def topk_ia(self, q_lo, q_hi, k: int):
+    def _exec_topk_ia(self, q_lo, q_hi, k: int):
         """Top-k IA for B query boxes -> (vals, ids) each (B, k)."""
         q_lo = jnp.atleast_2d(jnp.asarray(q_lo, jnp.float32))
         q_hi = jnp.atleast_2d(jnp.asarray(q_hi, jnp.float32))
@@ -454,17 +500,18 @@ class QueryEngine:
                 _take_rows(q_lo, sel), _take_rows(q_hi, sel), k),
             split=_split_tuple, join=_join_tuple)
 
-    def _topk_gbo_dispatch(self, q_sigs, k: int):
-        B = q_sigs.shape[0]
+    def _topk_ia_dispatch(self, q_lo, q_hi, k: int):
+        B = q_lo.shape[0]
         bucket = self.bucket_for(B)
         fn, cached = self._executable(
-            ("topk_gbo", bucket, k),
-            lambda: self.dispatch.build_topk_gbo(k))
-        vals, ids = fn(self._pad_rows(q_sigs, bucket))
-        self.stats.count("topk_gbo", B, bucket, cached=cached)
+            ("topk_ia", bucket, k),
+            lambda: self.dispatch.build_topk_ia(k))
+        vals, ids = fn(self._pad_rows(q_lo, bucket),
+                       self._pad_rows(q_hi, bucket))
+        self.stats.count("topk_ia", B, bucket, cached=cached)
         return vals[:B], ids[:B]
 
-    def topk_gbo(self, q_sigs, k: int):
+    def _exec_topk_gbo(self, q_sigs, k: int):
         """Top-k GBO for B query signatures -> (vals, ids) each (B, k)."""
         q_sigs = jnp.asarray(q_sigs)
         if q_sigs.ndim == 1:
@@ -479,19 +526,20 @@ class QueryEngine:
             lambda sel: self._topk_gbo_dispatch(_take_rows(q_sigs, sel), k),
             split=_split_tuple, join=_join_tuple)
 
-    def _topk_hausdorff_approx_dispatch(self, q_batch, k: int, eps):
-        B = q_batch.points.shape[0]
+    def _topk_gbo_dispatch(self, q_sigs, k: int):
+        B = q_sigs.shape[0]
         bucket = self.bucket_for(B)
-        key = ("approx_haus", bucket, q_batch.points.shape[1], k)
         fn, cached = self._executable(
-            key, lambda: self.dispatch.build_topk_hausdorff_approx(k))
-        padded = self._pad_tree(q_batch, bucket)
-        vals, ids, eps_eff = fn(padded, eps=jnp.float32(eps))
-        self.stats.count("topk_hausdorff_approx", B, bucket, cached=cached)
-        return vals[:B], ids[:B], eps_eff[:B]
+            ("topk_gbo", bucket, k),
+            lambda: self.dispatch.build_topk_gbo(k))
+        vals, ids = fn(self._pad_rows(q_sigs, bucket))
+        self.stats.count("topk_gbo", B, bucket, cached=cached)
+        return vals[:B], ids[:B]
 
-    def topk_hausdorff_approx(self, q_batch: DatasetIndex, k: int, eps):
-        """ApproHaus for a (B, ...) query-index batch -> (vals, ids, eps_eff)."""
+    def _exec_topk_hausdorff_approx(self, q_batch: DatasetIndex, k: int,
+                                    eps):
+        """ApproHaus for a (B, ...) query-index batch -> (vals, ids,
+        eps_eff)."""
         if not self.result_cache_size:
             return self._topk_hausdorff_approx_dispatch(q_batch, k, eps)
         pts, val = np.asarray(q_batch.points), np.asarray(q_batch.valid)
@@ -505,6 +553,41 @@ class QueryEngine:
             lambda sel: self._topk_hausdorff_approx_dispatch(
                 _take_tree_rows(q_batch, sel), k, eps),
             split=_split_tuple, join=_join_tuple)
+
+    def _topk_hausdorff_approx_dispatch(self, q_batch, k: int, eps):
+        B = q_batch.points.shape[0]
+        bucket = self.bucket_for(B)
+        key = ("approx_haus", bucket, q_batch.points.shape[1], k)
+        fn, cached = self._executable(
+            key, lambda: self.dispatch.build_topk_hausdorff_approx(k))
+        padded = self._pad_tree(q_batch, bucket)
+        vals, ids, eps_eff = fn(padded, eps=jnp.float32(eps))
+        self.stats.count("topk_hausdorff_approx", B, bucket, cached=cached)
+        return vals[:B], ids[:B], eps_eff[:B]
+
+    def _exec_topk_hausdorff(self, q_batch: DatasetIndex, k: int,
+                             refine_levels: int = 3, chunk: int = 32):
+        """ExactHaus for a (B, ...) query-index batch: ONE device dispatch
+        (shared phase-2 work frontier; per-shard loops + batched tau
+        all-reduce under a ShardedDispatcher) -> (vals (B, k), ids (B, k),
+        list[SearchStats])."""
+        if not self.result_cache_size:
+            return self._topk_hausdorff_dispatch(
+                q_batch, k, refine_levels, chunk)
+        pts, val = np.asarray(q_batch.points), np.asarray(q_batch.valid)
+        # depth in the key for the same reason as ApproHaus (a
+        # different tree over the same points changes the SearchStats)
+        keys = [("exact_haus", k, refine_levels, chunk, q_batch.depth,
+                 _digest(pts[i], val[i])) for i in range(pts.shape[0])]
+        return self._serve_cached(
+            "topk_hausdorff", keys,
+            lambda sel: self._topk_hausdorff_dispatch(
+                _take_tree_rows(q_batch, sel), k, refine_levels, chunk),
+            split=lambda raw: [(raw[0][i], raw[1][i], raw[2][i])
+                               for i in range(len(raw[2]))],
+            join=lambda rows: (jnp.stack([r[0] for r in rows]),
+                               jnp.stack([r[1] for r in rows]),
+                               [r[2] for r in rows]))
 
     def _topk_hausdorff_dispatch(self, q_batch, k: int, refine_levels: int,
                                  chunk: int):
@@ -532,10 +615,120 @@ class QueryEngine:
         self.stats.record_search("topk_hausdorff", stats)
         return vals[:B], ids[:B], stats
 
+    def _exec_range_points(self, ds_ids, r_lo, r_hi):
+        """RangeP for B (dataset id, box) requests -> (take masks
+        (B, n_pad), list[PointStats]).  The traversal's scanned-leaf mask
+        is no longer discarded: per-query leaf pruning stats are computed
+        from it (device-side sums, one tiny transfer) and folded into
+        ``EngineStats`` via :meth:`EngineStats.record_point_search`."""
+        ds_ids = jnp.atleast_1d(jnp.asarray(ds_ids, jnp.int32))
+        r_lo = jnp.atleast_2d(jnp.asarray(r_lo, jnp.float32))
+        r_hi = jnp.atleast_2d(jnp.asarray(r_hi, jnp.float32))
+        B = ds_ids.shape[0]
+        bucket = self.bucket_for(B)
+        fn, cached = self._executable(
+            ("range_points", bucket), self.dispatch.build_range_points)
+        take, scanned = fn(self._pad_rows(ds_ids, bucket),
+                           self._pad_rows(r_lo, bucket),
+                           self._pad_rows(r_hi, bucket))
+        self.stats.count("range_points", B, bucket, cached=cached)
+        n_leaves = int(scanned.shape[1])
+        sc = np.asarray(jnp.sum(scanned[:B], axis=1))
+        stats = [
+            point_search.PointStats(
+                n_leaves, int(sc[i]),
+                float(1.0 - int(sc[i]) / max(n_leaves, 1)))
+            for i in range(B)
+        ]
+        self.stats.record_point_search("range_points", stats)
+        return take[:B], stats
+
+    def _exec_nnp(self, ds_ids, q_batch: DatasetIndex):
+        """Tree-pruned NNP for B (query, dataset id) requests ->
+        (dists (B, nq), idx (B, nq), list[PointStats]).
+
+        Dispatch routes through `core/point_search.nnp_pruned_core` (the
+        Eq. 4 pair-grid prune) on BOTH dispatchers, and the surviving
+        ``pair_live`` mask is surfaced as per-query PointStats — the same
+        counters the host `nnp_pruned` reports — instead of being thrown
+        away."""
+        ds_ids = jnp.atleast_1d(jnp.asarray(ds_ids, jnp.int32))
+        B = ds_ids.shape[0]
+        bucket = self.bucket_for(B)
+        fn, cached = self._executable(
+            ("nnp", bucket, q_batch.points.shape[1]),
+            self.dispatch.build_nnp)
+        dists, idxs, pair_live = fn(self._pad_rows(ds_ids, bucket),
+                                    self._pad_tree(q_batch, bucket))
+        self.stats.count("nnp", B, bucket, cached=cached)
+        pairs = int(pair_live.shape[1] * pair_live.shape[2])
+        live = np.asarray(jnp.sum(pair_live[:B], axis=(1, 2)))
+        stats = [
+            point_search.PointStats(
+                pairs, int(live[i]),
+                float(1.0 - int(live[i]) / max(pairs, 1)))
+            for i in range(B)
+        ]
+        self.stats.record_point_search("nnp", stats)
+        return dists[:B], idxs[:B], stats
+
+    # -- legacy per-op batch methods (deprecated shims over search()) -----
+
+    @staticmethod
+    def _host_tree_rows(tree):
+        """Split a (B, ...) index batch into host-array rows (ONE device
+        sync for the whole tree, then free np views) for Query
+        construction in the legacy shims."""
+        np_tree = jax.tree.map(np.asarray, tree)
+        B = np_tree.points.shape[0]
+        return [jax.tree.map(lambda x, i=i: x[i], np_tree)
+                for i in range(B)]
+
+    def range_search(self, r_lo, r_hi):
+        """DEPRECATED shim (use `search`): RangeS for B query boxes ->
+        dataset masks (B, B_pad)."""
+        lo = np.atleast_2d(np.asarray(r_lo, np.float32))
+        hi = np.atleast_2d(np.asarray(r_hi, np.float32))
+        res = self.search([Query(op="range_search", r_lo=lo[i], r_hi=hi[i])
+                           for i in range(lo.shape[0])])
+        return jnp.asarray(np.stack([r.mask for r in res]))
+
+    def topk_ia(self, q_lo, q_hi, k: int):
+        """DEPRECATED shim (use `search`): top-k IA for B query boxes ->
+        (vals, ids) each (B, k)."""
+        lo = np.atleast_2d(np.asarray(q_lo, np.float32))
+        hi = np.atleast_2d(np.asarray(q_hi, np.float32))
+        res = self.search([Query(op="topk_ia", r_lo=lo[i], r_hi=hi[i], k=k)
+                           for i in range(lo.shape[0])])
+        return (jnp.asarray(np.stack([r.vals for r in res])),
+                jnp.asarray(np.stack([r.ids for r in res])))
+
+    def topk_gbo(self, q_sigs, k: int):
+        """DEPRECATED shim (use `search`): top-k GBO for B query
+        signatures -> (vals, ids) each (B, k)."""
+        sigs = np.asarray(q_sigs)
+        if sigs.ndim == 1:
+            sigs = sigs[None, :]
+        res = self.search([Query(op="topk_gbo", q_sig=sigs[i], k=k)
+                           for i in range(sigs.shape[0])])
+        return (jnp.asarray(np.stack([r.vals for r in res])),
+                jnp.asarray(np.stack([r.ids for r in res])))
+
+    def topk_hausdorff_approx(self, q_batch: DatasetIndex, k: int, eps):
+        """DEPRECATED shim (use `search`): ApproHaus for a (B, ...)
+        query-index batch -> (vals, ids, eps_eff)."""
+        res = self.search([
+            Query(op="topk_hausdorff_approx", q_index=row, k=k, eps=eps)
+            for row in self._host_tree_rows(q_batch)])
+        return (jnp.asarray(np.stack([r.vals for r in res])),
+                jnp.asarray(np.stack([r.ids for r in res])),
+                jnp.asarray(np.stack([r.extras["eps_eff"] for r in res])))
+
     def topk_hausdorff(self, q_batch: DatasetIndex, k: int, *,
                        refine_levels: int = 3, chunk: int = 32):
-        """ExactHaus — the device-resident branch-and-bound pipeline for a
-        (B, ...) query-index batch OR a single query index.
+        """DEPRECATED shim (use `search`): ExactHaus — the device-resident
+        branch-and-bound pipeline for a (B, ...) query-index batch OR a
+        single query index.
 
         A batch costs ONE device dispatch (shared phase-2 work frontier;
         per-shard loops + batched tau all-reduce under a
@@ -551,55 +744,36 @@ class QueryEngine:
         single = q_batch.points.ndim == 2
         if single:
             q_batch = jax.tree.map(lambda x: x[None], q_batch)
-        if not self.result_cache_size:
-            vals, ids, stats = self._topk_hausdorff_dispatch(
-                q_batch, k, refine_levels, chunk)
-        else:
-            pts, val = np.asarray(q_batch.points), np.asarray(q_batch.valid)
-            # depth in the key for the same reason as ApproHaus (a
-            # different tree over the same points changes the SearchStats)
-            keys = [("exact_haus", k, refine_levels, chunk, q_batch.depth,
-                     _digest(pts[i], val[i])) for i in range(pts.shape[0])]
-            vals, ids, stats = self._serve_cached(
-                "topk_hausdorff", keys,
-                lambda sel: self._topk_hausdorff_dispatch(
-                    _take_tree_rows(q_batch, sel), k, refine_levels, chunk),
-                split=lambda raw: [(raw[0][i], raw[1][i], raw[2][i])
-                                   for i in range(len(raw[2]))],
-                join=lambda rows: (jnp.stack([r[0] for r in rows]),
-                                   jnp.stack([r[1] for r in rows]),
-                                   [r[2] for r in rows]))
+        res = self.search([
+            Query(op="topk_hausdorff", q_index=row, k=k,
+                  refine_levels=refine_levels, chunk=chunk)
+            for row in self._host_tree_rows(q_batch)])
+        vals = jnp.asarray(np.stack([r.vals for r in res]))
+        ids = jnp.asarray(np.stack([r.ids for r in res]))
+        stats = [r.stats for r in res]
         if single:
             return vals[0], ids[0], stats[0]
         return vals, ids, stats
 
-    # -- point-granularity ops --------------------------------------------
-
     def range_points(self, ds_ids, r_lo, r_hi):
-        """RangeP for B (dataset id, box) requests -> take masks (B, n_pad)."""
-        ds_ids = jnp.atleast_1d(jnp.asarray(ds_ids, jnp.int32))
-        r_lo = jnp.atleast_2d(jnp.asarray(r_lo, jnp.float32))
-        r_hi = jnp.atleast_2d(jnp.asarray(r_hi, jnp.float32))
-        B = ds_ids.shape[0]
-        bucket = self.bucket_for(B)
-        fn, cached = self._executable(
-            ("range_points", bucket), self.dispatch.build_range_points)
-        take, _ = fn(self._pad_rows(ds_ids, bucket),
-                     self._pad_rows(r_lo, bucket),
-                     self._pad_rows(r_hi, bucket))
-        self.stats.count("range_points", B, bucket, cached=cached)
-        return take[:B]
+        """DEPRECATED shim (use `search`): RangeP for B (dataset id, box)
+        requests -> take masks (B, n_pad)."""
+        ds = np.atleast_1d(np.asarray(ds_ids, np.int32))
+        lo = np.atleast_2d(np.asarray(r_lo, np.float32))
+        hi = np.atleast_2d(np.asarray(r_hi, np.float32))
+        res = self.search([
+            Query(op="range_points", ds_id=int(ds[i]), r_lo=lo[i],
+                  r_hi=hi[i])
+            for i in range(ds.shape[0])])
+        return jnp.asarray(np.stack([r.mask for r in res]))
 
     def nnp(self, ds_ids, q_batch: DatasetIndex):
-        """Tree-pruned NNP for B (query, dataset id) requests ->
-        (dists (B, nq), idx (B, nq))."""
-        ds_ids = jnp.atleast_1d(jnp.asarray(ds_ids, jnp.int32))
-        B = ds_ids.shape[0]
-        bucket = self.bucket_for(B)
-        fn, cached = self._executable(
-            ("nnp", bucket, q_batch.points.shape[1]),
-            self.dispatch.build_nnp)
-        dists, idxs, _ = fn(self._pad_rows(ds_ids, bucket),
-                            self._pad_tree(q_batch, bucket))
-        self.stats.count("nnp", B, bucket, cached=cached)
-        return dists[:B], idxs[:B]
+        """DEPRECATED shim (use `search`): tree-pruned NNP for B (query,
+        dataset id) requests -> (dists (B, nq), idx (B, nq))."""
+        ds = np.atleast_1d(np.asarray(ds_ids, np.int32))
+        rows = self._host_tree_rows(q_batch)
+        res = self.search([
+            Query(op="nnp", ds_id=int(ds[i]), q_index=rows[i])
+            for i in range(ds.shape[0])])
+        return (jnp.asarray(np.stack([r.vals for r in res])),
+                jnp.asarray(np.stack([r.ids for r in res])))

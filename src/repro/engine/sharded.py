@@ -401,13 +401,18 @@ class ShardedDispatcher:
 
         def local(repo_loc, ds_ids, q_batch):
             mine, d_sel = self._owner_select(repo_loc, ds_ids)
-            dists, idxs, _ = jax.vmap(point_search.nnp_pruned_core)(
+            dists, idxs, pair_live = jax.vmap(point_search.nnp_pruned_core)(
                 q_batch, d_sel)
             # owner-exclusive merge: + 0.0 and + 0 are exact, so the psum
-            # reproduces the owner's values bit-for-bit
+            # reproduces the owner's values bit-for-bit; the Eq. 4
+            # pair_live prune mask rides along the same way so the engine
+            # can book the pruned fraction (PointStats)
             dists = jax.lax.psum(jnp.where(mine[:, None], dists, 0.0), axis)
             idxs = jax.lax.psum(jnp.where(mine[:, None], idxs, 0), axis)
-            return dists, idxs, jnp.zeros((), jnp.int32)
+            pair_live = jax.lax.psum(
+                jnp.where(mine[:, None, None], pair_live, 0
+                          ).astype(jnp.int32), axis).astype(bool)
+            return dists, idxs, pair_live
 
         sm = self._smap(local, in_specs=(self.specs, P(), P()),
                         out_specs=(P(), P(), P()))

@@ -7,15 +7,21 @@
 The production shape for the paper's *online* multi-granularity search:
 clients submit single queries (mixed types — RangeS / top-k IA / top-k
 GBO / ApproHaus / ExactHaus at dataset granularity, RangeP / NNP at point
-granularity) into a queue; a dispatcher thread drains the queue
-continuously, groups
-compatible requests (same op, same k), and executes each group as ONE
-batched device dispatch through the :class:`QueryEngine`.  Under load the
-batch size grows toward `max_batch` on its own — classic continuous
-batching — so throughput scales with traffic while the executable cache
-keeps compile cost amortized across the bucket ladder.
+granularity, plus two-stage dataset→point PIPELINES) into a queue; a
+dispatcher thread drains the queue continuously and hands the WHOLE mixed
+drain to ``QueryEngine.search`` as one declarative batch.  The engine's
+planner does the grouping the server used to do by hand — compatible
+requests (same op, same static params) share one device dispatch, cache
+hits short-circuit per row, and pipeline stage-1 queries ride the same
+groups as standalone queries.  Under load the batch grows toward
+`max_batch` on its own — classic continuous batching — so throughput
+scales with traffic while the executable cache keeps compile cost
+amortized across the bucket ladder.
 
-Replaces the per-request host loop of the old `examples/serve_points.py`.
+``submit(op=..., **payload)`` is kept as a thin shim that constructs the
+:class:`~repro.engine.query.Query` / :class:`~repro.engine.query.Pipeline`
+at submission time; clients holding ready-made spec objects can enqueue
+them directly with ``submit_query``.
 """
 from __future__ import annotations
 
@@ -37,23 +43,72 @@ import jax
 import numpy as np
 
 from repro.core.repo_index import Repository
-from repro.engine import QueryEngine
+from repro.engine import Pipeline, Query, QueryEngine, SearchResult
 
-# ops the dispatcher knows how to group and batch; topk_hausdorff (the
-# exact branch-and-bound) is batched like every other op — one grouped
-# query-index build and ONE engine dispatch for the group (shared phase-2
-# work frontier) — and its per-request results carry the SearchStats
-# (evaluated count, pruned fraction) the engine surfaces
+# ops the submit() shim knows how to wrap into a Query/Pipeline; the
+# engine's planner handles the grouping, so ANY mix of these may share one
+# queue drain (and pipeline stage-1 rows share dispatches with standalone
+# queries of the same op)
 OPS = (
     "range_search", "topk_ia", "topk_gbo", "topk_hausdorff_approx",
-    "topk_hausdorff", "range_points", "nnp",
+    "topk_hausdorff", "range_points", "nnp", "pipeline",
 )
+
+
+def _to_query(op: str, payload: dict):
+    """The submit() shim: legacy (op, payload) -> declarative spec."""
+    if op == "pipeline":
+        dataset = payload["dataset"]
+        point = payload["point"]
+        return Pipeline(
+            dataset_stage=(dataset if isinstance(dataset, Query)
+                           else _to_query(dataset["op"], dataset)),
+            point_stage=(point if isinstance(point, Query)
+                         else _to_query(point["op"], point)))
+    if op == "range_search":
+        return Query(op=op, r_lo=payload["r_lo"], r_hi=payload["r_hi"])
+    if op == "topk_ia":
+        # legacy payload naming: q_lo/q_hi; pipeline specs may say r_lo
+        lo = payload.get("q_lo", payload.get("r_lo"))
+        hi = payload.get("q_hi", payload.get("r_hi"))
+        return Query(op=op, r_lo=lo, r_hi=hi, k=payload["k"])
+    if op == "topk_gbo":
+        return Query(op=op, q_sig=payload["q_sig"], k=payload["k"])
+    if op == "topk_hausdorff_approx":
+        return Query(op=op, q=payload["q"], k=payload["k"],
+                     eps=payload["eps"])
+    if op == "topk_hausdorff":
+        return Query(op=op, q=payload["q"], k=payload["k"])
+    if op == "range_points":
+        return Query(op=op, ds_id=payload.get("ds_id"),
+                     r_lo=payload["r_lo"], r_hi=payload["r_hi"])
+    if op == "nnp":
+        return Query(op=op, ds_id=payload.get("ds_id"), q=payload["q"])
+    raise ValueError(f"unknown op {op!r}; serving ops: {OPS}")
+
+
+def _legacy_result(res: SearchResult):
+    """Shape a SearchResult like the pre-redesign per-op responses, so
+    existing clients keep unpacking what they always unpacked.  Pipeline
+    responses are new: they hand back the full SearchResult (stage-2
+    rows + ``extras['stage1']``)."""
+    if res.op == "range_search" or res.op == "range_points":
+        return res.mask
+    if res.op == "topk_ia" or res.op == "topk_gbo":
+        return (res.vals, res.ids)
+    if res.op == "topk_hausdorff_approx":
+        return (res.vals, res.ids, res.extras["eps_eff"])
+    if res.op == "topk_hausdorff":
+        return (res.vals, res.ids, res.stats)
+    if res.op == "nnp":
+        return (res.vals, res.ids)
+    return res                              # pipeline: the full result
 
 
 @dataclass
 class Request:
     op: str
-    payload: dict
+    query: Any                              # Query | Pipeline
     future: Future = field(default_factory=Future)
     t_submit: float = field(default_factory=time.perf_counter)
 
@@ -61,7 +116,7 @@ class Request:
 @dataclass
 class ServerStats:
     requests: int = 0
-    batches: int = 0
+    batches: int = 0                        # dispatch groups planned
     batch_size_sum: int = 0
     latency_sum: float = 0.0
 
@@ -95,12 +150,27 @@ class SearchServer:
     # -- client API --------------------------------------------------------
 
     def submit(self, op: str, **payload: Any) -> Future:
-        """Enqueue one query; returns a Future with the op's result."""
+        """Enqueue one query; returns a Future with the op's result.
+
+        Thin shim: the legacy (op, **payload) call is converted to a
+        declarative Query/Pipeline HERE (validation included), then
+        enqueued like any other spec."""
         if op not in OPS:
             raise ValueError(f"unknown op {op!r}; serving ops: {OPS}")
         if not self._running:
             raise RuntimeError("server is not running (start() it first)")
-        req = Request(op, payload)
+        return self.submit_query(_to_query(op, payload), op=op)
+
+    def submit_query(self, query, *, op: str | None = None) -> Future:
+        """Enqueue a ready-made Query/Pipeline spec."""
+        if not isinstance(query, (Query, Pipeline)):
+            raise TypeError(f"submit_query takes Query/Pipeline, "
+                            f"got {type(query)!r}")
+        if not self._running:
+            raise RuntimeError("server is not running (start() it first)")
+        if op is None:
+            op = "pipeline" if isinstance(query, Pipeline) else query.op
+        req = Request(op, query)
         self._queue.put(req)
         if not self._running and not req.future.done():
             # lost the race with a concurrent stop(): its drain may have
@@ -156,80 +226,48 @@ class SearchServer:
         return batch
 
     def _loop(self) -> None:
+        from repro.engine import plan as plan_lib
+
         while self._running:
             batch = self._drain()
             if not batch:
                 continue
-            # group by (op, k, eps): only requests whose static/shared
-            # parameters agree may share one device dispatch
-            groups: dict[tuple, list[Request]] = {}
-            for req in batch:
-                key = (req.op, req.payload.get("k"),
-                       req.payload.get("eps"))
-                groups.setdefault(key, []).append(req)
-            for reqs in groups.values():
-                try:
-                    self._dispatch(reqs)
-                except Exception as e:  # surface, don't kill the server
-                    for r in reqs:
-                        if not r.future.done():
-                            r.future.set_exception(e)
-
-    def _dispatch(self, reqs: list[Request]) -> None:
-        op = reqs[0].op
-        eng = self.engine
-        if op == "range_search":
-            lo = np.stack([r.payload["r_lo"] for r in reqs])
-            hi = np.stack([r.payload["r_hi"] for r in reqs])
-            out = eng.range_search(lo, hi)
-            results = [out[i] for i in range(len(reqs))]
-        elif op == "topk_ia":
-            lo = np.stack([r.payload["q_lo"] for r in reqs])
-            hi = np.stack([r.payload["q_hi"] for r in reqs])
-            vals, ids = eng.topk_ia(lo, hi, reqs[0].payload["k"])
-            results = [(vals[i], ids[i]) for i in range(len(reqs))]
-        elif op == "topk_gbo":
-            sigs = np.stack([r.payload["q_sig"] for r in reqs])
-            vals, ids = eng.topk_gbo(sigs, reqs[0].payload["k"])
-            results = [(vals[i], ids[i]) for i in range(len(reqs))]
-        elif op == "topk_hausdorff_approx":
-            q_batch = eng.build_queries([r.payload["q"] for r in reqs])
-            vals, ids, eps_eff = eng.topk_hausdorff_approx(
-                q_batch, reqs[0].payload["k"], reqs[0].payload["eps"]
-            )
-            results = [
-                (vals[i], ids[i], eps_eff[i]) for i in range(len(reqs))
-            ]
-        elif op == "topk_hausdorff":
-            # batched end-to-end: one grouped query-index build AND one
-            # engine dispatch for the whole group (shared phase-2 frontier)
-            q_batch = eng.build_queries([r.payload["q"] for r in reqs])
-            vals, ids, stats = eng.topk_hausdorff(
-                q_batch, reqs[0].payload["k"])
-            results = [
-                (vals[i], ids[i], stats[i]) for i in range(len(reqs))
-            ]
-        elif op == "range_points":
-            ds = np.asarray([r.payload["ds_id"] for r in reqs])
-            lo = np.stack([r.payload["r_lo"] for r in reqs])
-            hi = np.stack([r.payload["r_hi"] for r in reqs])
-            out = eng.range_points(ds, lo, hi)
-            results = [out[i] for i in range(len(reqs))]
-        elif op == "nnp":
-            ds = np.asarray([r.payload["ds_id"] for r in reqs])
-            q_batch = eng.build_queries([r.payload["q"] for r in reqs])
-            dists, idxs = eng.nnp(ds, q_batch)
-            results = [(dists[i], idxs[i]) for i in range(len(reqs))]
-        else:  # pragma: no cover - guarded by submit()
-            raise ValueError(op)
-
-        now = time.perf_counter()
-        self.stats.batches += 1
-        self.stats.batch_size_sum += len(reqs)
-        for req, res in zip(reqs, results):
-            self.stats.requests += 1
-            self.stats.latency_sum += now - req.t_submit
-            req.future.set_result(res)
+            # ONE declarative engine call for the whole mixed drain: the
+            # planner groups compatible rows into shared dispatches and
+            # returns per-request results in input order
+            try:
+                results = self.engine.search([r.query for r in batch])
+            except Exception:
+                # a poisoned row fails the whole mixed call; isolate by
+                # re-running per request so every healthy future still
+                # resolves and only the bad rows carry the exception
+                # (the executable cache makes the re-runs cheap)
+                results = []
+                for r in batch:
+                    try:
+                        results.append(self.engine.search([r.query])[0])
+                    except Exception as e:
+                        results.append(e)
+            now = time.perf_counter()
+            # dispatch-group count (stage-1 op groups + pipeline stage-2
+            # groups), planned locally (host-only grouping) so a client
+            # sharing the engine from another thread can't skew the
+            # server's own metric; guarded — the accounting must never be
+            # able to kill the dispatcher after results exist
+            try:
+                self.stats.batches += plan_lib.count_groups(
+                    [r.query for r in batch], self.engine.leaf_capacity)
+            except Exception:
+                self.stats.batches += 1
+            self.stats.batch_size_sum += len(batch)
+            for req, res in zip(batch, results):
+                self.stats.requests += 1
+                self.stats.latency_sum += now - req.t_submit
+                if isinstance(res, Exception):
+                    if not req.future.done():
+                        req.future.set_exception(res)
+                else:
+                    req.future.set_result(_legacy_result(res))
 
 
 # ---------------------------------------------------------------------------
@@ -239,9 +277,12 @@ class SearchServer:
 
 def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0):
     """Pre-build a mixed stream of (op, payload) requests covering all
-    seven serving ops.  Payload construction (signatures etc.) happens here,
-    off the submission path, like a real client would send ready-made
-    queries."""
+    seven serving ops PLUS two pipeline kinds (top-k IA -> RangeP inside
+    the winners, and ApproHaus -> NNP inside the winners — the paper's
+    dataset->point workflow), so a drain exercises genuinely
+    heterogeneous declarative batches.  Payload construction (signatures
+    etc.) happens here, off the submission path, like a real client would
+    send ready-made queries."""
     from repro.core import zorder
 
     rng = np.random.default_rng(seed)
@@ -251,7 +292,7 @@ def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0):
     for i in range(n_requests):
         c = rng.uniform(20, 80, 2).astype(np.float32)
         lo, hi = c - 2.0, c + 2.0
-        kind = i % 7
+        kind = i % 9
         if kind == 0:
             out.append(("range_search", dict(r_lo=lo, r_hi=hi)))
         elif kind == 1:
@@ -271,9 +312,21 @@ def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0):
         elif kind == 5:
             out.append(("range_points", dict(
                 ds_id=int(rng.integers(n_ds)), r_lo=lo, r_hi=hi)))
-        else:
+        elif kind == 6:
             q = datasets[int(rng.integers(n_ds))][:64]
             out.append(("nnp", dict(ds_id=int(rng.integers(n_ds)), q=q)))
+        elif kind == 7:
+            # dataset->point pipeline: top-3 IA datasets, then RangeP
+            # inside each winner (ids never leave the device)
+            wide_lo, wide_hi = c - 10.0, c + 10.0
+            out.append(("pipeline", dict(
+                dataset=dict(op="topk_ia", r_lo=wide_lo, r_hi=wide_hi, k=3),
+                point=dict(op="range_points", r_lo=lo, r_hi=hi))))
+        else:
+            q = datasets[int(rng.integers(n_ds))][:32]
+            out.append(("pipeline", dict(
+                dataset=dict(op="topk_hausdorff_approx", q=q, k=3, eps=eps),
+                point=dict(op="nnp", q=q))))
     return out
 
 
@@ -307,8 +360,8 @@ def main(argv=None):
                           max_wait_ms=args.max_wait_ms).start()
 
     # warmup: submit a full-width burst so the big-bucket executables
-    # compile off the measured path (per-op batch ~= max_batch/7)
-    warm = make_traffic(repo, lake, 7 * args.max_batch, seed=1)
+    # compile off the measured path (per-op batch ~= max_batch/9)
+    warm = make_traffic(repo, lake, 9 * args.max_batch, seed=1)
     for f in [server.submit(op, **p) for op, p in warm]:
         f.result(timeout=600)
     server.stats = ServerStats()       # report the measured window only
@@ -323,12 +376,13 @@ def main(argv=None):
 
     print(f"[serve_search] {args.requests} mixed requests in {dt*1e3:.1f} ms "
           f"-> {args.requests/dt:.1f} QPS")
-    print(f"[serve_search] device batches: {server.stats.batches}, "
-          f"mean batch {server.stats.mean_batch:.1f}, "
+    print(f"[serve_search] dispatch groups: {server.stats.batches}, "
+          f"mean requests/group {server.stats.mean_batch:.1f}, "
           f"mean latency {server.stats.mean_latency_ms:.1f} ms")
     print(f"[serve_search] engine dispatches: {engine.stats.dispatches}, "
           f"cache hits/misses: {engine.stats.cache_hits}/"
-          f"{engine.stats.cache_misses}")
+          f"{engine.stats.cache_misses}, pipelines: "
+          f"{engine.stats.pipeline_stage1}")
     return server.stats
 
 

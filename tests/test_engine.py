@@ -410,8 +410,16 @@ def test_stats_hit_miss_consistent_across_ops(env):
         assert per["hits"] + per["misses"] == per["dispatches"], op
     for op in ("range_search", "topk_ia", "topk_gbo",
                "topk_hausdorff_approx", "range_points", "nnp"):
-        assert s.per_op[op] == {"queries": 2 * N_QUERIES, "dispatches": 2,
-                                "hits": 1, "misses": 1}, op
+        core = {key: s.per_op[op][key]
+                for key in ("queries", "dispatches", "hits", "misses")}
+        assert core == {"queries": 2 * N_QUERIES, "dispatches": 2,
+                        "hits": 1, "misses": 1}, op
+    # the point ops no longer discard their pruning masks: leaf/pair
+    # counters and the pruned fraction ride in per_op
+    for op in ("range_points", "nnp"):
+        per = s.per_op[op]
+        assert 0 <= per["leaves_scanned"] <= per["nodes_evaluated"], op
+        assert 0.0 <= per["pruned_fraction"] <= 1.0, op
     assert s.per_op["build_queries"]["dispatches"] == 1
     per_h = s.per_op["topk_hausdorff"]
     assert {k: per_h[k] for k in ("queries", "dispatches", "hits", "misses")

@@ -259,6 +259,61 @@ def check_sharded_exacthaus_ties():
     print("SHARDED_TIES_OK")
 
 
+def check_sharded_search_mixed():
+    """The declarative `search()` API on the SHARDED engine: one mixed
+    batch covering all seven ops plus a pipeline, every row bit-identical
+    to the unsharded engine's search() — on the 8-shard even mesh AND the
+    uneven 3-shard mesh (slot padding 64 -> 66)."""
+    from repro.engine import Pipeline, Query, ShardedQueryEngine
+    from repro.engine.sharded import data_mesh
+
+    datasets, repo, eng, q_sets, sigs, eps = _build(33)
+    rng = np.random.default_rng(5)
+    lo = rng.uniform(-60, 40, (5, 2)).astype(np.float32)
+    hi = lo + rng.uniform(5, 40, (5, 2)).astype(np.float32)
+    batch = [
+        Query(op="topk_ia", r_lo=lo[0], r_hi=hi[0], k=K),
+        Query(op="range_search", r_lo=lo[1], r_hi=hi[1]),
+        Query(op="nnp", ds_id=4, q=q_sets[1]),
+        Query(op="topk_hausdorff", q=q_sets[0], k=K),
+        Query(op="topk_gbo", q_sig=sigs[0], k=K),
+        Query(op="range_points", ds_id=7, r_lo=lo[3], r_hi=hi[3]),
+        Query(op="topk_hausdorff_approx", q=q_sets[2], k=K, eps=eps),
+        Pipeline(Query(op="topk_ia", r_lo=lo[4], r_hi=hi[4], k=3),
+                 Query(op="range_points", r_lo=lo[3], r_hi=hi[3])),
+        Pipeline(Query(op="topk_gbo", q_sig=sigs[1], k=3),
+                 Query(op="nnp", q=q_sets[3])),
+        # k past the valid count: sentinel winners must merge identically
+        Pipeline(Query(op="topk_ia", r_lo=lo[0], r_hi=hi[0],
+                       k=repo.n_slots),
+                 Query(op="range_points", r_lo=lo[1], r_hi=hi[1])),
+    ]
+    want = eng.search(batch)
+    for mesh_n in (8, 3):
+        sng = ShardedQueryEngine(repo, mesh=data_mesh(mesh_n))
+        got = sng.search(batch)
+        assert len(got) == len(want)
+        for a, b in zip(got, want):
+            assert a.op == b.op
+            for field in ("vals", "ids", "mask"):
+                x, y = getattr(a, field), getattr(b, field)
+                assert (x is None) == (y is None), (a.op, field)
+                if x is not None:
+                    np.testing.assert_array_equal(
+                        np.asarray(x), np.asarray(y), err_msg=a.op)
+            if a.op == "pipeline":
+                np.testing.assert_array_equal(
+                    np.asarray(a.extras["ds_ids"]),
+                    np.asarray(b.extras["ds_ids"]))
+        s = sng.stats
+        assert s.cache_hits + s.cache_misses == s.dispatches
+        assert s.pipeline_stage1 == s.pipeline_stage2 == 3
+        # same planner on both dispatchers: identical group compilation
+        assert s.plan_groups == eng.stats.plan_groups
+        assert s.group_counts == eng.stats.group_counts
+    print("SHARDED_SEARCH_OK")
+
+
 def check_sharded_no_replicated_repo():
     """Regression: ShardedDispatcher must not retain a replicated
     repository copy — per-device bytes of the dataset-axis arrays are
@@ -312,3 +367,7 @@ def test_sharded_exacthaus_ties():
 
 def test_sharded_no_replicated_repo():
     _dispatch("check_sharded_no_replicated_repo")
+
+
+def test_sharded_search_mixed():
+    _dispatch("check_sharded_search_mixed")

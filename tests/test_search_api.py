@@ -1,0 +1,389 @@
+"""The unified declarative query API: `QueryEngine.search`.
+
+Covers the tentpole contract of the redesign:
+
+  * a mixed batch covering ALL SEVEN ops plus a pipeline query in ONE
+    `search()` call, every row bit-identical to the legacy per-op batch
+    methods;
+  * input-order preservation under arbitrary interleaving (the planner
+    regroups rows per (op, statics) but must scatter results back);
+  * grouping: one dispatch per (op, statics) group, counted in the new
+    `EngineStats.plan_groups` / `group_counts` counters, with the
+    executable-cache invariant untouched;
+  * result-cache hits short-circuiting per row ACROSS ops inside one
+    mixed batch;
+  * pipeline dataset->point equivalence against the two-call host
+    baseline (both point ops, -1 sentinel winners masked);
+  * the NNP dispatch routing through `core/point_search.nnp_pruned`
+    (bit-identity + a genuinely nonzero pruned fraction surfaced in
+    PointStats);
+  * Query/Pipeline construction-time validation.
+
+Sharded-dispatcher equivalence for the same API lives in
+tests/test_engine_sharded.py (8-device and uneven 3-shard meshes).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_clustered_datasets
+from repro.core import point_search, search, zorder
+from repro.core.build import build_repository
+from repro.engine import Pipeline, Query, QueryEngine
+
+THETA = 5
+K = 6
+
+
+@pytest.fixture(scope="module")
+def env():
+    datasets = make_clustered_datasets(33, seed=2, n_points=(30, 120))
+    repo, _ = build_repository(datasets, leaf_capacity=16, theta=THETA,
+                               remove_outliers=False)
+    rng = np.random.default_rng(0)
+    lo = rng.uniform(-60, 40, (5, 2)).astype(np.float32)
+    hi = lo + rng.uniform(5, 40, (5, 2)).astype(np.float32)
+    q_sets = [datasets[i] for i in (0, 3, 9, 11, 20)]
+    sigs = np.stack([
+        np.asarray(zorder.signature(jnp.asarray(q),
+                                    jnp.ones(len(q), bool),
+                                    repo.space_lo, repo.space_hi, THETA))
+        for q in q_sets
+    ])
+    eps = float(zorder.default_epsilon(repo.space_lo, repo.space_hi, THETA))
+    return datasets, repo, lo, hi, q_sets, sigs, eps
+
+
+def _mixed_batch(lo, hi, q_sets, sigs, eps):
+    """All seven ops + a pipeline, deliberately interleaved."""
+    return [
+        Query(op="topk_ia", r_lo=lo[0], r_hi=hi[0], k=K),
+        Query(op="range_search", r_lo=lo[1], r_hi=hi[1]),
+        Query(op="nnp", ds_id=4, q=q_sets[1]),
+        Query(op="topk_hausdorff", q=q_sets[0], k=K),
+        Query(op="topk_gbo", q_sig=sigs[0], k=K),
+        Query(op="topk_ia", r_lo=lo[2], r_hi=hi[2], k=K),
+        Query(op="range_points", ds_id=7, r_lo=lo[3], r_hi=hi[3]),
+        Query(op="topk_hausdorff_approx", q=q_sets[2], k=K, eps=eps),
+        Pipeline(Query(op="topk_ia", r_lo=lo[4], r_hi=hi[4], k=3),
+                 Query(op="range_points", r_lo=lo[3], r_hi=hi[3])),
+        Query(op="topk_hausdorff", q=q_sets[3], k=K),
+    ]
+
+
+def test_mixed_batch_all_ops_one_call(env):
+    """One search() call answers a batch covering every op + a pipeline,
+    each row bit-identical to the legacy per-op method."""
+    datasets, repo, lo, hi, q_sets, sigs, eps = env
+    engine = QueryEngine(repo, result_cache_size=0)
+    res = engine.search(_mixed_batch(lo, hi, q_sets, sigs, eps))
+    eq = np.testing.assert_array_equal
+
+    # per-op references (legacy methods of a separate engine so the group
+    # compositions differ from the mixed call's)
+    ref = QueryEngine(repo, result_cache_size=0)
+    v_ia, i_ia = ref.topk_ia(np.stack([lo[0], lo[2]]),
+                             np.stack([hi[0], hi[2]]), K)
+    eq(np.asarray(res[0].vals), np.asarray(v_ia[0]))
+    eq(np.asarray(res[0].ids), np.asarray(i_ia[0]))
+    eq(np.asarray(res[5].vals), np.asarray(v_ia[1]))
+    eq(np.asarray(res[5].ids), np.asarray(i_ia[1]))
+
+    eq(np.asarray(res[1].mask),
+       np.asarray(ref.range_search(lo[1][None], hi[1][None])[0]))
+
+    qb_nnp = ref.build_queries([q_sets[1]])
+    d_ref, x_ref = ref.nnp(np.array([4], np.int32), qb_nnp)
+    eq(np.asarray(res[2].vals), np.asarray(d_ref[0]))
+    eq(np.asarray(res[2].ids), np.asarray(x_ref[0]))
+    eq(np.asarray(res[2].mask), np.asarray(qb_nnp.valid[0]))
+
+    # the two ExactHaus rows ride ONE dispatch group in the mixed call;
+    # both must equal their solo legacy runs (and the host oracle, which
+    # test_engine already pins the legacy path to)
+    qb_h = ref.build_queries([q_sets[0], q_sets[3]])
+    v_h, i_h, s_h = ref.topk_hausdorff(qb_h, K)
+    for row, j in ((3, 0), (9, 1)):
+        eq(np.asarray(res[row].vals), np.asarray(v_h[j]))
+        eq(np.asarray(res[row].ids), np.asarray(i_h[j]))
+        assert res[row].stats.exact_evaluations == s_h[j].exact_evaluations
+
+    v_g, i_g = ref.topk_gbo(sigs[0][None], K)
+    eq(np.asarray(res[4].vals), np.asarray(v_g[0]))
+    eq(np.asarray(res[4].ids), np.asarray(i_g[0]))
+
+    eq(np.asarray(res[6].mask),
+       np.asarray(ref.range_points(np.array([7], np.int32),
+                                   lo[3][None], hi[3][None])[0]))
+
+    qb_a = ref.build_queries([q_sets[2]])
+    v_a, i_a, e_a = ref.topk_hausdorff_approx(qb_a, K, eps)
+    eq(np.asarray(res[7].vals), np.asarray(v_a[0]))
+    eq(np.asarray(res[7].ids), np.asarray(i_a[0]))
+    eq(np.asarray(res[7].extras["eps_eff"]), np.asarray(e_a[0]))
+
+    # the pipeline row: stage 1 == legacy top-k, stage 2 == host handoff
+    p = res[8]
+    v_p, i_p = ref.topk_ia(lo[4][None], hi[4][None], 3)
+    eq(np.asarray(p.extras["stage1"].vals), np.asarray(v_p[0]))
+    eq(np.asarray(p.extras["ds_ids"]), np.asarray(i_p[0]))
+    wids = np.asarray(i_p[0])
+    valid = wids >= 0
+    want = ref.range_points(np.where(valid, wids, 0),
+                            np.broadcast_to(lo[3], (3, 2)),
+                            np.broadcast_to(hi[3], (3, 2)))
+    got = np.asarray(p.mask)
+    eq(got[valid], np.asarray(want)[valid])
+    assert not got[~valid].any()
+
+
+def test_input_order_preserved(env):
+    """Shuffling the batch permutes the results identically — the planner
+    regroups internally but scatters back to input positions."""
+    datasets, repo, lo, hi, q_sets, sigs, eps = env
+    engine = QueryEngine(repo, result_cache_size=0)
+    batch = _mixed_batch(lo, hi, q_sets, sigs, eps)
+    res = engine.search(batch)
+    perm = [7, 2, 9, 0, 5, 8, 1, 3, 6, 4]
+    res_p = engine.search([batch[i] for i in perm])
+    for out_pos, in_pos in enumerate(perm):
+        a, b = res_p[out_pos], res[in_pos]
+        assert a.op == b.op
+        for field in ("vals", "ids", "mask"):
+            x, y = getattr(a, field), getattr(b, field)
+            assert (x is None) == (y is None)
+            if x is not None:
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_grouping_and_counters(env):
+    """A mixed batch compiles to one dispatch group per (op, statics):
+    group counters and pipeline stage counters are booked, and the
+    executable-cache invariant holds for every dispatch the groups ran."""
+    datasets, repo, lo, hi, q_sets, sigs, eps = env
+    engine = QueryEngine(repo, result_cache_size=0)
+    batch = _mixed_batch(lo, hi, q_sets, sigs, eps)
+    engine.search(batch)
+    s = engine.stats
+    # stage 1: 8 groups (topk_ia twice — k=6 rows and the pipeline's k=3
+    # stage in its own statics group — plus range_search / gbo / approx /
+    # exact / plain range_points / nnp); stage 2: 1 range_points group
+    assert s.group_counts["topk_ia"] == 2
+    for op in ("range_search", "topk_gbo", "topk_hausdorff_approx",
+               "topk_hausdorff", "nnp"):
+        assert s.group_counts[op] == 1, op
+    assert s.group_counts["range_points"] == 2    # plain + pipeline stage 2
+    assert s.plan_groups == sum(s.group_counts.values()) == 9
+    assert s.pipeline_stage1 == s.pipeline_stage2 == 1
+    assert s.cache_hits + s.cache_misses == s.dispatches
+    # the two ExactHaus rows shared one dispatch
+    assert s.per_op["topk_hausdorff"]["dispatches"] == 1
+    assert s.per_op["topk_hausdorff"]["queries"] == 2
+    # re-running the identical batch re-plans the same groups and hits
+    # the executable cache on every dispatch
+    h0, g0 = s.cache_hits, s.plan_groups
+    engine.search(batch)
+    assert s.plan_groups == 2 * g0
+    assert s.cache_hits > h0
+    assert s.cache_hits + s.cache_misses == s.dispatches
+
+
+def test_result_cache_across_ops_in_one_batch(env):
+    """Rows repeated across ops inside ONE mixed batch short-circuit from
+    the result LRU: only the genuinely new rows dispatch."""
+    datasets, repo, lo, hi, q_sets, sigs, eps = env
+    engine = QueryEngine(repo)            # result cache ON
+    warm = engine.search([
+        Query(op="topk_ia", r_lo=lo[0], r_hi=hi[0], k=K),
+        Query(op="topk_gbo", q_sig=sigs[0], k=K),
+    ])
+    d0 = engine.stats.dispatches
+    hits0 = engine.stats.result_cache_hits
+    # one mixed batch: a repeated IA row, a repeated GBO row, one new
+    # range_search row -> exactly ONE new dispatch (the range_search)
+    res = engine.search([
+        Query(op="topk_ia", r_lo=lo[0], r_hi=hi[0], k=K),
+        Query(op="range_search", r_lo=lo[1], r_hi=hi[1]),
+        Query(op="topk_gbo", q_sig=sigs[0], k=K),
+    ])
+    assert engine.stats.dispatches == d0 + 1
+    assert engine.stats.result_cache_hits == hits0 + 2
+    np.testing.assert_array_equal(np.asarray(res[0].vals),
+                                  np.asarray(warm[0].vals))
+    np.testing.assert_array_equal(np.asarray(res[2].vals),
+                                  np.asarray(warm[1].vals))
+    # in-batch duplicates across a mixed batch dedupe per op group too
+    d1 = engine.stats.dispatches
+    res2 = engine.search([
+        Query(op="topk_ia", r_lo=lo[2], r_hi=hi[2], k=K),
+        Query(op="topk_ia", r_lo=lo[2], r_hi=hi[2], k=K),
+    ])
+    assert engine.stats.dispatches == d1 + 1
+    np.testing.assert_array_equal(np.asarray(res2[0].vals),
+                                  np.asarray(res2[1].vals))
+
+
+@pytest.mark.parametrize("point_op", ["range_points", "nnp"])
+def test_pipeline_matches_two_call_baseline(env, point_op):
+    """Pipeline(dataset top-k -> point op in the winners) must equal the
+    host two-call baseline: run the dataset op, pull the ids, run the
+    point op — for both point ops and several dataset ops."""
+    datasets, repo, lo, hi, q_sets, sigs, eps = env
+    engine = QueryEngine(repo, result_cache_size=0)
+    k = 4
+    stage1s = [
+        Query(op="topk_ia", r_lo=lo[0], r_hi=hi[0], k=k),
+        Query(op="topk_gbo", q_sig=sigs[1], k=k),
+        Query(op="topk_hausdorff_approx", q=q_sets[2], k=k, eps=eps),
+    ]
+    if point_op == "range_points":
+        stage2 = Query(op="range_points", r_lo=lo[1], r_hi=hi[1])
+    else:
+        stage2 = Query(op="nnp", q=q_sets[4])
+    res = engine.search([Pipeline(s1, stage2) for s1 in stage1s])
+
+    baseline = QueryEngine(repo, result_cache_size=0)
+    for s1, r in zip(stage1s, res):
+        if s1.op == "topk_ia":
+            _, ids = baseline.topk_ia(s1.r_lo[None], s1.r_hi[None], k)
+        elif s1.op == "topk_gbo":
+            _, ids = baseline.topk_gbo(s1.q_sig[None], k)
+        else:
+            qb = baseline.build_queries([s1.q])
+            _, ids, _ = baseline.topk_hausdorff_approx(qb, k, eps)
+        ids = np.asarray(ids[0])
+        np.testing.assert_array_equal(np.asarray(r.extras["ds_ids"]), ids)
+        valid = ids >= 0
+        safe = np.where(valid, ids, 0)
+        if point_op == "range_points":
+            want = baseline.range_points(
+                safe, np.broadcast_to(stage2.r_lo, (k, 2)),
+                np.broadcast_to(stage2.r_hi, (k, 2)))
+            got = np.asarray(r.mask)
+            np.testing.assert_array_equal(got[valid],
+                                          np.asarray(want)[valid])
+            assert not got[~valid].any()
+        else:
+            qb2 = baseline.build_queries([stage2.q] * k)
+            wd, wi = baseline.nnp(safe, qb2)
+            np.testing.assert_array_equal(
+                np.asarray(r.vals)[valid], np.asarray(wd)[valid])
+            np.testing.assert_array_equal(
+                np.asarray(r.ids)[valid], np.asarray(wi)[valid])
+
+
+def test_pipeline_sentinel_winners_masked(env):
+    """k past the valid dataset count: the -1 sentinel winners' stage-2
+    rows are masked out, never gathered as real datasets."""
+    datasets, repo, lo, hi, q_sets, sigs, eps = env
+    engine = QueryEngine(repo, result_cache_size=0)
+    k = repo.n_slots                      # > n_valid by construction
+    assert k > int(np.asarray(repo.ds_valid).sum())
+    res = engine.search([Pipeline(
+        Query(op="topk_ia", r_lo=lo[0], r_hi=hi[0], k=k),
+        Query(op="range_points", r_lo=lo[0], r_hi=hi[0]))])[0]
+    ids = np.asarray(res.extras["ds_ids"])
+    assert (ids == -1).any()
+    np.testing.assert_array_equal(np.asarray(res.extras["valid"]),
+                                  ids >= 0)
+    assert not np.asarray(res.mask)[ids < 0].any()
+
+
+def test_two_pipelines_share_stage2_dispatch(env):
+    """Compatible pipelines group their stage-2 point queries into ONE
+    dispatch (ragged ks concatenated)."""
+    datasets, repo, lo, hi, q_sets, sigs, eps = env
+    engine = QueryEngine(repo, result_cache_size=0)
+    engine.search([Pipeline(
+        Query(op="topk_ia", r_lo=lo[0], r_hi=hi[0], k=3),
+        Query(op="range_points", r_lo=lo[1], r_hi=hi[1]))])  # warm groups
+    d0 = engine.stats.dispatches
+    engine.search([
+        Pipeline(Query(op="topk_ia", r_lo=lo[0], r_hi=hi[0], k=3),
+                 Query(op="range_points", r_lo=lo[1], r_hi=hi[1])),
+        Pipeline(Query(op="topk_ia", r_lo=lo[2], r_hi=hi[2], k=5),
+                 Query(op="range_points", r_lo=lo[3], r_hi=hi[3])),
+    ])
+    # stage 1: one topk_ia group per k (2 dispatches); stage 2: ONE
+    # range_points dispatch of 3 + 5 = 8 rows
+    assert engine.stats.dispatches == d0 + 3
+    assert engine.stats.per_op["range_points"]["queries"] >= 8
+    assert engine.stats.pipeline_stage2 >= 3
+
+
+def test_nnp_routes_through_pruned(env):
+    """The engine's NNP dispatch is the Eq. 4 tree-pruned path: results
+    bit-identical to `point_search.nnp_pruned` on the same trees, the
+    same NN set as the unpruned `point_search.nnp` oracle, and the
+    pruned fraction is surfaced (nonzero for clustered data) instead of
+    discarded."""
+    datasets, repo, lo, hi, q_sets, sigs, eps = env
+    engine = QueryEngine(repo, result_cache_size=0)
+    res = engine.search([Query(op="nnp", ds_id=9, q=q_sets[1])])[0]
+    qb = engine.build_queries([q_sets[1]])
+    q_idx = jax.tree.map(lambda x: x[0], qb)
+    d_idx = jax.tree.map(lambda x: x[9], repo.ds_index)
+
+    wd, wi, ws = point_search.nnp_pruned(q_idx, d_idx)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(wi))
+    np.testing.assert_allclose(np.asarray(res.vals), np.asarray(wd),
+                               rtol=1e-6, atol=1e-6)
+    # the pruning actually bit: stats surfaced per query, fraction > 0
+    assert res.stats.leaves_scanned == ws.leaves_scanned
+    assert res.stats.pruned_fraction == pytest.approx(ws.pruned_fraction)
+    assert res.stats.pruned_fraction > 0.0
+    assert engine.stats.per_op["nnp"]["pruned_fraction"] > 0.0
+
+    # unpruned oracle agreement on the valid points (the prune is lossless)
+    ud, ui = point_search.nnp(q_idx, d_idx)
+    qv = np.asarray(q_idx.valid)
+    np.testing.assert_allclose(np.asarray(res.vals)[qv],
+                               np.asarray(ud)[qv], atol=1e-4)
+
+
+def test_query_validation():
+    with pytest.raises(ValueError):
+        Query(op="nope")
+    with pytest.raises(ValueError):
+        Query(op="topk_ia", r_lo=np.zeros(2), r_hi=np.ones(2))  # no k
+    with pytest.raises(ValueError):
+        Query(op="topk_hausdorff", k=3)                 # no q / q_index
+    with pytest.raises(ValueError):
+        Pipeline(Query(op="range_search", r_lo=np.zeros(2),
+                       r_hi=np.ones(2)),
+                 Query(op="range_points", r_lo=np.zeros(2),
+                       r_hi=np.ones(2)))                # not a top-k stage
+    with pytest.raises(ValueError):
+        Pipeline(Query(op="topk_ia", r_lo=np.zeros(2), r_hi=np.ones(2),
+                       k=2),
+                 Query(op="topk_gbo", q_sig=np.zeros(8, np.uint32), k=2))
+    with pytest.raises(ValueError):
+        Pipeline(Query(op="topk_ia", r_lo=np.zeros(2), r_hi=np.ones(2),
+                       k=2),
+                 Query(op="range_points", ds_id=3, r_lo=np.zeros(2),
+                       r_hi=np.ones(2)))                # ds_id must be None
+    with pytest.raises(ValueError):
+        Query(op="topk_hausdorff", k=3, q=np.zeros((4, 2)),
+              q_index=np.zeros((4, 2)))                 # q XOR q_index
+    with pytest.raises(ValueError):
+        Query(op="nnp", ds_id=1, q_index=np.zeros((8, 2)))  # not an index
+
+
+def test_standalone_point_query_requires_ds_id(env):
+    """A standalone RangeP/NNP query without ds_id fails with a clear
+    error at search() — only a Pipeline point stage may omit it."""
+    datasets, repo, lo, hi, q_sets, sigs, eps = env
+    engine = QueryEngine(repo, result_cache_size=0)
+    with pytest.raises(ValueError, match="ds_id"):
+        engine.search([Query(op="range_points", r_lo=lo[0], r_hi=hi[0])])
+    with pytest.raises(ValueError, match="ds_id"):
+        engine.search([Query(op="nnp", q=q_sets[0])])
+
+
+def test_search_rejects_non_queries(env):
+    datasets, repo, *_ = env
+    engine = QueryEngine(repo, result_cache_size=0)
+    with pytest.raises(TypeError):
+        engine.search([{"op": "range_search"}])
+    assert engine.search([]) == []

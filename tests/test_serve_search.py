@@ -27,25 +27,29 @@ def env():
 
 
 def test_mixed_ops_one_drain(env):
-    """A burst covering all seven op types is answered correctly and
-    grouped: one device batch per compatible (op, k, eps) group, not per
-    request."""
+    """A burst covering all seven op types PLUS pipeline requests is
+    answered correctly and grouped: one dispatch group per compatible
+    (op, statics) set — the whole mixed drain is ONE engine.search call,
+    not one call per request."""
     import jax
 
     datasets, repo = env
     engine = QueryEngine(repo)
     server = SearchServer(engine, max_batch=64, max_wait_ms=250.0).start()
     try:
-        traffic = make_traffic(repo, datasets, 21, seed=3)  # 3 of each op
+        traffic = make_traffic(repo, datasets, 27, seed=3)  # 3 of each kind
         assert {op for op, _ in traffic} == set(OPS)
         futures = [server.submit(op, **p) for op, p in traffic]
         results = [f.result(timeout=600) for f in futures]
-        assert len(results) == 21
-        assert server.stats.requests == 21
-        # grouping: far fewer device batches than requests (7 op groups if
-        # the whole burst landed in one drain; allow a couple of stragglers)
-        assert server.stats.batches <= 11
+        assert len(results) == 27
+        assert server.stats.requests == 27
+        # grouping: far fewer dispatch groups than requests (11 groups if
+        # the whole burst landed in one drain — 9 stage-1 op/static groups
+        # + 2 pipeline stage-2 groups; allow a few straggler drains)
+        assert server.stats.batches <= 22
         assert server.stats.mean_batch > 1.0
+        assert engine.stats.pipeline_stage1 == engine.stats.pipeline_stage2 \
+            == 6
         # spot-check each op type against a direct engine call
         for (op, payload), res in zip(traffic, results):
             if op == "range_search":
@@ -73,6 +77,31 @@ def test_mixed_ops_one_drain(env):
                                               np.asarray(ids))
                 assert res[2].exact_evaluations > 0
                 assert 0.0 <= res[2].pruned_fraction <= 1.0
+            elif op == "pipeline":
+                # pipeline responses are the full SearchResult: stage-2
+                # rows over the k winners + the stage-1 result, equal to
+                # the two-call host baseline
+                stage1 = res.extras["stage1"]
+                ds = payload["dataset"]
+                if ds["op"] == "topk_ia":
+                    want_v, want_i = engine.topk_ia(
+                        ds["r_lo"][None], ds["r_hi"][None], ds["k"])
+                    np.testing.assert_array_equal(
+                        np.asarray(stage1.vals), np.asarray(want_v[0]))
+                    np.testing.assert_array_equal(
+                        np.asarray(stage1.ids), np.asarray(want_i[0]))
+                    ids = np.asarray(stage1.ids)
+                    valid = ids >= 0
+                    pt = payload["point"]
+                    k = ds["k"]
+                    want = engine.range_points(
+                        np.where(valid, ids, 0),
+                        np.broadcast_to(pt["r_lo"], (k, 2)),
+                        np.broadcast_to(pt["r_hi"], (k, 2)))
+                    got = np.asarray(res.mask)
+                    np.testing.assert_array_equal(
+                        got[valid], np.asarray(want)[valid])
+                    assert not got[~valid].any()
     finally:
         server.stop()
 
@@ -131,6 +160,36 @@ def test_submit_unknown_op_and_stopped_server(env):
     with pytest.raises(ValueError):
         server.submit("not_an_op")
     server.stop()
+
+
+def test_poisoned_request_isolated(env):
+    """A malformed request sharing a drain with healthy ones must fail
+    ONLY its own future: the server falls back to per-request execution
+    when the mixed engine call raises."""
+    datasets, repo = env
+    server = SearchServer(QueryEngine(repo), max_batch=16,
+                          max_wait_ms=200.0).start()
+    try:
+        rng = np.random.default_rng(13)
+        lo = rng.uniform(-60, 40, (2, 2)).astype(np.float32)
+        hi = lo + 5.0
+        good1 = server.submit("topk_ia", q_lo=lo[0], q_hi=hi[0], k=K)
+        # same (op, k) group, wrong box rank: poisons the group stack
+        bad = server.submit("topk_ia", q_lo=np.zeros(3, np.float32),
+                            q_hi=np.ones(3, np.float32), k=K)
+        good2 = server.submit("range_search", r_lo=lo[1], r_hi=hi[1])
+        v, j = good1.result(timeout=600)
+        assert np.asarray(v).shape == (K,)
+        assert np.asarray(good2.result(timeout=600)).shape[0] > 0
+        with pytest.raises(Exception):
+            bad.result(timeout=600)
+        # the dispatcher thread survived the poisoned drain: a fresh
+        # request after the failure still resolves
+        after = server.submit("topk_ia", q_lo=lo[1], q_hi=hi[1], k=K)
+        v2, _ = after.result(timeout=600)
+        assert np.asarray(v2).shape == (K,)
+    finally:
+        server.stop()
 
 
 def test_stop_fails_queued_requests(env):
