@@ -231,6 +231,36 @@ def frontier_bounds(q_idx: DatasetIndex, ds_index: DatasetIndex, level_q: int,
     return jax.vmap(one)(od, rd, cd)
 
 
+def _frontier_bound_all_levels(q_idx: DatasetIndex, ds_index: DatasetIndex,
+                               max_level: int):
+    """All-levels fused bound pass: every (query, slot) pair's per-level
+    (LB, UB) frontier scalars for levels 0..max_level in ONE kernel op.
+
+    q_idx is a (B, ...) query batch, ds_index the (S, ...) corpus.  Slices
+    the contiguous node range covering levels 0..max_level out of both
+    trees and hands it to `ops.bound_grid`, which computes the dense Eq. 4
+    bound tensors once and reduces each level's static node slice —
+    replacing max_level+1 separate `vmap(frontier_bounds)` passes with one
+    dispatch.  Returns (LB, UB), each (max_level+1, B, S), matching
+    `vmap(frontier_bounds)(q_idx, ds_index, l, l)` per level up to XLA's
+    shape-dependent FMA contraction (~1 ulp; benchmarks/bench_engine.py
+    asserts the tolerance).  Bit-stability of ExactHaus itself does not
+    ride on that: the host oracle, the local batched pipeline, and the
+    sharded pipeline ALL consume this one fused pass, so their results
+    stay mutually bit-identical (the equivalence suites assert it).
+    """
+    n_nodes = q_idx.level_slice(max_level).stop
+    levels = tuple((q_idx.level_slice(l).start, q_idx.level_slice(l).stop)
+                   for l in range(max_level + 1))
+    oq = q_idx.centers[..., :n_nodes, :]
+    rq = q_idx.radii[..., :n_nodes]
+    cq = q_idx.counts[..., :n_nodes]
+    od = ds_index.centers[..., :n_nodes, :]
+    rd = ds_index.radii[..., :n_nodes]
+    cd = ds_index.counts[..., :n_nodes]
+    return ops.bound_grid(oq, rq, cq > 0, od, rd, cd > 0, levels=levels)
+
+
 def _kth_smallest(x: Array, k: int) -> Array:
     """kth-smallest along the LAST axis (selection only: the returned float
     bit pattern is an element of x, identical to jnp.sort(x)[..., k-1])."""
@@ -259,9 +289,11 @@ def _hausdorff_bound_phases(
 
     ``q_idx`` may carry a leading query-batch axis or be a single query
     (auto-promoted to a batch of one and squeezed on return).  Phases 0/1
-    compute the Eq. 4 bound matrices for ALL B queries in one pass (the
-    per-slot bound kernels vmapped over the query axis) and each query
-    carries its own tau.
+    compute the Eq. 4 bound matrices for ALL B queries AND all tree levels
+    in one fused `ops.bound_grid` dispatch (replacing the per-level
+    `vmap(frontier_bounds)` composition; host oracle, local batched, and
+    sharded pipelines all share this pass, so their results stay mutually
+    bit-identical) and each query carries its own tau.
 
     Shard-mappable over a slot slice: with ``axis=None`` (the single-device
     pipeline) `repo` spans every dataset slot and all reductions are local.
@@ -295,10 +327,18 @@ def _hausdorff_bound_phases(
         s = mask.sum(axis=-1).astype(jnp.int32)
         return s if axis is None else jax.lax.psum(s, axis)
 
-    bounds = jax.vmap(frontier_bounds, in_axes=(0, None, None, None))
+    # ---- fused bound pass: every level's (B, S) frontier scalars in ONE
+    # kernel dispatch (ops.bound_grid), instead of one vmap(frontier_bounds)
+    # composition per level; phases 0/1 below consume per-level slices.
+    # Bound values never depend on cand/tau, so hoisting the computation
+    # changes no results — the old code already evaluated bounds densely
+    # for all (B, S) at every level.
+    max_level = min(q_idx.depth, repo.ds_index.depth, refine_levels)
+    LB_lvls, UB_lvls = _frontier_bound_all_levels(q_idx, repo.ds_index,
+                                                  max_level)
 
     # ---- phase 0: dense root-granularity Eq. 4 bound pass -----------------
-    LB, UB = bounds(q_idx, repo.ds_index, 0, 0)          # (B, S) each
+    LB, UB = LB_lvls[0], UB_lvls[0]                      # (B, S) each
     LB = jnp.where(valid[None, :], LB, BIG)
     UB = jnp.where(valid[None, :], UB, BIG)
     tau = kth_ub(UB)
@@ -314,9 +354,8 @@ def _hausdorff_bound_phases(
         S if n_slots_total is None else n_slots_total, jnp.int32)
 
     # ---- phase 1: level-synchronous refinement ----------------------------
-    max_level = min(q_idx.depth, repo.ds_index.depth, refine_levels)
     for level in range(1, max_level + 1):
-        LB_l, UB_l = bounds(q_idx, repo.ds_index, level, level)
+        LB_l, UB_l = LB_lvls[level], UB_lvls[level]
         # refinement can only tighten; keep the monotone envelope
         LB = jnp.where(cand, jnp.maximum(LB, LB_l), LB)
         UB = jnp.where(cand, jnp.minimum(UB, UB_l), UB)

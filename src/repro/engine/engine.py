@@ -72,6 +72,7 @@ from repro.core.index import DatasetIndex
 from repro.core.repo_index import Repository
 from repro.engine import batched_ops
 from repro.engine import plan as plan_lib
+from repro.kernels import autotune
 from repro.engine.query import Pipeline, Query, SearchResult  # noqa: F401
 
 Array = jax.Array
@@ -149,6 +150,14 @@ class EngineStats:
     pipeline_stage2: int = 0         # pipelines whose point stage ran
     group_counts: dict = field(default_factory=dict)   # op -> groups
     per_op: dict = field(default_factory=dict)
+    latency_ewma: dict = field(default_factory=dict)   # op -> EWMA seconds
+    op_seconds: dict = field(default_factory=dict)     # op -> total seconds
+
+    #: EWMA smoothing for per-op dispatch latency (seconds).  0.2 keeps
+    #: roughly the last ~10 dispatches' worth of signal — stable enough
+    #: for the adaptive server's straggler window, fresh enough to track
+    #: a shift in traffic shape within a few batches.
+    EWMA_ALPHA = 0.2
 
     def count(self, op: str, batch: int, bucket: int, *,
               cached: bool, internal: bool = False) -> None:
@@ -188,6 +197,17 @@ class EngineStats:
         per["queries"] += hits
         per["result_hits"] = per.get("result_hits", 0) + hits
         per["result_misses"] = per.get("result_misses", 0) + misses
+
+    def record_latency(self, op: str, seconds: float) -> None:
+        """Book one dispatch group's wall-clock latency: cumulative
+        ``op_seconds[op]`` plus an EWMA (``latency_ewma[op]``) that the
+        adaptive server reads to size its straggler window.  First sample
+        seeds the EWMA directly."""
+        self.op_seconds[op] = self.op_seconds.get(op, 0.0) + seconds
+        prev = self.latency_ewma.get(op)
+        self.latency_ewma[op] = (
+            seconds if prev is None
+            else prev + self.EWMA_ALPHA * (seconds - prev))
 
     def count_group(self, op: str) -> None:
         """Record ONE dispatch group compiled by the planner (an op group
@@ -295,9 +315,11 @@ class QueryEngine:
         shard_spec: str = "data",
         dispatcher=None,
         result_cache_size: int = DEFAULT_RESULT_CACHE,
+        default_chunk: int = 32,
     ):
         self.buckets = tuple(sorted(buckets))
         self.leaf_capacity = leaf_capacity
+        self.default_chunk = default_chunk
         self.stats = EngineStats()
         self._executables: dict = {}
         self.result_cache_size = result_cache_size
@@ -314,6 +336,19 @@ class QueryEngine:
         # ShardedDispatcher) rather than the builder's, so the engine never
         # pins an extra replicated copy once the caller drops theirs
         self.repo = getattr(dispatcher, "repo", repo)
+
+    # -- autotuning --------------------------------------------------------
+
+    def tune(self, **kw):
+        """One-time measured sweep of the kernel dispatch constants for
+        THIS engine's repository shapes (see :mod:`repro.engine.tune`).
+        Installs per-(backend, shape-bucket) routing verdicts in the
+        process-global autotune table — gated on bitwise identity with the
+        ref path, so tuned routing never shifts a result — and picks the
+        fastest ExactHaus refinement ``chunk`` as ``self.default_chunk``.
+        Returns the tuner's report dict."""
+        from repro.engine.tune import tune_engine
+        return tune_engine(self, **kw)
 
     # -- bucketing ---------------------------------------------------------
 
@@ -344,7 +379,13 @@ class QueryEngine:
 
     def _executable(self, key, build):
         """Cache lookup; returns (fn, cached) so the dispatch path can book
-        the hit/miss through `stats.count` uniformly for every op."""
+        the hit/miss through `stats.count` uniformly for every op.
+
+        The autotune table epoch is part of every key: executables close
+        over routing decisions made at build time (kernel vs ref, tile
+        sizes), so a `tune()` that installs new configs must NOT keep
+        serving stale compilations — the epoch bump retires them."""
+        key = (autotune.epoch(),) + tuple(key)
         fn = self._executables.get(key)
         cached = fn is not None
         if not cached:
@@ -566,11 +607,20 @@ class QueryEngine:
         return vals[:B], ids[:B], eps_eff[:B]
 
     def _exec_topk_hausdorff(self, q_batch: DatasetIndex, k: int,
-                             refine_levels: int = 3, chunk: int = 32):
+                             refine_levels: int = 3,
+                             chunk: int | None = None):
         """ExactHaus for a (B, ...) query-index batch: ONE device dispatch
         (shared phase-2 work frontier; per-shard loops + batched tau
         all-reduce under a ShardedDispatcher) -> (vals (B, k), ids (B, k),
-        list[SearchStats])."""
+        list[SearchStats]).
+
+        ``chunk=None`` (the default) resolves to the engine's tuned
+        ``default_chunk`` BEFORE any cache key is formed — chunk only
+        chunks the refinement sweep (vals/ids are bit-identical under any
+        chunk; the `evaluated` counter granularity changes), so retuning
+        it between calls is always safe."""
+        if chunk is None:
+            chunk = self.default_chunk
         if not self.result_cache_size:
             return self._topk_hausdorff_dispatch(
                 q_batch, k, refine_levels, chunk)

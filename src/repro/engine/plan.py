@@ -33,6 +33,7 @@ dispatches at batch 64+).
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
@@ -102,7 +103,9 @@ def execute(engine, items) -> list:
     handoffs: dict = {}        # input pos -> device (k,) winner-id row
     for g in plan(items, engine.leaf_capacity):
         engine.stats.count_group(g.op)
+        t0 = time.perf_counter()
         rows, ids_dev = _run_group(engine, g)
+        engine.stats.record_latency(g.op, time.perf_counter() - t0)
         for j, (pos, res) in enumerate(zip(g.rows, rows)):
             if isinstance(items[pos], Pipeline):
                 stage1[pos] = res
@@ -228,6 +231,7 @@ def _run_stage2(engine, items, stage1, handoffs, results) -> None:
     for key, poss in groups.items():
         pop = key[0]
         engine.stats.count_group(pop)
+        t0 = time.perf_counter()
         ks = [items[pos].dataset_stage.k for pos in poss]
         total = int(sum(ks))
         # winner ids, handed off ON DEVICE (sliced from the stage-1
@@ -283,6 +287,7 @@ def _run_stage2(engine, items, stage1, handoffs, results) -> None:
                     extras={"stage1": stage1[pos],
                             "ds_ids": stage1[pos].ids, "valid": v})
                 off += k
+        engine.stats.record_latency(pop, time.perf_counter() - t0)
         engine.stats.pipeline_stage2 += len(poss)
 
 

@@ -82,7 +82,7 @@ class Query:
     k: int | None = None
     eps: float | None = None
     refine_levels: int = 3    # ExactHaus static params
-    chunk: int = 32
+    chunk: int | None = None  # None -> the engine's tuned default_chunk
 
     def __post_init__(self):
         if self.op not in OPS:

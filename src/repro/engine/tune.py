@@ -1,0 +1,225 @@
+"""One-time measured autotuning of the engine's dispatch constants.
+
+`tune_engine` replaces the seed's hard-coded routing constants with
+measurements taken at THIS engine's repository shapes:
+
+* **kernel routing** — for each tuned op (the fused ``bound_grid`` at the
+  engine's query-batch buckets, the per-pair ``directed_hausdorff`` and
+  the pair-grid ``hausdorff_grid`` at the repository's point capacity),
+  candidate :class:`~repro.kernels.autotune.KernelConfig`\\ s are timed
+  through :func:`repro.kernels.autotune.ensure_tuned` and the winner is
+  installed in the process-global table.  Tuned entries carry
+  ``min_q = min_d = 1``, so a verdict applies to its whole
+  ``(backend, op, shape bucket)`` — this is how measurement LOWERS the
+  seed thresholds when the kernel wins below them.
+
+* **bit-identity gate** — a kernel candidate is only allowed into the
+  sweep if its output at the probe shape is BITWISE identical to the
+  untuned default route's output.  XLA:CPU's FMA-contraction decisions
+  are shape-dependent, so per-shape bitwise equality is an empirical
+  property, not a given; gating on it makes "tuned constants never shift
+  a result" operationally true — the tuner can only ever change speed.
+  The default-route candidate always stays in the pool, so the sweep is
+  never empty.
+
+* **ExactHaus chunk** — the refinement chunk size is swept through REAL
+  ``engine.search`` dispatches (result cache disabled for the sweep) and
+  the per-op wall-clock booked in :class:`EngineStats.op_seconds` picks
+  the winner, installed as ``engine.default_chunk``.  Chunk only tiles
+  the refinement sweep — vals/ids are bit-identical under any chunk —
+  so retuning it between calls is always safe.
+
+The sweep costs a few compilations per candidate and is cached: repeated
+``engine.tune()`` calls in one process short-circuit per (op, bucket)
+unless ``force=True``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import autotune, ops
+from repro.engine.query import Query
+
+__all__ = ["tune_engine"]
+
+
+def _bitwise_equal(a, b) -> bool:
+    """Exact bitwise equality across a pytree pair (NaN-safe: identical
+    bit patterns compare equal via the void view)."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    for x, y in zip(la, lb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        if xa.shape != ya.shape or xa.dtype != ya.dtype:
+            return False
+        if xa.tobytes() != ya.tobytes():
+            return False
+    return True
+
+
+def _gate(run, candidates, default_cfg):
+    """Keep only candidates whose output bitwise matches the untuned
+    default route's output at the probe shape; the default route itself
+    always survives.  Returns (allowed, n_rejected)."""
+    reference = jax.tree.map(np.asarray, run(default_cfg))
+    allowed, rejected = [], 0
+    for cfg in candidates:
+        if _bitwise_equal(run(cfg), reference):
+            allowed.append(cfg)
+        else:
+            rejected += 1
+    if default_cfg not in allowed:
+        allowed.insert(0, default_cfg)
+    return allowed, rejected
+
+
+def _sweep(op, shape, run, candidates, *, repeats, force):
+    """Gate + ensure_tuned for one (op, probe shape); returns a report
+    row whether the decision was fresh or cached."""
+    default_cfg = autotune.DEFAULTS[op]
+    # pin the default verdict for THIS shape: resolve applies the seed
+    # threshold rule, and the reference output must be what an untuned
+    # process produces at exactly this shape
+    resolved = autotune.resolve(op, shape)
+    default_pinned = autotune.KernelConfig(
+        resolved.use_kernel, default_cfg.tq, default_cfg.td,
+        tile=default_cfg.tile, min_q=1, min_d=1)
+    allowed, rejected = _gate(run, candidates, default_pinned)
+
+    def runner(cfg):
+        jax.block_until_ready(run(cfg))
+
+    chosen, info = autotune.ensure_tuned(
+        op, shape, runner, allowed, repeats=repeats, force=force)
+    return {
+        "shape": tuple(int(s) for s in shape),
+        "key": list(autotune.table_key(op, shape)),
+        "use_kernel": chosen.use_kernel,
+        "tq": chosen.tq, "td": chosen.td, "tile": chosen.tile,
+        "candidates_rejected_bitwise": rejected,
+        "timings_s": None if info is None else info["timings_s"],
+        "cached": info is None,
+    }
+
+
+def _probe_sets(repo, n: int):
+    """n valid point sets cycled from the repository (host arrays)."""
+    pts = np.asarray(repo.ds_index.points)
+    val = np.asarray(repo.ds_index.valid)
+    live = [i for i in range(pts.shape[0]) if val[i].any()]
+    return [pts[live[i % len(live)]][val[live[i % len(live)]]]
+            for i in range(n)]
+
+
+def tune_engine(
+    engine,
+    *,
+    batches=(8, 32),
+    chunks=(16, 32, 64),
+    chunk_batch: int = 8,
+    repeats: int = 3,
+    force: bool = False,
+) -> dict:
+    """Measure-and-install the dispatch constants for ``engine``'s
+    repository (see module docstring).  Returns a report dict; the tuned
+    kernel verdicts land in the process-global autotune table (bumping
+    its epoch, which re-keys the engine's executable cache) and the
+    winning chunk lands in ``engine.default_chunk``."""
+    repo = engine.repo
+    ds = repo.ds_index
+    report: dict = {"backend": jax.default_backend()}
+
+    # -- fused bound grid: one probe per query-batch bucket ---------------
+    S = int(ds.radii.shape[0])
+    max_level = min(ds.depth, 3)
+    n_nodes = ds.level_slice(max_level).stop
+    levels = tuple((ds.level_slice(l).start, ds.level_slice(l).stop)
+                   for l in range(max_level + 1))
+    od = ds.centers[:, :n_nodes, :]
+    rd = ds.radii[:, :n_nodes]
+    dok = ds.counts[:, :n_nodes] > 0
+    bg_cands = [
+        autotune.KernelConfig(True, 8, 128, min_q=1, min_d=1),
+        autotune.KernelConfig(True, 8, 64, min_q=1, min_d=1),
+        autotune.KernelConfig(False, 8, 128, min_q=1, min_d=1),
+    ]
+    report["bound_grid"] = {}
+    for b in batches:
+        B = engine.bucket_for(int(b))
+        sel = jnp.arange(B) % S
+        oq = jnp.take(od, sel, axis=0)
+        rq = jnp.take(rd, sel, axis=0)
+        qok = jnp.take(dok, sel, axis=0)
+
+        def run_bg(cfg, oq=oq, rq=rq, qok=qok):
+            return ops.bound_grid(oq, rq, qok, od, rd, dok, levels=levels,
+                                  tb=cfg.tq, ts=cfg.td,
+                                  use_kernel=cfg.use_kernel)
+
+        report["bound_grid"][str(B)] = _sweep(
+            "bound_grid", (B, S), run_bg, bg_cands,
+            repeats=repeats, force=force)
+
+    # -- per-pair + pair-grid Hausdorff at the repo's point capacity ------
+    n_pad = int(ds.points.shape[-2])
+    sel = jnp.arange(2) % S
+    q2 = jnp.take(ds.points, sel, axis=0)
+    v2 = jnp.take(ds.valid, sel, axis=0)
+
+    def run_haus(cfg):
+        return ops.directed_hausdorff(q2[0], q2[1], v2[0], v2[1],
+                                      tq=cfg.tq, td=cfg.td,
+                                      use_kernel=cfg.use_kernel)
+
+    report["directed_hausdorff"] = _sweep(
+        "directed_hausdorff", (n_pad, n_pad), run_haus,
+        [autotune.KernelConfig(True, 256, 512, min_q=1, min_d=1),
+         autotune.KernelConfig(True, 128, 512, min_q=1, min_d=1),
+         autotune.KernelConfig(False, 256, 512, min_q=1, min_d=1)],
+        repeats=repeats, force=force)
+
+    ds_grid = jnp.stack([q2, q2], axis=1)        # (2, C=2, n_pad, dim)
+    dv_grid = jnp.stack([v2, v2], axis=1)
+
+    def run_grid(cfg):
+        return ops.directed_hausdorff_grid(
+            q2, ds_grid, v2, dv_grid,
+            tile=cfg.tile, tq=cfg.tq, td=cfg.td,
+            use_kernel=cfg.use_kernel)
+
+    report["hausdorff_grid"] = _sweep(
+        "hausdorff_grid", (n_pad, n_pad), run_grid,
+        [autotune.KernelConfig(True, 256, 512, tile=128, min_q=1, min_d=1),
+         autotune.KernelConfig(False, 256, 512, tile=128, min_q=1, min_d=1),
+         autotune.KernelConfig(False, 256, 512, tile=64, min_q=1, min_d=1)],
+        repeats=repeats, force=force)
+
+    # -- ExactHaus refinement chunk, timed through EngineStats ------------
+    k = max(1, min(4, engine._n_valid))
+    rows = engine._host_tree_rows(
+        engine.build_queries(_probe_sets(repo, chunk_batch)))
+    saved_cache = engine.result_cache_size
+    engine.result_cache_size = 0      # repeats must dispatch, not memoize
+    try:
+        timings = []
+        for chunk in chunks:
+            queries = [Query(op="topk_hausdorff", q_index=row, k=k,
+                             chunk=int(chunk)) for row in rows]
+            engine.search(queries)                # warmup / compile
+            before = engine.stats.op_seconds.get("topk_hausdorff", 0.0)
+            for _ in range(repeats):
+                engine.search(queries)
+            after = engine.stats.op_seconds.get("topk_hausdorff", 0.0)
+            timings.append((after - before) / repeats)
+    finally:
+        engine.result_cache_size = saved_cache
+    best = int(np.argmin(timings))
+    engine.default_chunk = int(chunks[best])
+    report["chunk"] = {
+        "candidates": [int(c) for c in chunks],
+        "timings_s": timings,
+        "chosen": engine.default_chunk,
+    }
+    report["table"] = autotune.report()
+    return report

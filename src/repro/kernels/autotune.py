@@ -1,0 +1,256 @@
+"""Autotuned dispatch constants for the Pallas kernel entry points.
+
+The seed wrappers in :mod:`repro.kernels.ops` hard-coded their routing
+constants (``tq=256 / td=512`` streaming tiles, the ``tile=128`` slab of
+the pair-grid evaluator, ``tn=tm=256`` bound tiles) and the kernel-vs-ref
+switch was a fixed size threshold.  This module replaces those constants
+with a small measured table:
+
+* :func:`resolve` — the ONLY routing decision point.  Every public op in
+  ``ops.py`` calls it from plain Python (BEFORE its inner jit boundary)
+  with the operand shapes; it returns the :class:`KernelConfig` whose
+  fields land in the jitted implementation as explicit static arguments.
+  Routing is therefore never baked into a traced program: a table update
+  changes what the wrapper passes, and the engine keys its executable
+  cache on :func:`epoch` so a tuner update can never leave a stale cached
+  executable serving old constants.
+* :func:`ensure_tuned` — the one-time measured sweep.  Callers (the
+  engine's ``tune()``, benchmarks) hand it a runner per candidate config;
+  the winner is cached per ``(backend, op, shape bucket)`` and
+  :func:`epoch` is bumped.  Tuning is strictly OPT-IN: until a sweep runs,
+  :data:`DEFAULTS` reproduce the seed constants exactly, so untuned code
+  paths behave (and route) precisely as before.
+
+Correctness is guarded twice: the per-element arithmetic of every kernel
+is the shared coordinate-unrolled form of its ``ref.*`` oracle (fp
+min/max reassociation is exact, so tiling changes no bits wherever XLA
+makes the same FMA-contraction choice — shape-dependent on CPU), and the
+engine's ``tune()`` sweep only admits a candidate after checking its
+output is BITWISE equal to the untuned default route at the probe shape.
+A tuned table can therefore only ever change SPEED.  The
+routing-boundary suite in ``tests/test_kernels.py`` asserts equality at
+and around every threshold.
+
+Environment overrides (read dynamically, so tests and CI can flip them
+per-process):
+
+* ``REPRO_FORCE_KERNEL=1`` — route every default call through the Pallas
+  kernel path regardless of size (thresholds drop to 1; tile sizes keep
+  their tuned/default values, so small inputs are padded up to one tile).
+  CI uses this to give the interpret-mode kernels real CPU coverage.
+* ``REPRO_FORCE_REF=1`` — route every default call through the pure-jnp
+  oracles.
+
+Explicit per-call arguments always win over both the table and the
+environment: ``use_kernel=False`` pins the ref path (callers inside
+vmapped frontier code rely on this), ``use_kernel=True`` forces the
+kernel path at ANY size (the wrappers pad up to one tile), and explicit
+tile sizes also become the routing thresholds, exactly like the seed
+keyword defaults did.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, replace
+
+import jax
+
+__all__ = [
+    "KernelConfig", "DEFAULTS", "resolve", "lookup", "ensure_tuned",
+    "set_config", "epoch", "table_key", "bucket", "report", "clear",
+]
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    """Routing decision + tile constants for one kernel entry point.
+
+    ``tq``/``td`` are the Pallas tile sizes along the two streamed operand
+    axes (``tn``/``tm`` for the bound matrices, ``tb``/``ts`` for the
+    fused bound grid, ``ta``/``tb`` for set intersection — the wrappers
+    map their historical keyword names onto these two fields).  ``tile``
+    is the sub-threshold streaming slab of the pair-grid evaluator.
+    ``min_q``/``min_d`` are the routing thresholds; ``None`` means "the
+    tile size", which reproduces the seed rule ``n >= tile``.  A tuned
+    table entry stores ``min_q = min_d = 1`` so its kernel-vs-ref verdict
+    applies to the whole shape bucket it was measured for.
+    """
+
+    use_kernel: bool = True
+    tq: int = 256
+    td: int = 512
+    tile: int = 128
+    min_q: int | None = None
+    min_d: int | None = None
+
+    def thresholds(self) -> tuple[int, int]:
+        return (self.tq if self.min_q is None else self.min_q,
+                self.td if self.min_d is None else self.min_d)
+
+
+#: Seed routing constants per op — the exact values the wrappers hard-coded
+#: before the tuner existed.  An untuned process resolves to these.
+DEFAULTS: dict[str, KernelConfig] = {
+    "directed_hausdorff": KernelConfig(True, 256, 512),
+    "nn_distance": KernelConfig(True, 256, 512),
+    "hausdorff_grid": KernelConfig(True, 256, 512, tile=128),
+    "bound_matrices": KernelConfig(True, 256, 256),
+    "set_intersect": KernelConfig(True, 256, 256),
+    # fused (B, S) bound grid: B rides the engine's query-batch bucket
+    # ladder, so the kernel only pays off for very large batches; the
+    # conservative default keeps the fused jnp oracle until a sweep says
+    # otherwise
+    "bound_grid": KernelConfig(True, 8, 128, min_q=256, min_d=256),
+}
+
+_table: dict[tuple, KernelConfig] = {}
+_epoch: int = 0
+
+
+def epoch() -> int:
+    """Monotone tuner-table version.  The engine folds this into its
+    executable-cache keys, so a table update (``set_config`` /
+    ``ensure_tuned``) transparently invalidates every executable that was
+    built under older routing constants."""
+    return _epoch
+
+
+def bucket(n: int) -> int:
+    """Power-of-two shape bucket (same ladder the engine pads batches to)."""
+    b = 1
+    n = int(n)
+    while b < n:
+        b *= 2
+    return b
+
+
+def table_key(op: str, shape) -> tuple:
+    """Cache key for one tuning decision: (backend, op, bucketed shape)."""
+    return (jax.default_backend(), op) + tuple(bucket(s) for s in shape)
+
+
+def lookup(op: str, shape) -> KernelConfig:
+    """Table/default/env lookup — pure host-side dict work, safe to call
+    at trace time (the wrappers call it while tracing outer jits)."""
+    base = _table.get(table_key(op, shape), DEFAULTS[op])
+    if os.environ.get("REPRO_FORCE_KERNEL"):
+        return replace(base, use_kernel=True, min_q=1, min_d=1)
+    if os.environ.get("REPRO_FORCE_REF"):
+        return replace(base, use_kernel=False)
+    return base
+
+
+def resolve(
+    op: str,
+    shape,
+    *,
+    tq: int | None = None,
+    td: int | None = None,
+    tile: int | None = None,
+    use_kernel: bool | None = None,
+) -> KernelConfig:
+    """Final routing decision for one call: explicit arguments beat the
+    table, the table beats :data:`DEFAULTS`.
+
+    Returns a config whose ``use_kernel`` is the RESOLVED verdict for this
+    shape: the seed threshold rule (``n_q >= min_q and n_d >= min_d``)
+    applied to the effective thresholds — explicit tile sizes double as
+    thresholds, exactly like the seed keyword defaults did.  An explicit
+    ``use_kernel=True`` forces the kernel path at any size (the wrappers
+    pad up to one tile); explicit ``False`` pins the ref path.
+    """
+    cfg = lookup(op, shape)
+    min_q, min_d = cfg.thresholds()
+    if tq is not None:
+        min_q = tq
+    if td is not None:
+        min_d = td
+    eff = replace(
+        cfg,
+        tq=cfg.tq if tq is None else tq,
+        td=cfg.td if td is None else td,
+        tile=cfg.tile if tile is None else tile,
+        min_q=min_q,
+        min_d=min_d,
+    )
+    n_q, n_d = int(shape[0]), int(shape[1])
+    if use_kernel is not None:
+        kernel = bool(use_kernel)
+    else:
+        kernel = eff.use_kernel and n_q >= min_q and n_d >= min_d
+    return replace(eff, use_kernel=kernel)
+
+
+def set_config(op: str, shape, cfg: KernelConfig) -> None:
+    """Install one tuned entry and bump :func:`epoch`."""
+    global _epoch
+    _table[table_key(op, shape)] = cfg
+    _epoch += 1
+
+
+def clear() -> None:
+    """Drop every tuned entry (tests).  Bumps :func:`epoch` so engines
+    holding executables built under tuned constants re-key."""
+    global _epoch
+    _table.clear()
+    _epoch += 1
+
+
+def ensure_tuned(
+    op: str,
+    shape,
+    runner,
+    candidates,
+    *,
+    repeats: int = 3,
+    force: bool = False,
+    timer=time.perf_counter,
+):
+    """One-time measured sweep for ``(op, shape bucket)``.
+
+    ``runner(cfg)`` must execute the op under candidate ``cfg`` and block
+    until the result is ready; it runs once for warmup/compile and then
+    ``repeats`` timed times per candidate.  The fastest candidate is
+    installed via :func:`set_config` (bumping :func:`epoch`) and returned
+    with the per-candidate timings.  A cached decision short-circuits
+    unless ``force=True`` — the sweep is one-time per process.
+
+    Must be called from plain Python (never inside a trace): it measures
+    wall-clock and mutates the process-global table.
+    """
+    key = table_key(op, shape)
+    if key in _table and not force:
+        return _table[key], None
+    timings = []
+    for cfg in candidates:
+        runner(cfg)                       # warmup / compile
+        t0 = timer()
+        for _ in range(repeats):
+            runner(cfg)
+        timings.append((timer() - t0) / repeats)
+    best = min(range(len(candidates)), key=timings.__getitem__)
+    chosen = candidates[best]
+    set_config(op, shape, chosen)
+    info = {
+        "key": key,
+        "timings_s": timings,
+        "chosen": best,
+        "use_kernel": chosen.use_kernel,
+    }
+    return chosen, info
+
+
+def report() -> dict:
+    """Snapshot of every tuned decision (observability / bench records)."""
+    return {
+        "epoch": _epoch,
+        "entries": {
+            repr(k): {
+                "use_kernel": v.use_kernel,
+                "tq": v.tq, "td": v.td, "tile": v.tile,
+                "min_q": v.min_q, "min_d": v.min_d,
+            }
+            for k, v in _table.items()
+        },
+    }

@@ -13,22 +13,35 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+BIG = 3.4e38  # python float: baked into the kernel, not a captured const
+
 TN = 256
 TM = 256
+
+# fused (B, S) bound grid: query-batch x corpus-slot tiles
+TB = 8
+TS = 128
 
 
 def _bound_kernel(oq_ref, rq_ref, od_ref, rd_ref, lb_ref, ub_ref, *, n_coords: int):
     oq = oq_ref[...]
     od = od_ref[...]
-    acc = jnp.zeros((oq.shape[0], od.shape[0]), jnp.float32)
+    # ref.unrolled_sq_dists' exact accumulation (first square, then adds
+    # in coordinate order) so the tile stays bitwise equal to the oracle
+    acc = None
     for c in range(n_coords):
         diff = oq[:, c][:, None] - od[:, c][None, :]
-        acc += diff * diff
+        sq = diff * diff
+        acc = sq if acc is None else acc + sq
     cd = jnp.sqrt(acc)
     rq = rq_ref[...][:, None]
-    rd = rd_ref[...][None, :]
-    lb_ref[...] = jnp.maximum(cd - rd, 0.0)
-    ub_ref[...] = jnp.sqrt(acc + rd * rd) + rq
+    rd = rd_ref[...]
+    # square rd at its own (TM,) shape BEFORE broadcasting, exactly like
+    # ref.bound_matrix's (rd * rd)[None, :] — fusing the square into the
+    # broadcast add invites an FMA contraction the oracle doesn't have
+    rd2 = (rd * rd)[None, :]
+    lb_ref[...] = jnp.maximum(cd - rd[None, :], 0.0)
+    ub_ref[...] = jnp.sqrt(acc + rd2) + rq
 
 
 def bound_matrices(
@@ -66,3 +79,102 @@ def bound_matrices(
         ],
         interpret=interpret,
     )(oq, rq, od, rd)
+
+
+def _bound_grid_kernel(oq_ref, rq_ref, qok_ref, od_ref, rd_ref, dok_ref,
+                       lb_ref, ub_ref, *, levels: tuple, n_coords: int):
+    """One (query-tile, slot-tile) step of the fused multi-level bound
+    reduction: every tree level's (LB, UB) frontier values from ONE dense
+    center-distance evaluation over the full node range.
+
+    oq_ref (TB, N, W) / rq_ref (TB, N) / qok_ref (TB, N): query-tree tile
+    od_ref (TS, N, W) / rd_ref (TS, N) / dok_ref (TS, N): corpus tile
+    lb_ref, ub_ref (L, TB, TS): per-level reduced bounds for this tile
+
+    The dense (TB, N, TS, N) bound tensors live only in VMEM/VREGs for
+    this tile; each level then reduces its static node slice [a, b) on
+    both node axes.  Per-element arithmetic matches
+    `ref.frontier_bound_levels` exactly (coordinate-unrolled squares,
+    same add order, rd squared at its own shape), and fp min/max are
+    exactly associative — kernel-vs-ref bitwise equality holds wherever
+    XLA makes the same FMA-contraction choice for the two program shapes
+    (shape-dependent on CPU; tests assert it at verified shapes and the
+    engine tuner gates kernel routing on it per shape bucket).
+    """
+    # (TB, TS, N, N) accumulation in ref.unrolled_sq_dists' exact axis
+    # layout and add order, so XLA emits the identical contraction as the
+    # jnp oracle and the kernel stays bitwise equal to the ref path
+    oq = oq_ref[...]
+    od = od_ref[...]
+    acc = None
+    for c in range(n_coords):
+        diff = oq[:, :, c][:, None, :, None] - od[:, :, c][None, :, None, :]
+        sq = diff * diff
+        acc = sq if acc is None else acc + sq
+    cd = jnp.sqrt(acc)
+    rd = rd_ref[...]
+    # square rd at its own (TS, N) shape before broadcasting, exactly like
+    # ref.frontier_bound_levels (see _bound_kernel for why)
+    rd2 = (rd * rd)[None, :, None, :]
+    lb = jnp.maximum(cd - rd[None, :, None, :], 0.0)
+    ub = jnp.sqrt(acc + rd2) + rq_ref[...][:, None, :, None]
+    dok = dok_ref[...][None, :, None, :]
+    lb = jnp.where(dok, lb, BIG)
+    ub = jnp.where(dok, ub, BIG)
+    qok = qok_ref[...][:, None, :]
+    for l, (a, b) in enumerate(levels):
+        okl = qok[..., a:b]
+        row_lb = jnp.min(lb[:, :, a:b, a:b], axis=-1)
+        row_ub = jnp.min(ub[:, :, a:b, a:b], axis=-1)
+        lb_ref[l] = jnp.max(jnp.where(okl, row_lb, -BIG), axis=-1)
+        ub_ref[l] = jnp.max(jnp.where(okl, row_ub, -BIG), axis=-1)
+
+
+def bound_grid(
+    oq: jax.Array,
+    rq: jax.Array,
+    q_ok: jax.Array,
+    od: jax.Array,
+    rd: jax.Array,
+    d_ok: jax.Array,
+    *,
+    levels: tuple,
+    n_coords: int,
+    tb: int = TB,
+    ts: int = TS,
+    interpret: bool = False,
+):
+    """Fused multi-level (B, S) frontier bounds: the kernel counterpart of
+    `ref.frontier_bound_levels`.
+
+    oq (B, N, W) / rq, q_ok (B, N) x od (S, N, W) / rd, d_ok (S, N) ->
+    (LB, UB) each (len(levels), B, S) f32.  B % tb == 0 and S % ts == 0
+    (ops.py pads; padded rows carry q_ok/d_ok = False).
+    """
+    B, N = rq.shape
+    S = rd.shape[0]
+    L = len(levels)
+    grid = (B // tb, S // ts)
+    kernel = functools.partial(_bound_grid_kernel, levels=tuple(levels),
+                               n_coords=n_coords)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, N, oq.shape[-1]), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tb, N), lambda i, j: (i, 0)),
+            pl.BlockSpec((tb, N), lambda i, j: (i, 0)),
+            pl.BlockSpec((ts, N, od.shape[-1]), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((ts, N), lambda i, j: (j, 0)),
+            pl.BlockSpec((ts, N), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, tb, ts), lambda i, j: (0, i, j)),
+            pl.BlockSpec((L, tb, ts), lambda i, j: (0, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, B, S), jnp.float32),
+            jax.ShapeDtypeStruct((L, B, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(oq, rq, q_ok, od, rd, d_ok)

@@ -47,10 +47,15 @@ def _min_dist_kernel(q_ref, d_ref, dvalid_ref, o_ref, *, n_coords: int):
 
     q = q_ref[...]
     d = d_ref[...]
-    acc = jnp.zeros((q.shape[0], d.shape[0]), jnp.float32)
+    # ref.unrolled_sq_dists' exact accumulation (first square, then adds in
+    # coordinate order — no zero init), so the tile arithmetic compiles to
+    # the identical contraction as the jnp oracle and routing never
+    # changes bits
+    acc = None
     for c in range(n_coords):  # static unroll over true coord count
         diff = q[:, c][:, None] - d[:, c][None, :]
-        acc += diff * diff
+        sq = diff * diff
+        acc = sq if acc is None else acc + sq
     acc = jnp.where(dvalid_ref[...][None, :], acc, BIG)
     o_ref[...] = jnp.minimum(o_ref[...], jnp.min(acc, axis=1))
 
@@ -86,3 +91,72 @@ def min_sq_dists(
         out_shape=jax.ShapeDtypeStruct((nq,), jnp.float32),
         interpret=interpret,
     )(q, d, d_valid)
+
+
+def _min_dist_grid_kernel(q_ref, d_ref, dvalid_ref, o_ref, *, n_coords: int):
+    """One (pair, Q-tile, D-tile) step of the (B, C) pair-grid evaluator.
+
+    q_ref      (1, TQ, W)    f32 : Q tile of pair (b, c) = (bc//C, bc%C)
+    d_ref      (1, 1, TD, W) f32 : D tile of that pair
+    dvalid_ref (1, 1, TD)    bool
+    o_ref      (1, 1, TQ)    f32 : running per-Q-row min SQUARED distance
+
+    Same flash-attention-style running reduction as `_min_dist_kernel`,
+    but the pair index is a grid axis — the whole (B, C) frontier is ONE
+    kernel launch instead of a vmap of per-pair launches.  The D-tile
+    axis is the fastest grid dimension, so the output block persists in
+    VMEM across the k sweep and is initialized at k == 0.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full(o_ref.shape, BIG, jnp.float32)
+
+    q = q_ref[0]
+    d = d_ref[0, 0]
+    acc = None  # ref.unrolled_sq_dists' accumulation, as in _min_dist_kernel
+    for c in range(n_coords):  # static unroll over true coord count
+        diff = q[:, c][:, None] - d[:, c][None, :]
+        sq = diff * diff
+        acc = sq if acc is None else acc + sq
+    acc = jnp.where(dvalid_ref[0, 0][None, :], acc, BIG)
+    o_ref[0, 0] = jnp.minimum(o_ref[0, 0], jnp.min(acc, axis=1))
+
+
+def min_sq_dists_grid(
+    q: jax.Array,
+    ds: jax.Array,
+    ds_valid: jax.Array,
+    *,
+    n_coords: int,
+    tq: int = TQ,
+    td: int = TD,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-Q-row min squared distance for every (query, chunk-slot) pair.
+
+    q (B, nq, W), ds (B, C, nd, W), ds_valid (B, C, nd) -> (B, C, nq) f32.
+    nq % tq == 0 and nd % td == 0 (ops.py pads).  One grid over
+    (B*C pairs, Q tiles, D tiles); bitwise equal to running
+    `min_sq_dists` per pair (identical tile arithmetic, exact min
+    reassociation).
+    """
+    B, C, nd, _ = ds.shape
+    nq = q.shape[1]
+    grid = (B * C, nq // tq, nd // td)
+    kernel = functools.partial(_min_dist_grid_kernel, n_coords=n_coords)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, q.shape[-1]),
+                         lambda bc, i, k: (bc // C, i, 0)),
+            pl.BlockSpec((1, 1, td, ds.shape[-1]),
+                         lambda bc, i, k: (bc // C, bc % C, k, 0)),
+            pl.BlockSpec((1, 1, td), lambda bc, i, k: (bc // C, bc % C, k)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq), lambda bc, i, k: (bc // C, bc % C, i)),
+        out_shape=jax.ShapeDtypeStruct((B, C, nq), jnp.float32),
+        interpret=interpret,
+    )(q, ds, ds_valid)

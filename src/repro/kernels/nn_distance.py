@@ -28,10 +28,13 @@ def _nn_kernel(q_ref, d_ref, dvalid_ref, dist_ref, idx_ref, *, n_coords: int, td
 
     q = q_ref[...]
     d = d_ref[...]
-    acc = jnp.zeros((q.shape[0], d.shape[0]), jnp.float32)
+    # ref.unrolled_sq_dists' exact accumulation (see hausdorff.py) so the
+    # kernel stays bitwise equal to the ref oracle across routing changes
+    acc = None
     for c in range(n_coords):
         diff = q[:, c][:, None] - d[:, c][None, :]
-        acc += diff * diff
+        sq = diff * diff
+        acc = sq if acc is None else acc + sq
     acc = jnp.where(dvalid_ref[...][None, :], acc, BIG)
     tile_min = jnp.min(acc, axis=1)
     tile_arg = jnp.argmin(acc, axis=1).astype(jnp.int32) + j * td

@@ -1,9 +1,19 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels.
 
-Handles padding to tile multiples, coordinate-dim padding, the TPU/interpret
-switch (this container is CPU: kernels run with interpret=True, which
-executes the kernel body in Python — correctness path; TPU is the perf
-target), and tiny-shape fallbacks to the pure-jnp oracles in ref.py.
+Each public op is a PLAIN-PYTHON wrapper that resolves its routing
+(kernel vs ref oracle, tile sizes) through :mod:`repro.kernels.autotune`
+and then calls an inner jitted implementation with the resolved constants
+as explicit static arguments.  Keeping the decision outside the jit
+boundary means tuned constants are never baked into a traced program —
+the autotuner's :func:`autotune.epoch` plus the engine's executable-cache
+keys guarantee a table update re-routes every subsequent dispatch.
+
+The inner impls handle padding to tile multiples, coordinate-dim padding,
+and the TPU/interpret switch (this container is CPU: kernels run with
+interpret=True, which executes the kernel body via XLA ops — correctness
+path; TPU is the perf target).  ``use_kernel=False`` pins the pure-jnp
+oracle in ref.py; ``use_kernel=True`` forces the kernel at any size (the
+padding helpers round tiny inputs up to one tile).
 """
 from __future__ import annotations
 
@@ -12,6 +22,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels import bound_matrix as _bm
 from repro.kernels import hausdorff as _haus
 from repro.kernels import nn_distance as _nn
@@ -40,13 +51,24 @@ def _pad_coords(x: Array, width: int) -> Array:
     return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, width - d)])
 
 
-@functools.partial(jax.jit, static_argnames=("tq", "td", "use_kernel"))
 def directed_hausdorff(
     q: Array, d: Array, q_valid: Array, d_valid: Array,
-    *, tq: int = 256, td: int = 512, use_kernel: bool = True,
+    *, tq: int | None = None, td: int | None = None,
+    use_kernel: bool | None = None,
 ) -> Array:
     """H(Q -> D), masked.  Kernel path streams D tiles (no HBM matrix)."""
-    if not use_kernel or q.shape[0] < tq or d.shape[0] < td:
+    cfg = autotune.resolve("directed_hausdorff", (q.shape[0], d.shape[0]),
+                           tq=tq, td=td, use_kernel=use_kernel)
+    return _directed_hausdorff(q, d, q_valid, d_valid, tq=cfg.tq, td=cfg.td,
+                               use_kernel=cfg.use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "td", "use_kernel"))
+def _directed_hausdorff(
+    q: Array, d: Array, q_valid: Array, d_valid: Array,
+    *, tq: int, td: int, use_kernel: bool,
+) -> Array:
+    if not use_kernel:
         return ref.directed_hausdorff(q, d, q_valid, d_valid)
     n_coords = q.shape[-1]
     width = max(8, n_coords)
@@ -60,13 +82,24 @@ def directed_hausdorff(
     return jnp.max(nnd)
 
 
-@functools.partial(jax.jit, static_argnames=("tq", "td", "use_kernel"))
 def nn_distance(
     q: Array, d: Array, q_valid: Array, d_valid: Array,
-    *, tq: int = 256, td: int = 512, use_kernel: bool = True,
+    *, tq: int | None = None, td: int | None = None,
+    use_kernel: bool | None = None,
 ):
     """Per-Q-point NN distance + D index (NNP hot loop)."""
-    if not use_kernel or q.shape[0] < tq or d.shape[0] < td:
+    cfg = autotune.resolve("nn_distance", (q.shape[0], d.shape[0]),
+                           tq=tq, td=td, use_kernel=use_kernel)
+    return _nn_distance(q, d, q_valid, d_valid, tq=cfg.tq, td=cfg.td,
+                        use_kernel=cfg.use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "td", "use_kernel"))
+def _nn_distance(
+    q: Array, d: Array, q_valid: Array, d_valid: Array,
+    *, tq: int, td: int, use_kernel: bool,
+):
+    if not use_kernel:
         return ref.nn_distance(q, d, q_valid, d_valid)
     n_coords = q.shape[-1]
     width = max(8, n_coords)
@@ -83,11 +116,10 @@ def nn_distance(
     return dist, idx
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("tile", "tq", "td", "use_kernel"))
 def directed_hausdorff_grid(
     q: Array, ds: Array, q_valid: Array, ds_valid: Array, *,
-    tile: int = 128, tq: int = 256, td: int = 512, use_kernel: bool = True,
+    tile: int | None = None, tq: int | None = None, td: int | None = None,
+    use_kernel: bool | None = None,
 ) -> Array:
     """H(Q_b -> D_{b,j}) over a (B, C) query x candidate-chunk grid.
 
@@ -96,38 +128,44 @@ def directed_hausdorff_grid(
     fused evaluation for every (query, chunk-slot) pair in the shared
     work frontier.
 
-    Kernel-sized shapes (nq >= tq and nd >= td) route to the Pallas
-    streaming kernel vmapped over the pair grid — the same routing rule
-    and kernel as :func:`directed_hausdorff`, so the host oracle's
-    per-pair evaluations take the identical code path at every shape.
-    Below the thresholds the D point axis is streamed in ``tile``-wide
-    slabs with a running minimum (non-multiple nd is padded with invalid
-    columns), so the intermediate is (B, C, nq, tile) instead of the full
-    (B, C, nq, nd) matrix.  Bitwise equal to `ref.directed_hausdorff` per
-    pair: the per-entry arithmetic is `ref.unrolled_sq_dists` on each
-    slab, and fp min/max are exactly associative, so the slab
-    reassociation changes no bits (asserted by the ExactHaus bit-identity
-    suites).
+    Kernel-sized shapes route to ONE Pallas pair-grid launch
+    (`hausdorff.min_sq_dists_grid`: grid = (B*C, Q-tiles, D-tiles)),
+    bitwise equal per pair to the per-pair streaming kernel and to the
+    jitted per-pair op.  Below the thresholds the D point axis is
+    streamed in ``tile``-wide slabs with a running minimum (non-multiple
+    nd is padded with invalid columns), so the intermediate is
+    (B, C, nq, tile) instead of the full (B, C, nq, nd) matrix.  Bitwise
+    equal to `ref.directed_hausdorff` per pair on both paths: the
+    per-entry arithmetic is `ref.unrolled_sq_dists` on each slab/tile,
+    and fp min/max are exactly associative, so the reassociation changes
+    no bits (asserted by the ExactHaus bit-identity suites).
     """
+    cfg = autotune.resolve("hausdorff_grid", (q.shape[1], ds.shape[2]),
+                           tq=tq, td=td, tile=tile, use_kernel=use_kernel)
+    return _directed_hausdorff_grid(q, ds, q_valid, ds_valid, tile=cfg.tile,
+                                    tq=cfg.tq, td=cfg.td,
+                                    use_kernel=cfg.use_kernel)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile", "tq", "td", "use_kernel"))
+def _directed_hausdorff_grid(
+    q: Array, ds: Array, q_valid: Array, ds_valid: Array, *,
+    tile: int, tq: int, td: int, use_kernel: bool,
+) -> Array:
     B, C, nd, n_coords = ds.shape
     nq = q.shape[1]
 
-    if use_kernel and nq >= tq and nd >= td:
+    if use_kernel:
         width = max(8, n_coords)
         qp = _pad_coords(q, width)
         qp = jnp.pad(qp, ((0, 0), (0, -nq % tq), (0, 0)))
         dp = _pad_coords(ds, width)
         dp = jnp.pad(dp, ((0, 0), (0, 0), (0, -nd % td), (0, 0)))
         dv = jnp.pad(ds_valid, ((0, 0), (0, 0), (0, -nd % td)))
-
-        def per_pair(qp_i, dp_ij, dv_ij):
-            return _haus.min_sq_dists(qp_i, dp_ij, dv_ij,
-                                      n_coords=n_coords, tq=tq, td=td,
-                                      interpret=INTERPRET)
-
-        mins = jax.vmap(lambda qp_i, dp_i, dv_i: jax.vmap(
-            lambda dp_ij, dv_ij: per_pair(qp_i, dp_ij, dv_ij)
-        )(dp_i, dv_i))(qp, dp, dv)[:, :, :nq]
+        mins = _haus.min_sq_dists_grid(qp, dp, dv, n_coords=n_coords,
+                                       tq=tq, td=td,
+                                       interpret=INTERPRET)[:, :, :nq]
         mins = jnp.minimum(mins, ref.BIG)
     else:
         if nd % tile:
@@ -168,25 +206,47 @@ def directed_hausdorff_grid(
     return jnp.max(nnd, axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("tq", "td", "use_kernel"))
 def nn_distance_batched(
     qs: Array, ds: Array, qs_valid: Array, ds_valid: Array,
-    *, tq: int = 256, td: int = 512, use_kernel: bool = True,
+    *, tq: int | None = None, td: int | None = None,
+    use_kernel: bool | None = None,
 ):
     """Per-point NN for B (query, dataset) pairs: (B, nq) dists + ids."""
+    cfg = autotune.resolve("nn_distance", (qs.shape[1], ds.shape[1]),
+                           tq=tq, td=td, use_kernel=use_kernel)
+    return _nn_distance_batched(qs, ds, qs_valid, ds_valid, tq=cfg.tq,
+                                td=cfg.td, use_kernel=cfg.use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "td", "use_kernel"))
+def _nn_distance_batched(
+    qs: Array, ds: Array, qs_valid: Array, ds_valid: Array,
+    *, tq: int, td: int, use_kernel: bool,
+):
     return jax.vmap(
-        lambda q, d, qv, dv: nn_distance(q, d, qv, dv, tq=tq, td=td,
-                                         use_kernel=use_kernel)
+        lambda q, d, qv, dv: _nn_distance(q, d, qv, dv, tq=tq, td=td,
+                                          use_kernel=use_kernel)
     )(qs, ds, qs_valid, ds_valid)
 
 
-@functools.partial(jax.jit, static_argnames=("tn", "tm", "use_kernel"))
 def bound_matrices(
     oq: Array, rq: Array, od: Array, rd: Array,
-    *, tn: int = 256, tm: int = 256, use_kernel: bool = True,
+    *, tn: int | None = None, tm: int | None = None,
+    use_kernel: bool | None = None,
 ):
     """Eq. 4 (lb, ub) matrices over two node frontiers."""
-    if not use_kernel or oq.shape[0] < tn or od.shape[0] < tm:
+    cfg = autotune.resolve("bound_matrices", (oq.shape[0], od.shape[0]),
+                           tq=tn, td=tm, use_kernel=use_kernel)
+    return _bound_matrices(oq, rq, od, rd, tn=cfg.tq, tm=cfg.td,
+                           use_kernel=cfg.use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "tm", "use_kernel"))
+def _bound_matrices(
+    oq: Array, rq: Array, od: Array, rd: Array,
+    *, tn: int, tm: int, use_kernel: bool,
+):
+    if not use_kernel:
         return ref.bound_matrix(oq, rq, od, rd)
     n_coords = oq.shape[-1]
     width = max(8, n_coords)
@@ -200,13 +260,75 @@ def bound_matrices(
     return lb[:nq, :nd], ub[:nq, :nd]
 
 
-@functools.partial(jax.jit, static_argnames=("ta", "tb", "use_kernel"))
+def bound_grid(
+    oq: Array, rq: Array, q_ok: Array, od: Array, rd: Array, d_ok: Array,
+    *, levels: tuple, tb: int | None = None, ts: int | None = None,
+    use_kernel: bool | None = None,
+):
+    """Fused multi-level (B, S) frontier bounds — Eq. 4 plus the min/max
+    frontier collapse for EVERY tree level in one op.
+
+    oq (B, N, dim) / rq, q_ok (B, N): batched query-tree node
+    centers/radii/occupancy over the contiguous node range [0, N);
+    od (S, N, dim) / rd, d_ok (S, N): the corpus trees.  ``levels`` is a
+    static tuple of per-level (start, stop) node slices.  Returns
+    (LB, UB), each (len(levels), B, S) — LB[l, b, s] is exactly the
+    scalar `frontier_bounds` reduces level l of pair (b, s) to.
+
+    Kernel-sized batches route to ONE Pallas launch over (B-tiles,
+    S-tiles) computing all levels per tile (`bound_matrix.bound_grid`);
+    otherwise the fused jnp oracle `ref.frontier_bound_levels` runs.
+    Routing stability: every ExactHaus path (host oracle, local batched,
+    sharded) calls THIS op at the same shapes, so they route together and
+    stay mutually bit-identical (asserted by the equivalence suites);
+    kernel-vs-ref bitwise equality is additionally asserted at verified
+    shapes and gated per shape bucket by the engine tuner.
+    """
+    cfg = autotune.resolve("bound_grid", (oq.shape[0], od.shape[0]),
+                           tq=tb, td=ts, use_kernel=use_kernel)
+    return _bound_grid(oq, rq, q_ok, od, rd, d_ok, levels=tuple(levels),
+                       tb=cfg.tq, ts=cfg.td, use_kernel=cfg.use_kernel)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("levels", "tb", "ts", "use_kernel"))
+def _bound_grid(
+    oq: Array, rq: Array, q_ok: Array, od: Array, rd: Array, d_ok: Array,
+    *, levels: tuple, tb: int, ts: int, use_kernel: bool,
+):
+    if not use_kernel:
+        return ref.frontier_bound_levels(oq, rq, q_ok, od, rd, d_ok, levels)
+    n_coords = oq.shape[-1]
+    width = max(8, n_coords)
+    B, S = oq.shape[0], od.shape[0]
+    oqp = _pad_rows(_pad_coords(oq, width), tb)
+    rqp = _pad_rows(rq, tb)
+    qop = _pad_rows(q_ok, tb, fill=False)
+    odp = _pad_rows(_pad_coords(od, width), ts)
+    rdp = _pad_rows(rd, ts)
+    dop = _pad_rows(d_ok, ts, fill=False)
+    lb, ub = _bm.bound_grid(oqp, rqp, qop, odp, rdp, dop,
+                            levels=levels, n_coords=n_coords, tb=tb, ts=ts,
+                            interpret=INTERPRET)
+    return lb[:, :B, :S], ub[:, :B, :S]
+
+
 def set_intersect_counts(
-    sa: Array, sb: Array, *, ta: int = 256, tb: int = 256,
-    use_kernel: bool = True,
+    sa: Array, sb: Array, *, ta: int | None = None, tb: int | None = None,
+    use_kernel: bool | None = None,
 ) -> Array:
     """GBO count matrix between signature stacks (na, W) x (nb, W)."""
-    if not use_kernel or sa.shape[0] < ta or sb.shape[0] < tb:
+    cfg = autotune.resolve("set_intersect", (sa.shape[0], sb.shape[0]),
+                           tq=ta, td=tb, use_kernel=use_kernel)
+    return _set_intersect_counts(sa, sb, ta=cfg.tq, tb=cfg.td,
+                                 use_kernel=cfg.use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("ta", "tb", "use_kernel"))
+def _set_intersect_counts(
+    sa: Array, sb: Array, *, ta: int, tb: int, use_kernel: bool,
+) -> Array:
+    if not use_kernel:
         return ref.set_intersect_count(sa, sb)
     na, nb = sa.shape[0], sb.shape[0]
     sap = _pad_rows(sa, ta)

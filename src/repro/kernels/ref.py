@@ -52,10 +52,14 @@ def directed_hausdorff(q: Array, d: Array, q_valid: Array, d_valid: Array) -> Ar
 
 
 def nn_distance(q: Array, d: Array, q_valid: Array, d_valid: Array):
-    """Per-Q-point nearest neighbor in D: (dists (nq,), idx (nq,))."""
-    diff = q[:, None, :] - d[None, :, :]
-    d2 = jnp.sum(diff * diff, axis=-1)
-    d2 = jnp.where(d_valid[None, :], d2, BIG)
+    """Per-Q-point nearest neighbor in D: (dists (nq,), idx (nq,)).
+
+    Distances use :func:`masked_sq_dists` (the shared coordinate-unrolled
+    accumulation) so the oracle's per-entry arithmetic is bitwise the same
+    as the NN kernel's tile arithmetic — the kernel-vs-ref routing
+    boundary can then never shift a distance by even one ulp.
+    """
+    d2 = masked_sq_dists(q, d, d_valid)
     idx = jnp.argmin(d2, axis=1).astype(jnp.int32)
     dist = jnp.sqrt(jnp.min(d2, axis=1))
     dist = jnp.where(q_valid, dist, 0.0)
@@ -79,6 +83,55 @@ def bound_matrix(oq: Array, rq: Array, od: Array, rd: Array):
     lb = jnp.maximum(cd - rd[None, :], 0.0)
     ub = jnp.sqrt(cd2 + (rd * rd)[None, :]) + rq[:, None]
     return lb, ub
+
+
+def frontier_bound_levels(oq: Array, rq: Array, q_ok: Array,
+                          od: Array, rd: Array, d_ok: Array,
+                          levels: tuple):
+    """Fused multi-level (B, S) frontier bound reduction (Eq. 4 + the
+    min/max frontier collapse of `core.search.frontier_bounds`), every
+    level in ONE pass over the node range.
+
+    oq (B, N, dim) / rq (B, N) / q_ok (B, N) are the query trees' node
+    centers/radii/occupancy over the contiguous node range covering every
+    level; od (S, N, dim) / rd (S, N) / d_ok (S, N) likewise for the
+    corpus trees.  ``levels`` is a static tuple of (start, stop) node
+    slices — one per tree level, applied to BOTH node axes (the bound
+    phases always compare level l against level l).
+
+    Returns (LB, UB), each (n_levels, B, S): for level slice [a, b),
+
+        LB[l, b, s] = max_{i in q_ok} min_{j in d_ok} lb(i, j)
+
+    over nodes i, j in [a, b), and symmetrically for UB — the per-level
+    value `frontier_bounds` computes from its per-level `bound_matrix`.
+    The per-entry arithmetic is the same coordinate-unrolled form and fp
+    min/max reductions are exactly associative, so the REDUCTION order
+    changes no bits; residual deviation vs the per-level composition is
+    XLA's shape-dependent FMA contraction on the squared-distance
+    accumulation (~1 ulp, asserted within tolerance by the bound_phases
+    benchmark).  What the suites assert BITWISE is kernel-vs-ref equality
+    of this fused op at verified shapes (tests/test_kernels.py) and
+    cross-path ExactHaus equality (all pipelines consume this one op).
+    """
+    cd2 = unrolled_sq_dists(oq[:, None, :, None, :], od[None, :, None, :, :])
+    cd = jnp.sqrt(cd2)                       # (B, S, N, N)
+    # square rd at its own (S, N) shape before broadcasting, matching
+    # ref.bound_matrix's (rd * rd)[None, :]
+    rd2 = (rd * rd)[None, :, None, :]
+    lb = jnp.maximum(cd - rd[None, :, None, :], 0.0)
+    ub = jnp.sqrt(cd2 + rd2) + rq[:, None, :, None]
+    lb = jnp.where(d_ok[None, :, None, :], lb, BIG)
+    ub = jnp.where(d_ok[None, :, None, :], ub, BIG)
+    ok = q_ok[:, None, :]
+    LBs, UBs = [], []
+    for a, b in levels:
+        okl = ok[..., a:b]
+        row_lb = jnp.min(lb[:, :, a:b, a:b], axis=-1)
+        row_ub = jnp.min(ub[:, :, a:b, a:b], axis=-1)
+        LBs.append(jnp.max(jnp.where(okl, row_lb, -BIG), axis=-1))
+        UBs.append(jnp.max(jnp.where(okl, row_ub, -BIG), axis=-1))
+    return jnp.stack(LBs), jnp.stack(UBs)
 
 
 def set_intersect_count(sa: Array, sb: Array) -> Array:

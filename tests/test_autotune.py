@@ -1,0 +1,168 @@
+"""Autotuned dispatch-constant semantics (`repro.kernels.autotune` +
+`repro.engine.tune`): untuned defaults reproduce the seed constants,
+explicit arguments beat table entries beat defaults, env vars force
+routing, measured sweeps install the fastest bitwise-safe candidate, and
+the epoch bump retires engine executables built under stale constants.
+"""
+import numpy as np
+import pytest
+
+from conftest import make_clustered_datasets
+from repro.core.build import build_repository
+from repro.engine import QueryEngine
+from repro.kernels import autotune
+from repro.kernels.autotune import KernelConfig
+
+THETA = 5
+
+
+@pytest.fixture(autouse=True)
+def _clean_table(monkeypatch):
+    """Each test sees an untuned table and no forcing env."""
+    monkeypatch.delenv("REPRO_FORCE_KERNEL", raising=False)
+    monkeypatch.delenv("REPRO_FORCE_REF", raising=False)
+    autotune.clear()
+    yield
+    autotune.clear()
+
+
+def test_defaults_reproduce_seed_constants():
+    """An untuned process must route exactly like the seed's hard-coded
+    thresholds: kernel at (256, 512)+ streaming shapes, ref below."""
+    cfg = autotune.resolve("directed_hausdorff", (256, 512))
+    assert (cfg.use_kernel, cfg.tq, cfg.td) == (True, 256, 512)
+    assert not autotune.resolve("directed_hausdorff", (255, 512)).use_kernel
+    assert not autotune.resolve("directed_hausdorff", (256, 511)).use_kernel
+    assert not autotune.resolve("nn_distance", (100, 100)).use_kernel
+    grid = autotune.resolve("hausdorff_grid", (24, 100))
+    assert not grid.use_kernel and grid.tile == 128
+    bm = autotune.resolve("bound_matrices", (256, 256))
+    assert bm.use_kernel and (bm.tq, bm.td) == (256, 256)
+    # fused bound grid: conservative default keeps the jnp oracle at the
+    # engine's usual batch buckets
+    bg = autotune.resolve("bound_grid", (8, 128))
+    assert not bg.use_kernel and (bg.tq, bg.td) == (8, 128)
+    assert autotune.resolve("bound_grid", (256, 256)).use_kernel
+
+
+def test_explicit_args_beat_table_beat_defaults():
+    shape = (64, 64)
+    assert not autotune.resolve("directed_hausdorff", shape).use_kernel
+    autotune.set_config("directed_hausdorff", shape,
+                        KernelConfig(True, 32, 32, min_q=1, min_d=1))
+    cfg = autotune.resolve("directed_hausdorff", shape)
+    assert cfg.use_kernel and (cfg.tq, cfg.td) == (32, 32)
+    # explicit tile arguments double as thresholds (seed keyword
+    # semantics): tq=128 > 64 rows pushes the call back to ref
+    assert not autotune.resolve("directed_hausdorff", shape, tq=128).use_kernel
+    # explicit use_kernel overrides table, defaults, and size rules
+    assert autotune.resolve("directed_hausdorff", (2, 2),
+                            use_kernel=True).use_kernel
+    assert not autotune.resolve("directed_hausdorff", (1024, 1024),
+                                use_kernel=False).use_kernel
+
+
+def test_bucketing_shares_entries():
+    autotune.set_config("nn_distance", (300, 600), KernelConfig(False))
+    # (300, 600) buckets to (512, 1024): every shape in that bucket hits
+    # the tuned entry, other buckets stay on defaults
+    assert not autotune.resolve("nn_distance", (511, 1024)).use_kernel
+    assert autotune.resolve("nn_distance", (256, 512)).use_kernel
+
+
+def test_epoch_bumps_on_table_changes():
+    e0 = autotune.epoch()
+    autotune.set_config("directed_hausdorff", (64, 64), KernelConfig(False))
+    assert autotune.epoch() == e0 + 1
+    autotune.clear()
+    assert autotune.epoch() == e0 + 2
+
+
+def test_env_forcing(monkeypatch):
+    monkeypatch.setenv("REPRO_FORCE_KERNEL", "1")
+    assert autotune.resolve("directed_hausdorff", (4, 4)).use_kernel
+    monkeypatch.delenv("REPRO_FORCE_KERNEL")
+    monkeypatch.setenv("REPRO_FORCE_REF", "1")
+    assert not autotune.resolve("directed_hausdorff",
+                                (1024, 1024)).use_kernel
+    # explicit per-call arguments still beat the environment
+    assert autotune.resolve("directed_hausdorff", (1024, 1024),
+                            use_kernel=True).use_kernel
+
+
+def test_ensure_tuned_picks_fastest_and_caches():
+    cands = [KernelConfig(False), KernelConfig(True, 8, 8, min_q=1, min_d=1)]
+    clock = [0.0]
+    runs = []
+
+    def runner(cfg):
+        runs.append(cfg)
+        clock[0] += 0.1 if cfg.use_kernel else 0.5   # kernel is "faster"
+
+    cfg, info = autotune.ensure_tuned("directed_hausdorff", (64, 64),
+                                      runner, cands, repeats=2,
+                                      timer=lambda: clock[0])
+    assert cfg.use_kernel and info["chosen"] == 1
+    assert len(runs) == 2 * len(cands) + len(cands)  # warmup + timed
+    # the verdict is installed and resolve() serves it
+    assert autotune.resolve("directed_hausdorff", (64, 64)).use_kernel
+    # a second sweep short-circuits on the cached entry
+    n = len(runs)
+    cfg2, info2 = autotune.ensure_tuned("directed_hausdorff", (64, 64),
+                                        runner, cands, repeats=2,
+                                        timer=lambda: clock[0])
+    assert info2 is None and len(runs) == n and cfg2 == cfg
+
+
+@pytest.fixture(scope="module")
+def engine():
+    datasets = make_clustered_datasets(9, seed=2, n_points=(10, 30))
+    repo, _ = build_repository(datasets, leaf_capacity=16, theta=THETA,
+                               remove_outliers=False)
+    return QueryEngine(repo, result_cache_size=0)
+
+
+def test_engine_rekeys_executables_on_epoch_bump(engine):
+    """A tuner update must retire every cached executable (their routing
+    constants are stale): the same query misses the executable cache once
+    after set_config, then caches again — and returns identical results."""
+    rng = np.random.default_rng(5)
+    lo = rng.uniform(-60, 40, (2, 2)).astype(np.float32)
+    hi = lo + 10.0
+    want = [np.asarray(r) for r in engine.range_search(lo, hi)]
+    misses0 = engine.stats.cache_misses
+    engine.range_search(lo, hi)
+    assert engine.stats.cache_misses == misses0      # warm: pure hits
+    autotune.set_config("directed_hausdorff", (64, 64), KernelConfig(False))
+    got = [np.asarray(r) for r in engine.range_search(lo, hi)]
+    assert engine.stats.cache_misses == misses0 + 1  # re-keyed once
+    engine.range_search(lo, hi)
+    assert engine.stats.cache_misses == misses0 + 1  # cached again
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+def test_engine_tune_gates_and_installs(engine):
+    """engine.tune() runs the measured sweeps, installs verdicts for its
+    probe buckets (epoch bump), picks a default chunk from the candidate
+    list, and leaves results bit-identical to the untuned engine."""
+    rng = np.random.default_rng(7)
+    lo = rng.uniform(-60, 40, (2, 2)).astype(np.float32)
+    hi = lo + 10.0
+    want = [np.asarray(r) for r in engine.range_search(lo, hi)]
+    e0 = autotune.epoch()
+    report = engine.tune(batches=(2,), chunks=(16, 32), chunk_batch=2,
+                         repeats=1)
+    assert autotune.epoch() > e0
+    assert engine.default_chunk in (16, 32)
+    assert report["chunk"]["chosen"] in (16, 32)
+    # every sweep row carries its gate accounting and a winner
+    rows = [report["directed_hausdorff"], report["hausdorff_grid"],
+            *report["bound_grid"].values()]
+    for row in rows:
+        assert row["candidates_rejected_bitwise"] >= 0
+        if not row["cached"]:
+            assert len(row["timings_s"]) >= 1
+    got = [np.asarray(r) for r in engine.range_search(lo, hi)]
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)

@@ -151,6 +151,68 @@ def test_queue_timeout_flush(env):
         server.stop()
 
 
+def test_adaptive_drain_and_latency_stats(env):
+    """The adaptive (queue-depth-driven) policy must answer every request
+    correctly, book per-op latency EWMAs on both the server (request
+    latency) and the engine (dispatch latency — what sizes the straggler
+    window), and expose latency percentiles."""
+    datasets, repo = env
+    engine = QueryEngine(repo)
+    server = SearchServer(engine, max_batch=16, max_wait_ms=100.0,
+                          adaptive=True).start()
+    try:
+        rng = np.random.default_rng(23)
+        lo = rng.uniform(-60, 40, (6, 2)).astype(np.float32)
+        hi = lo + 8.0
+        futures = [server.submit("range_search", r_lo=lo[i], r_hi=hi[i])
+                   for i in range(6)]
+        got = [f.result(timeout=600) for f in futures]
+        direct = QueryEngine(repo)
+        for i, res in enumerate(got):
+            want = direct.range_search(lo[i][None], hi[i][None])[0]
+            np.testing.assert_array_equal(np.asarray(res),
+                                          np.asarray(want))
+        assert server.stats.requests == 6
+        assert server.stats.op_ewma["range_search"] > 0.0
+        assert server.stats.p99_ms >= server.stats.p50_ms >= 0.0
+        assert engine.stats.latency_ewma["range_search"] > 0.0
+        # a lone straggler after the EWMAs exist exercises the sized
+        # window path and still resolves promptly
+        lone = server.submit("range_search", r_lo=lo[0], r_hi=hi[0])
+        np.testing.assert_array_equal(
+            np.asarray(lone.result(timeout=600)), np.asarray(got[0]))
+    finally:
+        server.stop()
+
+
+def test_depth_scaled_drain_bound(env):
+    """Under deep backlog (queue deeper than max_batch) the adaptive
+    drain grows to OVERFILL x max_batch so dispatch overhead amortises
+    over more requests; the static policy keeps the fixed bound.  Calls
+    _drain directly on an unstarted, pre-filled server — no dispatcher
+    thread, fully deterministic."""
+    datasets, repo = env
+    engine = QueryEngine(repo)
+    from repro.launch.serve_search import Request
+
+    def prefill(adaptive, n):
+        server = SearchServer(engine, max_batch=8, max_wait_ms=2.0,
+                              adaptive=adaptive)
+        for _ in range(n):
+            server._queue.put(Request("range_search", None))
+        return server
+
+    deep = prefill(True, 3 * 8)
+    assert len(deep._drain()) == 3 * 8      # whole backlog, one drain
+    assert SearchServer.OVERFILL * 8 >= 3 * 8
+    over = prefill(True, 5 * 8)             # backlog beyond OVERFILL
+    assert len(over._drain()) == SearchServer.OVERFILL * 8
+    shallow = prefill(True, 4)              # no overfill below max_batch
+    assert len(shallow._drain()) == 4
+    static = prefill(False, 3 * 8)
+    assert len(static._drain()) == 8        # seed policy: fixed bound
+
+
 def test_submit_unknown_op_and_stopped_server(env):
     datasets, repo = env
     server = SearchServer(QueryEngine(repo), max_batch=8)
