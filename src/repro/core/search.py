@@ -46,6 +46,21 @@ from repro.kernels import ops
 Array = jax.Array
 BIG = 3.4e38
 
+# ExactHaus prune guard: XLA codegen for different slot extents (the
+# sharded engines slice the slot axis, so each shard count compiles its
+# own kernel shapes) can drift the Eq. 4 BOUND values by a few ulps
+# (FMA/vectorization reassociation), and a strict ``LB <= tau`` at an
+# exact tie would then prune a true top-k member under one mesh shape and
+# keep it under another.  Comparing against ``tau * TAU_GUARD`` admits
+# candidates within ~100 ulps of the threshold; that is bit-safe by the
+# superset rule (an extra EXACT evaluation is > H_k and cannot enter the
+# top-k — exact values are computed on fixed chunk shapes, so they carry
+# no shape drift) and makes the prune DECISIONS, hence the returned
+# values/ids, stable across shard shapes.  A single f32 multiply so the
+# device (XLA) and host-oracle (numpy) pipelines compute the guard
+# bit-identically — no add that a compiler could fuse into an FMA.
+TAU_GUARD = np.float32(1.0 + 1e-5)
+
 
 class SearchStats(NamedTuple):
     nodes_evaluated: int
@@ -342,7 +357,7 @@ def _hausdorff_bound_phases(
     LB = jnp.where(valid[None, :], LB, BIG)
     UB = jnp.where(valid[None, :], UB, BIG)
     tau = kth_ub(UB)
-    cand = LB <= tau[:, None]
+    cand = LB <= (tau * TAU_GUARD)[:, None]
     if axis is not None and n_slots_total is not None:
         # shard padding widened the slot range: keep those slots out of
         # cand so the counters match the unsharded pipeline even when
@@ -360,7 +375,7 @@ def _hausdorff_bound_phases(
         LB = jnp.where(cand, jnp.maximum(LB, LB_l), LB)
         UB = jnp.where(cand, jnp.minimum(UB, UB_l), UB)
         tau = kth_ub(jnp.where(valid[None, :], UB, BIG))
-        cand = cand & (LB <= tau[:, None])
+        cand = cand & (LB <= (tau * TAU_GUARD)[:, None])
         nodes_evaluated = nodes_evaluated + count(cand) * (1 << level)
 
     out = (LB, tau, cand, nodes_evaluated, count(cand))
@@ -450,9 +465,11 @@ def _phase2_exact_loop(
 
     def has_work(pos, tau_c):
         # seed stopping rule per query: candidates remain, head not pruned
+        # (tau guarded so ulp-level bound drift across shard shapes cannot
+        # flip the decision — see TAU_GUARD)
         lb0 = jnp.take_along_axis(lb_p, pos[:, None], axis=1,
                                   mode="clip")[:, 0]
-        return (pos < S) & (lb0 < BIG / 2) & (lb0 <= tau_c)
+        return (pos < S) & (lb0 < BIG / 2) & (lb0 <= tau_c * TAU_GUARD)
 
     def reduce_any(go):
         if axis is None:
@@ -497,6 +514,16 @@ def _phase2_exact_loop(
         tau.astype(jnp.float32),
         jnp.zeros((B,), jnp.int32),
     )
+    if axis is not None:
+        # XLA CPU miscompiles this loop's ENTRY at some shard counts
+        # (observed at 2 shards): fusing the psum'd init continue-flag into
+        # the loop-entry computation leaves shards disagreeing about the
+        # first iteration, which desynchronises the in-body collectives and
+        # silently drops a shard's chunk evaluations.  Pinning the init
+        # carry behind an optimization_barrier keeps the flag a plain
+        # all-reduced value every shard reads identically.  Values are
+        # unchanged — the barrier only blocks the bad fusion.
+        init = jax.lax.optimization_barrier(init)
     _, _, exact_vals, _, evaluated = jax.lax.while_loop(cond, body, init)
     if axis is not None:
         evaluated = jax.lax.psum(evaluated, axis)
@@ -629,8 +656,8 @@ def topk_hausdorff_host(
         ids = ids[lb_np[ids] < BIG / 2]
         if ids.size == 0:
             break
-        if lb_np[ids[0]] > tau_f:
-            break  # everything remaining is pruned
+        if lb_np[ids[0]] > np.float32(tau_f) * TAU_GUARD:
+            break  # everything remaining is pruned (guarded; see TAU_GUARD)
         pad = np.zeros((chunk,), np.int64)
         pad[: ids.size] = ids
         hs = np.asarray(eval_chunk(d_pts_all[pad], d_val_all[pad]))

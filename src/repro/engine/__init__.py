@@ -36,6 +36,11 @@ from repro.engine.query import (  # noqa: F401
     Query,
     SearchResult,
 )
+from repro.engine.replicated import (  # noqa: F401
+    ReplicatedDispatcher,
+    ReplicatedQueryEngine,
+    replica_mesh,
+)
 from repro.engine.sharded import (  # noqa: F401
     ShardedDispatcher,
     ShardedQueryEngine,

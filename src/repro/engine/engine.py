@@ -146,6 +146,7 @@ class EngineStats:
     result_cache_hits: int = 0       # query rows served from the result LRU
     result_cache_misses: int = 0     # query rows that had to dispatch
     plan_groups: int = 0             # dispatch groups compiled by search()
+    replica_subgroups: int = 0       # replica row-blocks those groups spanned
     pipeline_stage1: int = 0         # pipelines whose dataset stage ran
     pipeline_stage2: int = 0         # pipelines whose point stage ran
     group_counts: dict = field(default_factory=dict)   # op -> groups
@@ -209,14 +210,24 @@ class EngineStats:
             seconds if prev is None
             else prev + self.EWMA_ALPHA * (seconds - prev))
 
-    def count_group(self, op: str) -> None:
+    def count_group(self, op: str, subgroups: int = 1) -> None:
         """Record ONE dispatch group compiled by the planner (an op group
         of a mixed batch, or a pipeline stage-2 group booked under its
         point op's name).  Kept in ``group_counts`` — NOT inside
         ``per_op`` — so the per-op hit/miss/dispatch breakdown stays
-        exactly the executable-dispatch accounting."""
+        exactly the executable-dispatch accounting.
+
+        ``subgroups`` is the number of replica row-blocks the group's
+        planned rows span (1 on local/1-D-sharded dispatch; up to R under
+        a :class:`~repro.engine.replicated.ReplicatedDispatcher` — a
+        planning-level metric, booked whether or not the rows later hit
+        the result cache): ``plan_groups`` keeps counting compiled
+        groups, while ``group_counts[op]`` and ``replica_subgroups``
+        account for the sub-groups, so ``replica_subgroups >=
+        plan_groups`` always."""
         self.plan_groups += 1
-        self.group_counts[op] = self.group_counts.get(op, 0) + 1
+        self.replica_subgroups += subgroups
+        self.group_counts[op] = self.group_counts.get(op, 0) + subgroups
 
     def _fold_stats(self, op: str, stats, fields: tuple) -> None:
         """Shared fold for one dispatch's per-query stats (a single stats
@@ -302,7 +313,12 @@ class QueryEngine:
     path: dataset slots are placed across ``shard_spec`` (a mesh axis name,
     default ``"data"``) and per-shard results are merged on device —
     bit-identical to the local path (asserted in
-    tests/test_engine_sharded.py).
+    tests/test_engine_sharded.py).  A mesh that also carries a
+    ``replica_spec`` axis (default ``"replica"``; build one with
+    :func:`~repro.engine.replicated.replica_mesh`) selects the
+    REPLICA-PARALLEL dispatcher instead: the slot shards replicate across
+    replica groups and each group serves its own slice of every batch's
+    rows — still bit-identical (tests/test_engine_replicated.py).
     """
 
     def __init__(
@@ -313,6 +329,7 @@ class QueryEngine:
         leaf_capacity: int = 16,
         mesh=None,
         shard_spec: str = "data",
+        replica_spec: str = "replica",
         dispatcher=None,
         result_cache_size: int = DEFAULT_RESULT_CACHE,
         default_chunk: int = 32,
@@ -327,8 +344,18 @@ class QueryEngine:
         self._n_valid = int(repo.ds_valid.sum())
         if dispatcher is None:
             if mesh is not None:
-                from repro.engine.sharded import ShardedDispatcher
-                dispatcher = ShardedDispatcher(repo, mesh, axis=shard_spec)
+                # a mesh carrying a replica axis selects replica-parallel
+                # dispatch (query rows split across replica groups);
+                # otherwise the 1-D data-sharded path
+                if replica_spec in getattr(mesh, "axis_names", ()):
+                    from repro.engine.replicated import ReplicatedDispatcher
+                    dispatcher = ReplicatedDispatcher(
+                        repo, mesh, axis=shard_spec,
+                        replica_axis=replica_spec)
+                else:
+                    from repro.engine.sharded import ShardedDispatcher
+                    dispatcher = ShardedDispatcher(repo, mesh,
+                                                   axis=shard_spec)
             else:
                 dispatcher = LocalDispatcher(repo)
         self.dispatch = dispatcher
@@ -360,6 +387,14 @@ class QueryEngine:
         while b < batch:          # beyond the ladder: grow geometrically
             b *= 2
         return b
+
+    def _plan_subgroups(self, batch: int) -> int:
+        """Replica row-blocks a `batch`-row dispatch group spans under
+        this engine's dispatcher (1 unless the dispatcher splits rows
+        across replica groups) — the planner feeds this to
+        :meth:`EngineStats.count_group`."""
+        f = getattr(self.dispatch, "row_subgroups", None)
+        return 1 if f is None else f(batch, self.bucket_for(batch))
 
     @staticmethod
     def _pad_rows(x: Array, bucket: int) -> Array:

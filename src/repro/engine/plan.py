@@ -102,7 +102,9 @@ def execute(engine, items) -> list:
     stage1: dict = {}          # input pos -> stage-1 SearchResult
     handoffs: dict = {}        # input pos -> device (k,) winner-id row
     for g in plan(items, engine.leaf_capacity):
-        engine.stats.count_group(g.op)
+        # subgroups: replica row-blocks this group's rows span (1 unless
+        # the dispatcher splits rows across replica groups)
+        engine.stats.count_group(g.op, engine._plan_subgroups(len(g.rows)))
         t0 = time.perf_counter()
         rows, ids_dev = _run_group(engine, g)
         engine.stats.record_latency(g.op, time.perf_counter() - t0)
@@ -230,10 +232,10 @@ def _run_stage2(engine, items, stage1, handoffs, results) -> None:
             []).append(pos)
     for key, poss in groups.items():
         pop = key[0]
-        engine.stats.count_group(pop)
-        t0 = time.perf_counter()
         ks = [items[pos].dataset_stage.k for pos in poss]
         total = int(sum(ks))
+        engine.stats.count_group(pop, engine._plan_subgroups(total))
+        t0 = time.perf_counter()
         # winner ids, handed off ON DEVICE (sliced from the stage-1
         # dispatch output): -1 sentinels (k past the valid dataset count)
         # are clamped to slot 0 for the gather and masked out below.

@@ -1,0 +1,155 @@
+"""Replica-parallel serving: dispatch over a 2-D (replica x data) mesh.
+
+The ``data`` mesh axis scales MEMORY: sharding dataset slots across it
+shrinks per-device repository bytes, but once the repository fits in D
+devices the remaining devices of a larger machine idle.  This module adds
+the THROUGHPUT axis: :func:`replica_mesh` arranges R x D devices as a 2-D
+mesh with a leading ``replica`` axis, :func:`~repro.engine.sharded.
+shard_repository` over that mesh places the slot arrays with
+``P("data")`` — sharded over data, and therefore automatically REPLICATED
+across the replica axis by the NamedSharding — and
+:class:`ReplicatedDispatcher` partitions each batch's query rows over the
+replica axis (``row_axis = "replica"``), so every replica group of D
+devices runs the complete per-shard pipeline on its own row slice.
+
+Bit-identity with :class:`~repro.engine.engine.LocalDispatcher` holds by
+construction, for every replica count and row split:
+
+  * every collective inside the per-shard ops — the O(k) ``all_gather``
+    top-k merges, the ApproHaus ``pmin``/``pmax`` scalar reductions, the
+    owner-exclusive ``psum`` merges, ExactHaus's batched tau
+    ``global_kth_smallest`` all-reduce — names the ``data`` axis only, so
+    inside one replica group the program IS the PR-2/3/4 1-D sharded
+    pipeline, unchanged (asserted per op in
+    tests/test_engine_replicated.py and by the property suite);
+  * per-row computations are independent: a replica group's answers
+    depend only on its own rows (ExactHaus's shared phase-2 frontier is
+    per-query lockstep — co-resident rows never perturb a row's
+    trajectory), so splitting rows across groups, padding the row count
+    to a multiple of R by replicating row 0, and concatenating the
+    per-group outputs in replica order reproduces the unsplit batch
+    exactly;
+  * ExactHaus's ``while_loop`` continue flag is psum-reduced over
+    ``data`` only, so it is uniform INSIDE each replica group (the
+    collectives in the loop body stay deadlock-free) while groups retire
+    their rows independently — a group with cheap rows simply exits its
+    loop earlier.
+
+The engine stack above is untouched: the same bucket ladder, executable
+cache, result cache (which short-circuits BEFORE rows are split), and
+planner serve every dispatcher; :class:`~repro.engine.engine.QueryEngine`
+selects this dispatcher automatically when the mesh carries a replica
+axis.  The planner books how many replica row-blocks each dispatch group
+actually spanned through :meth:`ReplicatedDispatcher.row_subgroups`
+(``EngineStats.group_counts`` / ``replica_subgroups``).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.repo_index import Repository
+from repro.engine.engine import (DEFAULT_BUCKETS, DEFAULT_RESULT_CACHE,
+                                 QueryEngine)
+from repro.engine.sharded import ShardedDispatcher
+
+
+def replica_mesh(
+    n_replicas: int,
+    n_data: int | None = None,
+    *,
+    replica_axis: str = "replica",
+    data_axis: str = "data",
+) -> Mesh:
+    """A 2-D (replica x data) mesh over the first R x D local devices.
+
+    ``n_data=None`` spreads the non-replica factor over the remaining
+    devices (``len(devices) // n_replicas``).  An explicit request larger
+    than the platform provides is an error, never a silent smaller mesh —
+    same contract as :func:`~repro.engine.sharded.data_mesh`.
+    """
+    devs = jax.devices()
+    if n_replicas < 1:
+        raise ValueError(f"replica_mesh: n_replicas must be >= 1, "
+                         f"got {n_replicas}")
+    if n_data is None:
+        n_data = max(1, len(devs) // n_replicas)
+    need = n_replicas * n_data
+    if need > len(devs):
+        raise ValueError(
+            f"replica_mesh: {n_replicas} x {n_data} devices requested but "
+            f"only {len(devs)} available (on CPU, force more with "
+            f"REPRO_HOST_DEVICES / --xla_force_host_platform_device_count "
+            f"before jax initializes)")
+    grid = np.asarray(devs[:need]).reshape(n_replicas, n_data)
+    return Mesh(grid, (replica_axis, data_axis))
+
+
+class ReplicatedDispatcher(ShardedDispatcher):
+    """Sharded dispatch with query rows partitioned over a replica axis.
+
+    Everything op-specific is inherited: the per-shard ``local`` functions
+    and their ``data``-scoped collectives are byte-for-byte the 1-D
+    sharded ones.  What changes is placement only — ``row_axis`` routes
+    each replica group its own row slice (with the base class's generic
+    row pad/slice in ``_smap``), and `shard_repository` over the 2-D mesh
+    replicates the slot shards across replica groups for free via
+    ``P("data")``.
+    """
+
+    name = "replicated"
+
+    def __init__(self, repo: Repository, mesh: Mesh, axis: str = "data",
+                 replica_axis: str = "replica"):
+        if replica_axis not in mesh.axis_names:
+            raise ValueError(
+                f"ReplicatedDispatcher: mesh has no {replica_axis!r} axis "
+                f"(axes: {mesh.axis_names}); build one with replica_mesh()")
+        self.row_axis = replica_axis
+        super().__init__(repo, mesh, axis=axis)
+        self.n_replicas = int(mesh.shape[replica_axis])
+
+    def row_subgroups(self, batch: int, bucket: int) -> int:
+        """Replica row-blocks a `batch`-row dispatch at `bucket` rows
+        spans: the padded bucket splits into ``n_replicas`` equal blocks,
+        and the first ceil(batch / block) of them carry real rows.  The
+        planner books this through ``EngineStats.count_group`` so
+        ``group_counts`` accounts for replica sub-groups."""
+        n_rep = self.n_replicas
+        block = ((bucket + n_rep - 1) // n_rep * n_rep) // n_rep
+        return min(n_rep, -(-batch // block))
+
+
+class ReplicatedQueryEngine(QueryEngine):
+    """QueryEngine serving from R replica groups of D data shards each.
+
+    Same bucket ladder, executable cache, result cache, query
+    construction, planner, and :class:`~repro.engine.engine.EngineStats`
+    as every other engine; only dispatch differs.  With no ``mesh``
+    given, builds ``replica_mesh(n_replicas, n_data)`` (``n_data=None``
+    -> all remaining local devices).  ``n_replicas=1`` degenerates to the
+    1-D sharded layout, so the class is safe to use unconditionally.
+    """
+
+    def __init__(
+        self,
+        repo: Repository,
+        *,
+        n_replicas: int = 1,
+        n_data: int | None = None,
+        mesh: Mesh | None = None,
+        replica_spec: str = "replica",
+        shard_spec: str = "data",
+        buckets=DEFAULT_BUCKETS,
+        leaf_capacity: int = 16,
+        result_cache_size: int = DEFAULT_RESULT_CACHE,
+    ):
+        if mesh is None:
+            mesh = replica_mesh(n_replicas, n_data,
+                                replica_axis=replica_spec,
+                                data_axis=shard_spec)
+        super().__init__(repo, buckets=buckets, leaf_capacity=leaf_capacity,
+                         mesh=mesh, shard_spec=shard_spec,
+                         replica_spec=replica_spec,
+                         result_cache_size=result_cache_size)

@@ -134,7 +134,17 @@ def shard_repository(
         return jnp.concatenate([x, pad], axis=0)
 
     def place(x, spec):
-        return jax.device_put(x, NamedSharding(mesh, spec))
+        sharding = NamedSharding(mesh, spec)
+        if jax.process_count() > 1:
+            # multi-host groundwork: assemble the global array from
+            # process-local buffers so no single host ever has to device_put
+            # the whole repository (each process here still holds the full
+            # builder output, the documented fully-replicated input case of
+            # make_array_from_process_local_data; a true multi-host loader
+            # would hand each process only its slot slice)
+            return jax.make_array_from_process_local_data(
+                sharding, np.asarray(x), x.shape)
+        return jax.device_put(x, sharding)
 
     sharded = Repository(
         ds_index=jax.tree.map(lambda x: place(pad_slots(x), P(axis)),
@@ -179,9 +189,24 @@ class ShardedDispatcher:
     Same call contracts as :class:`~repro.engine.engine.LocalDispatcher`:
     each ``build_*`` returns a callable over the query-side operands with
     the (sharded) repository bound as the leading jit argument.
+
+    The QUERY-ROW placement is parameterized by ``row_axis``: every
+    query-side operand and per-row output uses the spec ``P(row_axis,
+    ...)``.  The base class keeps ``row_axis = None`` (rows replicated on
+    every shard — the 1-D data mesh), while
+    :class:`~repro.engine.replicated.ReplicatedDispatcher` sets it to the
+    ``replica`` axis of a 2-D mesh so each replica group serves its own
+    row slice.  When rows are split, :meth:`_smap` pads the leading row
+    axis to a multiple of the replica count by replicating row 0 (the same
+    trick as the engine's bucket padding — per-row computations are
+    independent, so pad rows change nothing and are sliced off) and cuts
+    the row-spec'd outputs back.
     """
 
     name = "sharded"
+    #: mesh axis the query-row (leading batch) axis is partitioned over in
+    #: every spec; None keeps rows replicated (the base 1-D behavior)
+    row_axis: str | None = None
 
     def __init__(self, repo: Repository, mesh: Mesh, axis: str = "data"):
         if not isinstance(axis, str):      # accept a PartitionSpec-ish spec
@@ -199,9 +224,59 @@ class ShardedDispatcher:
 
     # -- helpers -----------------------------------------------------------
 
+    @property
+    def _rows(self):
+        """Spec of a query-side operand / per-row output: partitioned on
+        the row axis when one is configured (P(None) == replicated)."""
+        return P(self.row_axis)
+
     def _smap(self, fn, in_specs, out_specs):
-        return _shard_map(fn, mesh=self.mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False)
+        sm = _shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_vma=False)
+        if self.row_axis is None:
+            return sm
+        n_rep = int(self.mesh.shape[self.row_axis])
+
+        def row_split(spec):
+            return len(spec) > 0 and spec[0] == self.row_axis
+
+        def pad(x):
+            # pad rows to a multiple of n_rep by repeating row 0 (rows are
+            # independent, so pad rows never perturb real ones).  A single
+            # gather, NOT concatenate: under jit, XLA's partitioner
+            # mis-reshards a concat whose per-replica block is one operand
+            # (each shard comes out psum-reduced over the other mesh axis).
+            m = -x.shape[0] % n_rep
+            if not m:
+                return x
+            idx = np.concatenate([np.arange(x.shape[0]), np.zeros(m, np.int64)])
+            return jnp.take(x, jnp.asarray(idx), axis=0)
+
+        # NOTE: PartitionSpec subclasses tuple — a bare P(...) out_specs is
+        # ONE output, not a tuple of per-output specs
+        single = isinstance(out_specs, P) or not isinstance(out_specs, tuple)
+        o_specs = (out_specs,) if single else out_specs
+
+        def wrapped(repo_s, *args):
+            rows = None
+            ins = []
+            for a, spec in zip(args, in_specs[1:]):
+                if row_split(spec):
+                    if rows is None:
+                        rows = jax.tree.leaves(a)[0].shape[0]
+                    a = jax.tree.map(pad, a)
+                ins.append(a)
+            out = sm(repo_s, *ins)
+            if rows is None:
+                return out
+            outs = (out,) if single else out
+            cut = tuple(
+                jax.tree.map(lambda x: x[:rows], o) if row_split(spec)
+                else o
+                for o, spec in zip(outs, o_specs))
+            return cut[0] if single else cut
+
+        return wrapped
 
     def _bind(self, impl):
         """jit with the sharded repository as the bound leading operand (an
@@ -233,8 +308,8 @@ class ShardedDispatcher:
                 r_lo[:, None, :], r_hi[:, None, :])
             return hit & repo_loc.ds_valid[None, :]
 
-        sm = self._smap(local, in_specs=(self.specs, P(), P()),
-                        out_specs=P(None, axis))
+        sm = self._smap(local, in_specs=(self.specs, self._rows, self._rows),
+                        out_specs=P(self.row_axis, axis))
 
         def impl(repo_s, r_lo, r_hi):
             masks = sm(repo_s, r_lo, r_hi)
@@ -253,8 +328,8 @@ class ShardedDispatcher:
             ia = jnp.where(repo_loc.ds_valid[None, :], ia, -1.0)
             return merge.shard_topk(ia, k, axis)
 
-        sm = self._smap(local, in_specs=(self.specs, P(), P()),
-                        out_specs=(P(), P()))
+        sm = self._smap(local, in_specs=(self.specs, self._rows, self._rows),
+                        out_specs=(self._rows, self._rows))
 
         def impl(repo_s, q_lo, q_hi):
             vals, ids = sm(repo_s, q_lo, q_hi)
@@ -270,8 +345,8 @@ class ShardedDispatcher:
             counts = jnp.where(repo_loc.ds_valid[None, :], counts, -1)
             return merge.shard_topk(counts, k, axis)
 
-        sm = self._smap(local, in_specs=(self.specs, P()),
-                        out_specs=(P(), P()))
+        sm = self._smap(local, in_specs=(self.specs, self._rows),
+                        out_specs=(self._rows, self._rows))
 
         def impl(repo_s, q_sigs):
             vals, ids = sm(repo_s, q_sigs)
@@ -330,8 +405,9 @@ class ShardedDispatcher:
             neg, ids = merge.all_gather_topk(neg, gids, k, axis)
             return -neg, ids, eps_eff
 
-        sm = self._smap(local, in_specs=(self.specs, P(), P()),
-                        out_specs=(P(), P(), P()))
+        # eps is a replicated SCALAR (rank 0): its spec must stay P()
+        sm = self._smap(local, in_specs=(self.specs, self._rows, P()),
+                        out_specs=(self._rows, self._rows, self._rows))
 
         def impl(repo_s, q_batch, eps):
             return sm(repo_s, q_batch, eps)
@@ -365,8 +441,8 @@ class ShardedDispatcher:
             neg, ids = merge.all_gather_topk(neg, gids, k, axis)
             return -neg, ids, nodes, cand_after, evaluated
 
-        sm = self._smap(local, in_specs=(self.specs, P()),
-                        out_specs=(P(),) * 5)
+        sm = self._smap(local, in_specs=(self.specs, self._rows),
+                        out_specs=(self._rows,) * 5)
 
         def impl(repo_s, q_batch):
             return sm(repo_s, q_batch)
@@ -388,8 +464,10 @@ class ShardedDispatcher:
             scanned = jax.lax.psum(scanned, axis).astype(bool)
             return take, scanned
 
-        sm = self._smap(local, in_specs=(self.specs, P(), P(), P()),
-                        out_specs=(P(), P()))
+        sm = self._smap(local,
+                        in_specs=(self.specs, self._rows, self._rows,
+                                  self._rows),
+                        out_specs=(self._rows, self._rows))
 
         def impl(repo_s, ds_ids, r_lo, r_hi):
             return sm(repo_s, ds_ids, r_lo, r_hi)
@@ -414,8 +492,8 @@ class ShardedDispatcher:
                           ).astype(jnp.int32), axis).astype(bool)
             return dists, idxs, pair_live
 
-        sm = self._smap(local, in_specs=(self.specs, P(), P()),
-                        out_specs=(P(), P(), P()))
+        sm = self._smap(local, in_specs=(self.specs, self._rows, self._rows),
+                        out_specs=(self._rows, self._rows, self._rows))
 
         def impl(repo_s, ds_ids, q_batch):
             return sm(repo_s, ds_ids, q_batch)

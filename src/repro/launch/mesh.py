@@ -21,3 +21,15 @@ def make_test_mesh(*, multi_pod: bool = False):
     shape = (2, 2, 2) if multi_pod else (4, 2)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_serving_mesh(n_replicas: int = 1, n_data: int | None = None):
+    """(replica, data) mesh for the search serving stack.
+
+    Thin alias over :func:`repro.engine.replicated.replica_mesh` so launch
+    scripts can build serving meshes without importing engine internals;
+    ``n_data=None`` spreads the data axis over the remaining local devices.
+    """
+    from repro.engine.replicated import replica_mesh
+
+    return replica_mesh(n_replicas, n_data)

@@ -3,6 +3,8 @@
     PYTHONPATH=src python -m repro.launch.serve_search [--requests 256 ...]
     REPRO_HOST_DEVICES=8 PYTHONPATH=src \
         python -m repro.launch.serve_search --sharded   # data-sharded engine
+    REPRO_HOST_DEVICES=8 PYTHONPATH=src \
+        python -m repro.launch.serve_search --replicas 2   # 2 x 4 replica mesh
 
 The production shape for the paper's *online* multi-granularity search:
 clients submit single queries (mixed types — RangeS / top-k IA / top-k
@@ -460,11 +462,29 @@ def main(argv=None):
                     help="serve from a ShardedQueryEngine with the resident "
                          "repository sharded over a 1-D data mesh spanning "
                          "all local devices")
+    ap.add_argument("--replicas", type=int, default=0, metavar="R",
+                    help="serve from a ReplicatedQueryEngine over an R x D "
+                         "(replica x data) mesh: the repository is sharded "
+                         "over D devices per group and replicated across R "
+                         "groups, each drain's rows split over the groups")
+    ap.add_argument("--data-shards", type=int, default=None, metavar="D",
+                    help="data-axis extent per replica group (default: all "
+                         "remaining local devices / R)")
     args = ap.parse_args(argv)
 
     lake = synthetic.trajectory_repository(args.datasets, seed=0)
     repo, _ = build_repository(lake, leaf_capacity=16, theta=5)
-    if args.sharded:
+    if args.replicas:
+        from repro.engine.replicated import ReplicatedQueryEngine
+        engine = ReplicatedQueryEngine(repo, n_replicas=args.replicas,
+                                       n_data=args.data_shards)
+        print(f"[serve_search] replicated engine: "
+              f"{engine.dispatch.n_replicas} replica group(s) x "
+              f"{engine.dispatch.n_shards} data shard(s) "
+              f"({engine.dispatch.n_replicas * engine.dispatch.n_shards} "
+              f"devices), {engine.dispatch.shard_slots} dataset slots "
+              f"per shard")
+    elif args.sharded:
         from repro.engine.sharded import ShardedQueryEngine
         engine = ShardedQueryEngine(repo)
         print(f"[serve_search] sharded engine: "

@@ -44,6 +44,27 @@ def run_py(code: str, devices: int = 8, timeout: int = 560):
     return r.stdout
 
 
+def dispatch_device_check(module: str, fn_name: str, devices: int = 8,
+                          timeout: int = 560):
+    """Run check function `module.fn_name` in-process when the session
+    already has >= `devices` devices, else in a forced-`devices`
+    subprocess.
+
+    The mesh-shaped tests (1-D data meshes AND 2-D replica x data meshes —
+    any factorization whose device product is <= `devices`) share this so
+    single-device tier-1 sessions still exercise every suite: the check
+    body only sees jax.devices(), so an 8-device session serves a 4x2
+    replica mesh and an 8-shard data mesh alike."""
+    import importlib
+
+    import jax
+    if jax.device_count() >= devices:
+        getattr(importlib.import_module(module), fn_name)()
+    else:
+        run_py(f"from {module} import {fn_name}\n{fn_name}()\n",
+               devices=devices, timeout=timeout)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

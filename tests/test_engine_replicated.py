@@ -1,0 +1,249 @@
+"""ReplicatedQueryEngine vs QueryEngine: bit-identical equivalence.
+
+The replica-parallel engine serves from an R x D (replica x data) mesh:
+the repository is sharded over ``data`` and replicated across ``replica``
+groups, and each dispatch's query rows are split over the groups — every
+group runs the 1-D sharded pipeline (data-scoped collectives only) on its
+own row slice.  Every op must reproduce the single-device engine
+bit-for-bit (values AND ids AND masks — np.testing.assert_array_equal, no
+tolerance) regardless of the replica count or how the rows land, covering
+
+  * all seven serving ops on the {1x8, 2x4, 4x2} mesh shapes, including
+    the genuinely sharded ExactHaus (per-group while_loops retire
+    independently: the continue flag is psum-reduced over ``data`` only),
+  * batches SMALLER than the replica count (row padding: a 1-row batch on
+    a 4-group mesh runs 3 groups on copies of row 0),
+  * the uneven 2x3 mesh — replica row split on top of the 64 -> 66 slot
+    padding path — and top-k overrun past the valid dataset count,
+  * the declarative mixed `search()` batch (pipelines riding the same
+    dispatch groups), bit-identical to the local engine's search(),
+  * EngineStats invariants under replica dispatch: every dispatch books an
+    executable-cache hit or miss, the planner's `group_counts` /
+    `replica_subgroups` account for replica sub-groups, and the result
+    cache short-circuits BEFORE rows are split over groups,
+  * memory placement: per-device resident bytes of the dataset-axis
+    arrays are total/D on EVERY one of the R x D devices (replicas share
+    the shard layout; no device holds a full copy).
+
+Same harness as tests/test_engine_sharded.py: in-process when the session
+has >= 8 devices (the multi-device CI job), else each test re-runs its
+body in a subprocess with XLA_FLAGS forcing 8 host devices
+(conftest.dispatch_device_check).
+"""
+import numpy as np
+
+from conftest import dispatch_device_check
+from test_engine_sharded import K, _assert_all_ops_equal, _build
+
+MESHES = ((1, 8), (2, 4), (4, 2))
+
+
+def _dispatch(fn_name: str):
+    dispatch_device_check("test_engine_replicated", fn_name)
+
+
+def _replicated(repo, n_replicas, n_data, **kw):
+    from repro.engine import ReplicatedQueryEngine
+    return ReplicatedQueryEngine(repo, n_replicas=n_replicas, n_data=n_data,
+                                 **kw)
+
+
+def check_replicated_equivalence_meshes():
+    """All seven ops on every {R x D} shape of 8 devices, ragged batches
+    (including B < R: the row pad path), k overrun."""
+    import jax
+
+    datasets, repo, eng, q_sets, sigs, eps = _build(33)
+    rng = np.random.default_rng(0)
+    q_batch = eng.build_queries(q_sets)
+    for n_rep, n_data in MESHES:
+        reng = _replicated(repo, n_rep, n_data)
+        assert reng.dispatch.name == "replicated"
+        assert reng.dispatch.n_replicas == n_rep
+        assert reng.dispatch.n_shards == n_data
+        for B in (1, 5):              # B=1 pads rows on every R>1 mesh
+            lo = rng.uniform(-60, 40, (B, 2)).astype(np.float32)
+            hi = lo + rng.uniform(5, 40, (B, 2)).astype(np.float32)
+            ds_ids = rng.integers(0, 33, B).astype(np.int32)
+            qb = jax.tree.map(lambda x, n=B: x[:n], q_batch)
+            _assert_all_ops_equal(eng, reng, repo, qb, sigs, eps, lo, hi,
+                                  ds_ids, ks=(K, repo.n_slots))
+        # batched ExactHaus: groups retire their while_loops independently
+        vb, ib, sb = reng.topk_hausdorff(q_batch, K)
+        vw, iw, sw = eng.topk_hausdorff(q_batch, K)
+        np.testing.assert_array_equal(np.asarray(vb), np.asarray(vw))
+        np.testing.assert_array_equal(np.asarray(ib), np.asarray(iw))
+        for a, b in zip(sb, sw):
+            assert a.candidates_after_bounds == b.candidates_after_bounds
+        s = reng.stats
+        assert s.cache_hits + s.cache_misses == s.dispatches
+    print("REPLICATED_MESHES_OK")
+
+
+def check_replicated_uneven_data():
+    """2x3 mesh: replica row split stacked on the uneven-shard slot
+    padding (64 -> 66 slots), several buckets, k past the shard size."""
+    datasets, repo, eng, q_sets, sigs, eps = _build(33)
+    reng = _replicated(repo, 2, 3)
+    assert reng.dispatch.n_slots_sharded == 66
+    assert reng.dispatch.shard_slots == 22
+
+    rng = np.random.default_rng(1)
+    q_batch = eng.build_queries(q_sets)
+    for B in (1, 5, 12):
+        lo = rng.uniform(-60, 40, (B, 2)).astype(np.float32)
+        hi = lo + rng.uniform(5, 40, (B, 2)).astype(np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(reng.range_search(lo, hi)),
+            np.asarray(eng.range_search(lo, hi)))
+        for k in (K, repo.n_slots):
+            v1, i1 = eng.topk_ia(lo, hi, k)
+            v2, i2 = reng.topk_ia(lo, hi, k)
+            np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
+            np.testing.assert_array_equal(np.asarray(i2), np.asarray(i1))
+        ds_ids = rng.integers(0, 33, B).astype(np.int32)
+        np.testing.assert_array_equal(
+            np.asarray(reng.range_points(ds_ids, lo, hi)),
+            np.asarray(eng.range_points(ds_ids, lo, hi)))
+    lo = rng.uniform(-60, 40, (5, 2)).astype(np.float32)
+    hi = lo + rng.uniform(5, 40, (5, 2)).astype(np.float32)
+    _assert_all_ops_equal(eng, reng, repo, q_batch, sigs, eps, lo, hi,
+                          np.arange(5, dtype=np.int32), ks=(K, 33))
+    print("REPLICATED_UNEVEN_OK")
+
+
+def check_replicated_search_mixed():
+    """One declarative mixed search() batch — all seven ops, three
+    pipelines (one with k overrun), a duplicate row — bit-identical to
+    the local engine on 2x4, 4x2, and the uneven 2x3 mesh, with the
+    planner's sub-group accounting consistent."""
+    from repro.engine import Pipeline, Query
+
+    datasets, repo, eng, q_sets, sigs, eps = _build(33)
+    rng = np.random.default_rng(5)
+    lo = rng.uniform(-60, 40, (5, 2)).astype(np.float32)
+    hi = lo + rng.uniform(5, 40, (5, 2)).astype(np.float32)
+    batch = [
+        Query(op="topk_ia", r_lo=lo[0], r_hi=hi[0], k=K),
+        Query(op="range_search", r_lo=lo[1], r_hi=hi[1]),
+        Query(op="nnp", ds_id=4, q=q_sets[1]),
+        Query(op="topk_hausdorff", q=q_sets[0], k=K),
+        Query(op="topk_gbo", q_sig=sigs[0], k=K),
+        Query(op="range_points", ds_id=7, r_lo=lo[3], r_hi=hi[3]),
+        Query(op="topk_hausdorff_approx", q=q_sets[2], k=K, eps=eps),
+        Pipeline(Query(op="topk_ia", r_lo=lo[4], r_hi=hi[4], k=3),
+                 Query(op="range_points", r_lo=lo[3], r_hi=hi[3])),
+        Pipeline(Query(op="topk_gbo", q_sig=sigs[1], k=3),
+                 Query(op="nnp", q=q_sets[3])),
+        Pipeline(Query(op="topk_ia", r_lo=lo[0], r_hi=hi[0],
+                       k=repo.n_slots),
+                 Query(op="range_points", r_lo=lo[1], r_hi=hi[1])),
+        Query(op="topk_ia", r_lo=lo[0], r_hi=hi[0], k=K),   # duplicate row
+    ]
+    want = eng.search(batch)
+    for n_rep, n_data in ((2, 4), (4, 2), (2, 3)):
+        reng = _replicated(repo, n_rep, n_data)
+        got = reng.search(batch)
+        assert len(got) == len(want)
+        for a, b in zip(got, want):
+            assert a.op == b.op
+            for field in ("vals", "ids", "mask"):
+                x, y = getattr(a, field), getattr(b, field)
+                assert (x is None) == (y is None), (a.op, field)
+                if x is not None:
+                    np.testing.assert_array_equal(
+                        np.asarray(x), np.asarray(y), err_msg=a.op)
+            if a.op == "pipeline":
+                np.testing.assert_array_equal(
+                    np.asarray(a.extras["ds_ids"]),
+                    np.asarray(b.extras["ds_ids"]))
+        s = reng.stats
+        assert s.cache_hits + s.cache_misses == s.dispatches
+        assert s.pipeline_stage1 == s.pipeline_stage2 == 3
+        # identical planner -> identical compiled groups; the replicated
+        # dispatcher additionally books the replica row-blocks each group
+        # spanned (bounded by R, and by the group's row count)
+        assert s.plan_groups == eng.stats.plan_groups
+        assert s.plan_groups <= s.replica_subgroups <= s.plan_groups * n_rep
+        assert sum(s.group_counts.values()) == s.replica_subgroups
+        assert set(s.group_counts) == set(eng.stats.group_counts)
+    # the local engine books exactly one sub-group per compiled group
+    assert eng.stats.replica_subgroups == eng.stats.plan_groups
+    assert sum(eng.stats.group_counts.values()) == eng.stats.plan_groups
+    print("REPLICATED_MIXED_OK")
+
+
+def check_replicated_result_cache_short_circuit():
+    """The result LRU answers repeat rows BEFORE replica splitting: an
+    identical second batch books result-cache hits and adds zero device
+    dispatches and zero compiled groups — on a multi-replica mesh."""
+    datasets, repo, eng, q_sets, sigs, eps = _build(33)
+    from repro.engine import Query
+
+    reng = _replicated(repo, 2, 4)
+    rng = np.random.default_rng(9)
+    lo = rng.uniform(-60, 40, (6, 2)).astype(np.float32)
+    hi = lo + rng.uniform(5, 40, (6, 2)).astype(np.float32)
+    batch = [Query(op="topk_ia", r_lo=lo[i], r_hi=hi[i], k=K)
+             for i in range(6)]
+    want = [np.asarray(r.vals) for r in reng.search(batch)]
+    s = reng.stats
+    d0, g0 = s.dispatches, s.plan_groups
+    assert s.result_cache_misses == 6 and s.result_cache_hits == 0
+    assert d0 > 0
+    got = [np.asarray(r.vals) for r in reng.search(batch)]
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    assert s.result_cache_hits == 6
+    # the planner still BOOKS the group (count_group is a planning-level
+    # metric), but every row was served from the LRU before bucketing, so
+    # no dispatch — and therefore no replica split — ever happened
+    assert s.dispatches == d0
+    assert s.plan_groups == g0 + 1
+    assert s.cache_hits + s.cache_misses == s.dispatches
+    print("REPLICATED_CACHE_OK")
+
+
+def check_replicated_repo_placement():
+    """Every one of the R x D devices holds exactly 1/D of the
+    dataset-axis arrays plus the (small) replicated upper tree — replicas
+    reuse the shard layout, no device carries a full repository copy."""
+    import jax
+    from repro.engine.sharded import repo_device_bytes
+
+    datasets, repo, eng, *_ = _build(33)
+    for n_rep, n_data in ((2, 4), (4, 2)):
+        reng = _replicated(repo, n_rep, n_data)
+        d = reng.dispatch
+        assert reng.repo is d.repo
+        ds_arrays = (d.repo.ds_index, d.repo.ds_sigs, d.repo.ds_valid)
+        ds_total = sum(x.nbytes for x in jax.tree.leaves(ds_arrays))
+        per_dev = repo_device_bytes(ds_arrays)
+        assert len(per_dev) == n_rep * n_data       # all 8 devices resident
+        assert max(per_dev.values()) == ds_total // n_data
+        rep_total = sum(x.nbytes for x in jax.tree.leaves(
+            (d.repo.repo, d.repo.space_lo, d.repo.space_hi)))
+        full = repo_device_bytes(d.repo)
+        assert len(full) == n_rep * n_data
+        assert max(full.values()) == ds_total // n_data + rep_total
+    print("REPLICATED_PLACEMENT_OK")
+
+
+def test_replicated_equivalence_meshes():
+    _dispatch("check_replicated_equivalence_meshes")
+
+
+def test_replicated_uneven_data():
+    _dispatch("check_replicated_uneven_data")
+
+
+def test_replicated_search_mixed():
+    _dispatch("check_replicated_search_mixed")
+
+
+def test_replicated_result_cache_short_circuit():
+    _dispatch("check_replicated_result_cache_short_circuit")
+
+
+def test_replicated_repo_placement():
+    _dispatch("check_replicated_repo_placement")

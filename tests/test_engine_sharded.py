@@ -30,7 +30,7 @@ tests/test_distributed.py).
 """
 import numpy as np
 
-from conftest import make_clustered_datasets, run_py
+from conftest import dispatch_device_check, make_clustered_datasets
 
 THETA = 5
 K = 6
@@ -38,15 +38,8 @@ K = 6
 
 def _dispatch(fn_name: str):
     """Run `fn_name` in-process when the session has >= 8 devices, else in
-    a forced-8-device subprocess."""
-    import jax
-    if jax.device_count() >= 8:
-        globals()[fn_name]()
-    else:
-        run_py(
-            f"from test_engine_sharded import {fn_name}\n"
-            f"{fn_name}()\n"
-        )
+    a forced-8-device subprocess (shared conftest harness)."""
+    dispatch_device_check("test_engine_sharded", fn_name)
 
 
 def _build(n_datasets: int, seed: int = 2):

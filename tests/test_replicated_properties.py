@@ -1,0 +1,174 @@
+"""Property tests for replica-parallel dispatch: random mixed-op batches.
+
+For random declarative `search()` batches — random op mix (all seven ops
+plus dataset->point pipelines), random batch sizes (1..12, above and
+below the replica count, with duplicate rows), random query parameters —
+the ReplicatedQueryEngine on a random (replica, data) factorization of
+the available devices returns results BIT-IDENTICAL to the single-device
+QueryEngine (values, ids, masks, pipeline extras), and its EngineStats
+keep the replica accounting invariants:
+
+  * every device dispatch books exactly one executable-cache hit or miss;
+  * the planner books the same compiled groups as the local engine
+    (`plan_groups` equal), and the replica row-block accounting satisfies
+    `plan_groups <= replica_subgroups <= plan_groups * R` with
+    `sum(group_counts.values()) == replica_subgroups`.
+
+The mesh pool adapts to the session: a single-device tier-1 session
+exercises the degenerate 1x1 replicated engine (same dispatch code
+path), while the multi-device CI job (REPRO_HOST_DEVICES=8) draws from
+{1x8, 2x4, 4x2, 2x3} — including the uneven-shard 2x3 split.
+
+Runs under hypothesis when installed (the CI path); without it the same
+property runs over a seeded random sweep so the suite never silently
+skips the contract (pattern from tests/test_exacthaus_properties.py).
+Engines are cached per (repo, mesh) so executables are reused across
+examples instead of recompiling per draw.
+"""
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from test_engine_sharded import K, _build
+
+_ENVS: dict = {}
+REPO_SEEDS = (2, 7)
+N_DATASETS = 17
+
+
+def _mesh_pool():
+    n = jax.device_count()
+    if n >= 8:
+        return ((1, 8), (2, 4), (4, 2), (2, 3))
+    if n >= 6:
+        return ((2, 3), (1, 2))
+    if n >= 2:
+        return ((2, 1), (1, 2))
+    return ((1, 1),)
+
+
+def _env(repo_seed: int, mesh: tuple[int, int]):
+    from repro.engine import ReplicatedQueryEngine
+
+    if repo_seed not in _ENVS:
+        datasets, repo, eng, q_sets, sigs, eps = _build(N_DATASETS,
+                                                        seed=repo_seed)
+        _ENVS[repo_seed] = (datasets, repo, eng, q_sets, sigs, eps, {})
+    datasets, repo, eng, q_sets, sigs, eps, rengs = _ENVS[repo_seed]
+    if mesh not in rengs:
+        rengs[mesh] = ReplicatedQueryEngine(repo, n_replicas=mesh[0],
+                                            n_data=mesh[1])
+    return datasets, repo, eng, q_sets, sigs, eps, rengs[mesh]
+
+
+def _random_batch(rng, repo, q_sets, sigs, eps, size: int):
+    """A random mixed search() batch: every op reachable, random params,
+    k values that straddle the valid dataset count, ragged rects."""
+    from repro.engine import Pipeline, Query
+
+    lo = rng.uniform(-60, 40, (size, 2)).astype(np.float32)
+    hi = lo + rng.uniform(5, 40, (size, 2)).astype(np.float32)
+    ks = (1, K, repo.n_slots)           # n_slots: top-k overrun
+
+    def make(i):
+        op = int(rng.integers(9))
+        k = ks[int(rng.integers(len(ks)))]
+        q = q_sets[int(rng.integers(len(q_sets)))]
+        sig = sigs[int(rng.integers(len(sigs)))]
+        ds = int(rng.integers(N_DATASETS))
+        if op == 0:
+            return Query(op="topk_ia", r_lo=lo[i], r_hi=hi[i], k=k)
+        if op == 1:
+            return Query(op="range_search", r_lo=lo[i], r_hi=hi[i])
+        if op == 2:
+            return Query(op="range_points", ds_id=ds, r_lo=lo[i],
+                         r_hi=hi[i])
+        if op == 3:
+            return Query(op="nnp", ds_id=ds, q=q)
+        if op == 4:
+            return Query(op="topk_hausdorff", q=q, k=k)
+        if op == 5:
+            return Query(op="topk_gbo", q_sig=sig, k=k)
+        if op == 6:
+            return Query(op="topk_hausdorff_approx", q=q, k=k, eps=eps)
+        if op == 7:
+            return Pipeline(Query(op="topk_ia", r_lo=lo[i], r_hi=hi[i],
+                                  k=k),
+                            Query(op="range_points", r_lo=lo[i],
+                                  r_hi=hi[i]))
+        return Pipeline(Query(op="topk_gbo", q_sig=sig, k=min(k, 4)),
+                        Query(op="nnp", q=q))
+
+    batch = [make(i) for i in range(size)]
+    if size >= 2 and rng.integers(2):
+        batch[-1] = batch[0]            # duplicate row
+    return batch
+
+
+def _run_property(repo_seed: int, mesh_i: int, q_seed: int, size: int):
+    pool = _mesh_pool()
+    n_rep, n_data = pool[mesh_i % len(pool)]
+    datasets, repo, eng, q_sets, sigs, eps, reng = _env(repo_seed,
+                                                        (n_rep, n_data))
+    rng = np.random.default_rng(q_seed)
+    batch = _random_batch(rng, repo, q_sets, sigs, eps, size)
+
+    l_before = eng.stats.plan_groups
+    want = eng.search(batch)
+    g_before = reng.stats.plan_groups
+    got = reng.search(batch)
+
+    assert len(got) == len(want) == size
+    for a, b in zip(got, want):
+        assert a.op == b.op
+        for field in ("vals", "ids", "mask"):
+            x, y = getattr(a, field), getattr(b, field)
+            assert (x is None) == (y is None), (a.op, field)
+            if x is not None:
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                              err_msg=a.op)
+        if a.op == "pipeline":
+            np.testing.assert_array_equal(np.asarray(a.extras["ds_ids"]),
+                                          np.asarray(b.extras["ds_ids"]))
+
+    s = reng.stats
+    assert s.cache_hits + s.cache_misses == s.dispatches
+    # identical planner: same batch -> same compiled groups as local
+    assert s.plan_groups - g_before == eng.stats.plan_groups - l_before
+    assert s.plan_groups <= s.replica_subgroups <= s.plan_groups * n_rep
+    assert sum(s.group_counts.values()) == s.replica_subgroups
+
+
+def _case_from_seed(seed: int):
+    rng = np.random.default_rng(seed)
+    return (
+        REPO_SEEDS[int(rng.integers(len(REPO_SEEDS)))],
+        int(rng.integers(8)),
+        int(rng.integers(2**31 - 1)),
+        int(rng.integers(1, 13)),
+    )
+
+
+if HAVE_HYPOTHESIS:
+    @given(
+        repo_seed=st.sampled_from(REPO_SEEDS),
+        mesh_i=st.integers(0, 7),
+        q_seed=st.integers(0, 2**31 - 1),
+        size=st.integers(1, 12),
+    )
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_replicated_search_matches_local(repo_seed, mesh_i, q_seed,
+                                             size):
+        _run_property(repo_seed, mesh_i, q_seed, size)
+
+else:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_replicated_search_matches_local(seed):
+        _run_property(*_case_from_seed(seed))

@@ -266,3 +266,92 @@ def test_stop_fails_queued_requests(env):
     assert req.future.done()
     with pytest.raises(RuntimeError):
         req.future.result(timeout=0)
+
+
+def check_replicated_serving():
+    """SearchServer over a ReplicatedQueryEngine (2 x 4 mesh): a mixed
+    burst pre-filled BEFORE the dispatcher starts drains as ONE batch ->
+    one engine.search call, every future gets the same legacy response
+    shapes as the single-device server, answers are bit-identical to
+    direct local-engine calls, and a poisoned request sharing a drain
+    fails only its own future (per-request fallback works on the replica
+    dispatch path too)."""
+    import jax
+
+    from repro.engine import ReplicatedQueryEngine
+
+    datasets = make_clustered_datasets(17, seed=4, n_points=(20, 60))
+    repo, _ = build_repository(datasets, leaf_capacity=16, theta=THETA,
+                               remove_outliers=False)
+    local = QueryEngine(repo)
+    engine = ReplicatedQueryEngine(repo, n_replicas=2, n_data=4)
+    server = SearchServer(engine, max_batch=64, max_wait_ms=250.0)
+    traffic = make_traffic(repo, datasets, 27, seed=3)   # 3 of each kind
+    assert {op for op, _ in traffic} == set(OPS)
+    # pre-fill the queue so the whole burst is visible to the FIRST drain
+    from repro.launch.serve_search import _to_query
+    reqs = [Request(op, _to_query(op, p)) for op, p in traffic]
+    for r in reqs:
+        server._queue.put(r)
+    server.start()
+    try:
+        results = [r.future.result(timeout=600) for r in reqs]
+        # one drain, one search(): exactly the single-drain group count (9
+        # stage-1 op/static groups + 2 pipeline stage-2 groups) — a split
+        # drain would re-plan its groups and book more
+        assert server.stats.batches == 11
+        assert server.stats.batch_size_sum == 27
+        s = engine.stats
+        assert s.cache_hits + s.cache_misses == s.dispatches
+        assert s.plan_groups <= s.replica_subgroups <= s.plan_groups * 2
+        # legacy response shapes + bit-identity vs the local engine
+        for (op, payload), res in zip(traffic, results):
+            if op == "range_search":
+                want = local.range_search(payload["r_lo"][None],
+                                          payload["r_hi"][None])[0]
+                np.testing.assert_array_equal(np.asarray(res),
+                                              np.asarray(want))
+            elif op == "topk_ia":
+                vals, ids = local.topk_ia(payload["q_lo"][None],
+                                          payload["q_hi"][None],
+                                          payload["k"])
+                np.testing.assert_array_equal(np.asarray(res[0]),
+                                              np.asarray(vals[0]))
+                np.testing.assert_array_equal(np.asarray(res[1]),
+                                              np.asarray(ids[0]))
+            elif op == "topk_hausdorff":
+                q_batch = local.build_queries([payload["q"]])
+                qi = jax.tree.map(lambda x: x[0], q_batch)
+                vals, ids, _ = local.topk_hausdorff(qi, payload["k"])
+                np.testing.assert_array_equal(np.asarray(res[0]),
+                                              np.asarray(vals))
+                np.testing.assert_array_equal(np.asarray(res[1]),
+                                              np.asarray(ids))
+                assert res[2].exact_evaluations > 0
+            elif op == "pipeline":
+                assert res.op == "pipeline"
+                assert res.extras["stage1"] is not None
+        # poisoned request isolated on the replica path: wrong box rank
+        # poisons its group; the server falls back per-request and only
+        # the bad future fails
+        rng = np.random.default_rng(13)
+        lo = rng.uniform(-60, 40, (2, 2)).astype(np.float32)
+        hi = lo + 5.0
+        good = server.submit("topk_ia", q_lo=lo[0], q_hi=hi[0], k=K)
+        bad = server.submit("topk_ia", q_lo=np.zeros(3, np.float32),
+                            q_hi=np.ones(3, np.float32), k=K)
+        v, j = good.result(timeout=600)
+        assert np.asarray(v).shape == (K,)
+        import pytest as _pytest
+        with _pytest.raises(Exception):
+            bad.result(timeout=600)
+        after = server.submit("range_search", r_lo=lo[1], r_hi=hi[1])
+        assert np.asarray(after.result(timeout=600)).ndim == 1
+    finally:
+        server.stop()
+    print("REPLICATED_SERVING_OK")
+
+
+def test_replicated_serving():
+    from conftest import dispatch_device_check
+    dispatch_device_check("test_serve_search", "check_replicated_serving")
