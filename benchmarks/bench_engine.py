@@ -591,6 +591,141 @@ def bench_replica_scaling(repo, lake, k, eps, *, repeats, max_batch=None,
     }
 
 
+def bench_mutation_sweep(lake, k, *, repeats, max_batch=None):
+    """Live-repository serving under churn: saturated mixed-query QPS/p99
+    on a LiveRepository with NO mutations (baseline) vs the SAME pool
+    while a background thread streams ingest / replace / delete
+    mutations as fast as they publish (worst-case churn).
+
+    The mutation stream keeps the safe id discipline: replaces rotate
+    over original ids (always live), deletes only ever target slots the
+    stream itself ingested — so every point query in the pool stays
+    valid no matter how the stream interleaves with the drains.
+
+    Also records the mutation lane itself: publish latency percentiles,
+    bytes uploaded (placement accounting: single-dataset payloads only —
+    never a full re-upload), epoch movement, and tier growth.
+    """
+    import threading
+
+    from repro.engine import LiveRepository
+    from repro.engine.query import Pipeline
+    from repro.launch.serve_search import Request, SearchServer
+
+    live = LiveRepository(lake, leaf_capacity=16, theta=5,
+                          remove_outliers=False, result_cache_size=0)
+    eps = float(zorder.default_epsilon(live.repo.space_lo,
+                                       live.repo.space_hi, 5))
+    server_batch = 16 if max_batch is None else min(16, max_batch)
+    b_rows = 64 if max_batch is None else max(8, max_batch)
+    sat_rounds = 4
+    pool = make_mixed_pool(live.repo, lake, b_rows, k, eps, seed=3)
+    rng = np.random.default_rng(11)
+    payloads = [(lake[int(rng.integers(len(lake)))]
+                 + rng.normal(0, 0.5, 2).astype(np.float32))
+                for _ in range(8)]
+
+    def run_saturating():
+        server = SearchServer(live.engine, max_batch=server_batch,
+                              max_wait_ms=2.0, adaptive=True)
+        reqs = []
+        for q in pool * sat_rounds:
+            op = "pipeline" if isinstance(q, Pipeline) else q.op
+            req = Request(op, q)
+            reqs.append(req)
+            server._queue.put(req)
+        t0 = time.perf_counter()
+        server.start()
+        try:
+            for req in reqs:
+                req.future.result(timeout=600)
+            dt = time.perf_counter() - t0
+            return {"qps": len(reqs) / dt,
+                    "p50_ms": server.stats.p50_ms,
+                    "p99_ms": server.stats.p99_ms,
+                    "mean_batch": server.stats.mean_batch}
+        finally:
+            server.stop()
+
+    # warm both lanes off the measured path: the query drains compile
+    # their bucket shapes, and one ingest/replace/delete probe compiles
+    # the row-build stages, both updater variants, AND the tier growth
+    # (128 datasets fill the initial ladder tier exactly, so the first
+    # ingest doubles it here, not mid-measurement)
+    run_saturating()
+    wid = live.ingest(payloads[0])
+    live.replace(wid, payloads[1])
+    live.delete(wid)
+    live.bytes_uploaded = 0
+    epoch0, layout0 = live.epoch, getattr(live.engine.dispatch,
+                                          "repo_epoch", 0)
+
+    baseline = max((run_saturating() for _ in range(2)),
+                   key=lambda r: r["qps"])
+
+    mut_lat: list = []
+    stop = threading.Event()
+
+    def churn():
+        i = 0
+        own: list = []                      # slots this stream ingested
+        while not stop.is_set():
+            kind = i % 3
+            t0 = time.perf_counter()
+            if kind == 0:
+                own.append(live.ingest(payloads[i % len(payloads)]))
+            elif kind == 1:
+                live.replace(int(i // 3) % len(lake),
+                             payloads[(i + 1) % len(payloads)])
+            elif own:
+                live.delete(own.pop(0))
+            mut_lat.append(time.perf_counter() - t0)
+            i += 1
+
+    thread = threading.Thread(target=churn, daemon=True)
+    thread.start()
+    try:
+        under = max((run_saturating() for _ in range(2)),
+                    key=lambda r: r["qps"])
+    finally:
+        stop.set()
+        thread.join(timeout=60)
+
+    lat_ms = sorted(1e3 * x for x in mut_lat)
+    pct = lambda p: lat_ms[min(len(lat_ms) - 1,          # noqa: E731
+                               int(p * (len(lat_ms) - 1)))] if lat_ms else 0.0
+    geom = live.geometry
+    per_mutation = geom.point_capacity * (4 * geom.dim + 1)
+    payload_mutations = sum(1 for i in range(len(mut_lat)) if i % 3 != 2
+                            ) if mut_lat else 0
+    return {
+        "method": ("saturated pre-filled-queue mixed serving on a "
+                   "LiveRepository; 'under_mutation' repeats the pool "
+                   "while a thread streams ingest/replace/delete "
+                   "back-to-back; mutation latency is per-publish wall "
+                   "time in that thread"),
+        "n_requests": b_rows * sat_rounds,
+        "baseline": baseline,
+        "under_mutation": under,
+        "qps_ratio_under_mutation": under["qps"] / baseline["qps"],
+        "mutations_applied": len(mut_lat),
+        "mutation_mean_ms": (sum(lat_ms) / len(lat_ms)) if lat_ms else 0.0,
+        "mutation_p50_ms": pct(0.50),
+        "mutation_p99_ms": pct(0.99),
+        "epoch_delta": live.epoch - epoch0,
+        "layout_epoch_delta": getattr(live.engine.dispatch, "repo_epoch", 0)
+                              - layout0,
+        "bytes_uploaded": live.bytes_uploaded,
+        "bytes_per_payload_mutation": per_mutation,
+        # placement accounting: every upload is ONE padded dataset row
+        # (ingest/replace); deletes and growth upload nothing
+        "no_full_reupload": live.bytes_uploaded
+                            == payload_mutations * per_mutation,
+        "slots": live.n_slots,
+        "live_datasets": len(live.live_ids),
+    }
+
+
 def bench_exacthaus(repo, qi, k, repeats):
     """Sharded ExactHaus: single-query latency + per-device resident
     repository bytes at 1/3/8 shards (clipped to the available devices).
@@ -719,17 +854,47 @@ def main(argv=None):
                          "(ReplicatedQueryEngine at R x 2 for R in 1/2/4; "
                          "force 8 host devices with REPRO_HOST_DEVICES=8) "
                          "-> BENCH_engine_replica.json")
+    ap.add_argument("--mutation-sweep", action="store_true",
+                    help="run ONLY the live-repository churn benchmark "
+                         "(saturated mixed serving with and without a "
+                         "background ingest/replace/delete stream) "
+                         "-> BENCH_engine_live.json")
     args = ap.parse_args(argv)
     if args.max_batch is not None:
         global BATCHES
         BATCHES = tuple(b for b in BATCHES if b <= args.max_batch)
     if args.out is None:
-        args.out = ("BENCH_engine_replica.json" if args.replica_sweep
+        args.out = ("BENCH_engine_live.json" if args.mutation_sweep
+                    else "BENCH_engine_replica.json" if args.replica_sweep
                     else "BENCH_engine_sharded.json" if args.sharded
                     else "BENCH_engine.json")
 
     lake = synthetic.trajectory_repository(args.datasets, seed=0,
                                            n_points=(100, 400))
+    if args.mutation_sweep:
+        rec = {
+            "bench": "engine_live",
+            "n_datasets": args.datasets,
+            "n_devices": jax.device_count(),
+            "mutation_sweep": bench_mutation_sweep(
+                lake, 10, repeats=max(2, args.repeats // 2),
+                max_batch=args.max_batch),
+        }
+        ms = rec["mutation_sweep"]
+        summary = {
+            "qps_baseline": round(ms["baseline"]["qps"], 1),
+            "qps_under_mutation": round(ms["under_mutation"]["qps"], 1),
+            "qps_ratio_under_mutation":
+                round(ms["qps_ratio_under_mutation"], 3),
+            "p99_ms_under_mutation": round(ms["under_mutation"]["p99_ms"], 1),
+            "mutation_p50_ms": round(ms["mutation_p50_ms"], 1),
+            "mutations_applied": ms["mutations_applied"],
+            "no_full_reupload": ms["no_full_reupload"],
+        }
+        rec["summary"] = summary
+        Path(args.out).write_text(json.dumps(rec, indent=2))
+        print(json.dumps(summary, indent=2))
+        return rec
     repo, info = build_repository(lake, leaf_capacity=16, theta=5,
                                   remove_outliers=False)
 

@@ -1,0 +1,429 @@
+"""Incremental repository mutation under a PINNED geometry.
+
+`build_repository` (Alg. 1) derives four repository-global quantities from
+the whole dataset collection: the bottom tree depth (max cardinality), the
+Def. 4 grid bounds (union of root MBRs), the pooled Eq. 3 outlier
+threshold r', and the padded slot count B_pad.  A live repository cannot
+re-derive them per mutation without rebuilding everything, so this module
+pins them once as a :class:`RepoGeometry` and reuses the EXACT cold-build
+code path per slot:
+
+  * :func:`init_live` — the cold build (same op order as Alg. 1)
+    restructured to also emit its geometry;
+  * :func:`build_row` — THE canonical per-dataset pipeline: pad ->
+    ``build_index_batch`` -> ``remove_outliers`` (pinned r') -> z-order
+    signature (pinned bounds), always as a BATCH-OF-1 through a set of
+    shared, cached jitted stage executables.  Batch-of-1 everywhere is a
+    correctness decision, not a convenience: XLA:CPU's reduction
+    vectorization is batch-width dependent (a (7, ...) vmapped tree build
+    can differ from a (1, ...) build by 1 ulp in a node radius), so the
+    only way a live batch-of-1 ingest can be bit-identical to a cold
+    rebuild is for the cold rebuild to use the SAME batch-of-1
+    executables — which :func:`init_live` and :func:`build_frozen` do;
+  * :func:`update_slot` — the functional single-slot repository update
+    (ingest / delete / replace are all one scatter + upper-tree rebuild;
+    a DELETED slot is ZEROED entirely, matching the cold builder's
+    ``pad_to(..., 0)`` padding exactly);
+  * :func:`build_frozen` — the bit-identity ORACLE: a cold,
+    slot-preserving build from ``{slot j -> dataset_j | None}`` under the
+    same geometry, against which any live mutation sequence must agree.
+
+Capacity is tiered like the engine's bucket ladder: the slot count starts
+at the cold ``B_pad`` (plus optional headroom) and doubles via
+:meth:`RepoGeometry.grown` + :func:`grow_slots` when ingest outruns it.
+The bottom point capacity is pinned at init — an oversize ingest is a
+``ValueError``, never a silent geometry change (re-deriving the depth
+would shift every tree in the repository).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import lru_cache
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as index_lib
+from repro.core import outliers as outliers_lib
+from repro.core import repo_index as repo_lib
+from repro.core import zorder
+from repro.core.index import DatasetIndex
+from repro.core.repo_index import Repository
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class RepoGeometry:
+    """The cold-build quantities a live repository pins at creation.
+
+    ``space_lo``/``space_hi`` and ``r_prime`` are stored as exact Python
+    floats of the builder's float32 values (float32 -> float64 -> float32
+    round-trips exactly), so re-materializing them reproduces the cold
+    build's arithmetic bit for bit.
+    """
+
+    leaf_capacity: int          # bottom-tree leaf fanout f
+    bottom_depth: int           # pinned bottom tree depth
+    repo_leaf_capacity: int     # upper-tree fanout f_up
+    upper_depth: int            # current slot tier: n_slots = f_up * 2**d_u
+    theta: int                  # z-order grid resolution
+    space_lo: tuple             # (d',) pinned Def. 4 grid bounds
+    space_hi: tuple
+    r_prime: float | None       # pinned Eq. 3 threshold; None = no removal
+    dim: int = 2
+
+    @property
+    def point_capacity(self) -> int:
+        return self.leaf_capacity * (1 << self.bottom_depth)
+
+    @property
+    def n_slots(self) -> int:
+        return self.repo_leaf_capacity * (1 << self.upper_depth)
+
+    @property
+    def sig_words(self) -> int:
+        return zorder.num_words(self.theta)
+
+    def grown(self) -> "RepoGeometry":
+        """The next capacity tier: slot count doubles, everything else
+        pinned (existing slots keep their trees and signatures)."""
+        return replace(self, upper_depth=self.upper_depth + 1)
+
+    def space_bounds(self):
+        return (jnp.asarray(self.space_lo, jnp.float32),
+                jnp.asarray(self.space_hi, jnp.float32))
+
+
+def _floats(x) -> tuple:
+    return tuple(float(v) for v in np.asarray(x, np.float32).reshape(-1))
+
+
+# -- the canonical batch-of-1 row pipeline --------------------------------
+#
+# Three cached jitted stages shared by EVERY row build in the process
+# (live ingest, init_live, the frozen oracle).  Sharing the executables —
+# same shapes, same program — is what makes bit-identity unconditional:
+# same-shape XLA programs are deterministic, while re-deriving "the same"
+# computation at a different batch width is not (see module docstring).
+
+@lru_cache(maxsize=None)
+def _stage_build(depth: int):
+    return jax.jit(
+        lambda pts, val: index_lib.build_index_batch(pts, val, depth))
+
+
+@lru_cache(maxsize=None)
+def _stage_outliers():
+    # r' is a traced OPERAND (not a baked constant): init_live probes it
+    # and every pinned geometry reuses the one executable per shape
+    return jax.jit(
+        lambda idx, r: outliers_lib.remove_outliers(idx, r_prime=r)[0])
+
+
+@lru_cache(maxsize=None)
+def _stage_sig(theta: int, space_lo: tuple, space_hi: tuple):
+    lo = jnp.asarray(space_lo, jnp.float32)
+    hi = jnp.asarray(space_hi, jnp.float32)
+    return jax.jit(jax.vmap(
+        lambda p, v: zorder.signature(p, v, lo, hi, theta)))
+
+
+def pad_one(points: np.ndarray, geom: RepoGeometry):
+    """Host-pad one dataset to the pinned (1, point_capacity, dim) layout
+    (zeros beyond the real points, exactly like `pad_batch`)."""
+    n = int(points.shape[0])
+    if n > geom.point_capacity:
+        raise ValueError(
+            f"dataset with {n} points exceeds the pinned point capacity "
+            f"{geom.point_capacity} (leaf_capacity={geom.leaf_capacity}, "
+            f"bottom_depth={geom.bottom_depth}); build the live "
+            f"repository with a larger point_capacity")
+    pts = np.zeros((1, geom.point_capacity, geom.dim), np.float32)
+    val = np.zeros((1, geom.point_capacity), bool)
+    pts[0, :n] = points
+    val[0, :n] = True
+    return pts, val
+
+
+def build_row(points: np.ndarray, geom: RepoGeometry):
+    """THE canonical row build: one dataset -> (batch-of-1 DatasetIndex,
+    sigs (1, W)) through the shared stage executables under the pinned
+    geometry."""
+    pts, val = pad_one(np.asarray(points, np.float32), geom)
+    idx = _stage_build(geom.bottom_depth)(jnp.asarray(pts),
+                                          jnp.asarray(val))
+    if geom.r_prime is not None:
+        idx = _stage_outliers()(idx, jnp.float32(geom.r_prime))
+    sigs = _stage_sig(geom.theta, geom.space_lo,
+                      geom.space_hi)(idx.points, idx.valid)
+    return idx, sigs
+
+
+def build_rows(datasets: Sequence[np.ndarray], geom: RepoGeometry):
+    """Batch-of-1 :func:`build_row` per dataset, stacked to
+    (DatasetIndex batched over len(datasets), sigs (B, W))."""
+    rows = [build_row(ds, geom) for ds in datasets]
+    idx = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                       *[r[0] for r in rows])
+    sigs = jnp.concatenate([r[1] for r in rows], axis=0)
+    return idx, sigs
+
+
+def zero_slot_row(geom: RepoGeometry):
+    """The all-zero slot row a DELETED slot must hold — bit-identical to
+    the cold builder's ``pad_to(..., 0)`` padding for never-filled slots
+    (NOT an empty built tree, whose node boxes would carry +-inf)."""
+    n_pad, d = geom.point_capacity, geom.dim
+    n_nodes = (1 << (geom.bottom_depth + 1)) - 1
+    row = DatasetIndex(
+        points=jnp.zeros((n_pad, d), jnp.float32),
+        valid=jnp.zeros((n_pad,), bool),
+        centers=jnp.zeros((n_nodes, d), jnp.float32),
+        radii=jnp.zeros((n_nodes,), jnp.float32),
+        box_lo=jnp.zeros((n_nodes, d), jnp.float32),
+        box_hi=jnp.zeros((n_nodes, d), jnp.float32),
+        counts=jnp.zeros((n_nodes,), jnp.int32),
+    )
+    return row, jnp.zeros((geom.sig_words,), jnp.uint32)
+
+
+def upper_from_roots(centers: Array, radii: Array, lo: Array, hi: Array,
+                     sigs: Array, valid: Array,
+                     upper_depth: int) -> repo_lib.RepoIndex:
+    """The Section V-B upper tree from per-slot ROOT summaries — the same
+    inf-mask + ``build_repo_index`` sequence as the cold builder, shared
+    by the cold oracle, the local updater, and the shard_map updater
+    (which all-gathers just these roots, not the slot bodies)."""
+    lo = jnp.where(valid[:, None], lo, jnp.inf)
+    hi = jnp.where(valid[:, None], hi, -jnp.inf)
+    return repo_lib.build_repo_index(centers, radii, lo, hi, sigs, valid,
+                                     upper_depth)
+
+
+def upper_index(ds_index: DatasetIndex, ds_sigs: Array, ds_valid: Array,
+                upper_depth: int) -> repo_lib.RepoIndex:
+    """:func:`upper_from_roots` fed from full slot arrays."""
+    return upper_from_roots(ds_index.centers[:, 0, :],
+                            ds_index.radii[:, 0],
+                            ds_index.box_lo[:, 0, :],
+                            ds_index.box_hi[:, 0, :],
+                            ds_sigs, ds_valid, upper_depth)
+
+
+@lru_cache(maxsize=None)
+def _stage_upper(upper_depth: int):
+    """THE upper-tree executable for a given depth.  Bit-identity demands
+    one executable, not one program: the same reduction compiled inside a
+    shard_map body (or fused into a wider jit) can round a node radius one
+    ulp differently at some slot counts.  Every path — the cold oracle,
+    the live updaters, tier growth — must call this exact jitted stage on
+    single-device root summaries (root extraction is pure slicing, so the
+    inputs agree bitwise by construction)."""
+    return jax.jit(lambda c, r, lo, hi, s, v: upper_from_roots(
+        c, r, lo, hi, s, v, upper_depth))
+
+
+def upper_tree(ds_index: DatasetIndex, ds_sigs: Array, ds_valid: Array,
+               geom: RepoGeometry) -> repo_lib.RepoIndex:
+    """Upper tree over the LOGICAL ``geom.n_slots`` slots (shard padding
+    beyond them never enters the tree), through the shared
+    :func:`_stage_upper` executable."""
+    B_pad = geom.n_slots
+    return _stage_upper(geom.upper_depth)(
+        ds_index.centers[:B_pad, 0, :], ds_index.radii[:B_pad, 0],
+        ds_index.box_lo[:B_pad, 0, :], ds_index.box_hi[:B_pad, 0, :],
+        ds_sigs[:B_pad], ds_valid[:B_pad])
+
+
+def assemble(ds_index: DatasetIndex, ds_sigs: Array, ds_valid: Array,
+             geom: RepoGeometry) -> Repository:
+    """Repository from full slot arrays: rebuild the upper tree (shared
+    stage, logical slots only) and attach the pinned space bounds."""
+    repo = upper_tree(ds_index, ds_sigs, ds_valid, geom)
+    lo, hi = geom.space_bounds()
+    return Repository(ds_index=ds_index, ds_sigs=ds_sigs,
+                      ds_valid=ds_valid, repo=repo,
+                      space_lo=lo, space_hi=hi)
+
+
+def _scatter_rows(rows: DatasetIndex, sigs: Array, slots, geom: RepoGeometry,
+                  n_physical: int | None = None):
+    """Zero-initialized slot arrays with `rows` scattered at `slots`.
+
+    ``n_physical`` (>= geom.n_slots) pads the slot axis further for
+    shard-count alignment — the same zero padding `shard_repository`
+    applies."""
+    B = n_physical if n_physical is not None else geom.n_slots
+    zero_row, zero_sig = zero_slot_row(geom)
+    js = jnp.asarray(np.asarray(slots, np.int32))
+    ds_index = jax.tree.map(
+        lambda z, r: jnp.broadcast_to(z, (B,) + z.shape).at[js].set(r),
+        zero_row, rows)
+    ds_sigs = jnp.zeros((B, geom.sig_words), jnp.uint32).at[js].set(sigs)
+    ds_valid = jnp.zeros((B,), bool).at[js].set(True)
+    return ds_index, ds_sigs, ds_valid
+
+
+def build_frozen(slot_datasets: Sequence, geom: RepoGeometry,
+                 n_physical: int | None = None) -> Repository:
+    """The bit-identity ORACLE: a cold, slot-preserving build.
+
+    ``slot_datasets[j]`` is the dataset resident in slot j, or None for a
+    hole (never-filled or deleted — both are all-zero rows).  After ANY
+    mutation sequence, the live repository must equal
+    ``build_frozen(current slot contents, geometry)`` bit for bit, and so
+    must every op run against it.
+    """
+    if len(slot_datasets) > geom.n_slots:
+        raise ValueError(f"{len(slot_datasets)} slots > capacity "
+                         f"{geom.n_slots}")
+    filled = [(j, ds) for j, ds in enumerate(slot_datasets)
+              if ds is not None]
+    if not filled:
+        zero_row, _ = zero_slot_row(geom)
+        B = n_physical if n_physical is not None else geom.n_slots
+        ds_index = jax.tree.map(
+            lambda z: jnp.broadcast_to(z, (B,) + z.shape) + 0, zero_row)
+        ds_sigs = jnp.zeros((B, geom.sig_words), jnp.uint32)
+        ds_valid = jnp.zeros((B,), bool)
+        return assemble(ds_index, ds_sigs, ds_valid, geom)
+    rows, sigs = build_rows([ds for _, ds in filled], geom)
+    ds_index, ds_sigs, ds_valid = _scatter_rows(
+        rows, sigs, [j for j, _ in filled], geom, n_physical)
+    return assemble(ds_index, ds_sigs, ds_valid, geom)
+
+
+def init_live(
+    datasets: Sequence[np.ndarray],
+    *,
+    leaf_capacity: int = 16,
+    repo_leaf_capacity: int | None = None,
+    theta: int = 5,
+    remove_outliers: bool = True,
+    point_capacity: int | None = None,
+    slot_headroom: int = 0,
+) -> tuple[Repository, RepoGeometry]:
+    """The cold build (Alg. 1's op order), restructured to PIN its
+    geometry and to run every per-dataset stage through the canonical
+    BATCH-OF-1 executables — so the initial repository is bit-identical
+    to :func:`build_frozen` of the same datasets, and every later
+    incremental row equals what this build would have produced.
+
+    The repository-global quantities keep their cold derivations: the
+    bottom depth from the largest dataset, r' from the POOLED leaf radii
+    of all bottom trees (Eq. 3), the grid bounds from the union of the
+    refined root MBRs.  ``point_capacity`` reserves bottom-tree headroom
+    for future ingests of larger datasets; ``slot_headroom`` adds that
+    many doublings of slot capacity up front.
+    """
+    if repo_leaf_capacity is None:
+        repo_leaf_capacity = leaf_capacity
+    n_max = max(int(x.shape[0]) for x in datasets)
+    depth_b = index_lib.depth_for(n_max, leaf_capacity)
+    if point_capacity is not None:
+        if point_capacity < n_max:
+            raise ValueError(f"point_capacity {point_capacity} < largest "
+                             f"initial dataset ({n_max} points)")
+        depth_b = max(depth_b,
+                      index_lib.depth_for(point_capacity, leaf_capacity))
+    B = len(datasets)
+    # geometry skeleton: enough for pad_one/_stage_build (bottom layout);
+    # bounds / r' / upper depth are filled in below once derived
+    geom = RepoGeometry(
+        leaf_capacity=leaf_capacity,
+        bottom_depth=depth_b,
+        repo_leaf_capacity=repo_leaf_capacity,
+        upper_depth=0,
+        theta=theta,
+        space_lo=(),
+        space_hi=(),
+        r_prime=None,
+    )
+    build = _stage_build(depth_b)
+    built = []
+    for ds in datasets:
+        pts, val = pad_one(np.asarray(ds, np.float32), geom)
+        built.append(build(jnp.asarray(pts), jnp.asarray(val)))
+
+    r_prime = None
+    if remove_outliers:
+        # Eq. 3 over the POOLED leaf radii of every bottom tree — same
+        # pooling as the cold builder, values from the canonical rows.
+        # Round-trip through float32 BEFORE refining so init uses the
+        # exact operand every later pinned-r' ingest will use.
+        leaf_r = jnp.concatenate(
+            [index_lib.leaf_radii(b).reshape(-1) for b in built])
+        leaf_c = jnp.concatenate(
+            [index_lib.leaf_counts(b).reshape(-1) for b in built])
+        r_prime = float(np.float32(
+            outliers_lib.kneedle_threshold(leaf_r, leaf_c > 0)))
+        refine = _stage_outliers()
+        built = [refine(b, jnp.float32(r_prime)) for b in built]
+
+    space_lo = jnp.min(jnp.concatenate(
+        [b.box_lo[:, 0, :2] for b in built]), axis=0)
+    space_hi = jnp.max(jnp.concatenate(
+        [b.box_hi[:, 0, :2] for b in built]), axis=0)
+
+    depth_u = repo_lib.depth_for_repo(B, repo_leaf_capacity) + slot_headroom
+    geom = replace(geom,
+                   upper_depth=depth_u,
+                   space_lo=_floats(space_lo),
+                   space_hi=_floats(space_hi),
+                   r_prime=r_prime)
+
+    sig = _stage_sig(geom.theta, geom.space_lo, geom.space_hi)
+    sigs = jnp.concatenate([sig(b.points, b.valid) for b in built], axis=0)
+    idx = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *built)
+    ds_index, ds_sigs, ds_valid = _scatter_rows(idx, sigs, np.arange(B),
+                                                geom)
+    return assemble(ds_index, ds_sigs, ds_valid, geom), geom
+
+
+def update_slot(repo: Repository, slot: Array, row: DatasetIndex,
+                sig: Array, valid: Array, *, geom: RepoGeometry
+                ) -> Repository:
+    """Functional single-slot update: scatter the new row (ingest /
+    replace) or the zero row (delete) into the slot arrays and rebuild the
+    upper tree from the refreshed roots.  Traceable with a DYNAMIC slot
+    and validity, so one jitted executable serves every mutation kind on
+    every slot of the current tier.
+
+    NOT donated: the previous repository's buffers stay intact, so an
+    in-flight query keeps computing against the consistent pre-mutation
+    snapshot while future queries see the new one — the repository is
+    never torn.
+    """
+    ds_index = jax.tree.map(lambda a, r: a.at[slot].set(r),
+                            repo.ds_index, row)
+    ds_sigs = repo.ds_sigs.at[slot].set(sig)
+    ds_valid = repo.ds_valid.at[slot].set(valid)
+    return assemble(ds_index, ds_sigs, ds_valid, geom)
+
+
+def pad_slots(repo: Repository, n_physical: int):
+    """The slot arrays zero-padded to ``n_physical`` rows (the grown
+    tier's shard-aligned physical count) — a device-side pad preserving
+    the global slot order; no host re-upload, no tree."""
+    cur = repo.ds_sigs.shape[0]
+    if n_physical < cur:
+        raise ValueError(f"grow target {n_physical} < current {cur} slots")
+
+    def pad(x):
+        z = jnp.zeros((n_physical - cur,) + x.shape[1:], x.dtype)
+        return jnp.concatenate([x, z], axis=0)
+
+    return (jax.tree.map(pad, repo.ds_index), pad(repo.ds_sigs),
+            pad(repo.ds_valid))
+
+
+def grow_slots(repo: Repository, geom: RepoGeometry,
+               n_physical: int | None = None) -> Repository:
+    """Pad the slot axis with zero rows up to the next tier (``geom`` is
+    the GROWN geometry) and rebuild the upper tree at its depth."""
+    B = n_physical if n_physical is not None else geom.n_slots
+    ds_index, ds_sigs, ds_valid = pad_slots(repo, B)
+    return assemble(ds_index, ds_sigs, ds_valid, geom)

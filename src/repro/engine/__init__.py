@@ -13,6 +13,12 @@ The DECLARATIVE front door is `QueryEngine.search(list[Query | Pipeline])
 -> list[SearchResult]` (`query` holds the frozen specs, `plan` the
 mixed-batch planner); the per-op batch methods survive as deprecated
 shims over it.
+
+`LiveRepository` (`live`) makes the resident repository MUTABLE: online
+ingest / delete / replace under a pinned cold-build geometry
+(`core/repo_mutate`), epoch-versioned result and executable caches, and
+bit-identity with a cold build of the equivalent frozen repository after
+any mutation sequence — on all three dispatchers.
 """
 from repro.engine.batched_ops import (  # noqa: F401
     nnp_pruned_batched,
@@ -27,6 +33,9 @@ from repro.engine.engine import (  # noqa: F401
     EngineStats,
     LocalDispatcher,
     QueryEngine,
+)
+from repro.engine.live import (  # noqa: F401
+    LiveRepository,
 )
 from repro.engine.query import (  # noqa: F401
     DATASET_TOPK_OPS,

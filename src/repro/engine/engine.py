@@ -129,7 +129,13 @@ class EngineStats:
     distinct from the executable-cache ones: ``result_cache_hits`` counts
     query rows answered from memoized results (no dispatch at all), while
     ``cache_hits``/``cache_misses`` keep describing compiled-executable
-    reuse for the dispatches that do run.
+    reuse for the dispatches that do run.  Under a live repository,
+    entries cached at a RETIRED epoch are purged eagerly on every epoch
+    install and counted in ``epoch_invalidations`` — a repeat of the same
+    query after a mutation forms a fresh key and is booked as a result-
+    cache MISS (then a dispatch), never a silent eviction, so the
+    ``cache_hits + cache_misses == dispatches`` invariant is undisturbed
+    by mutations.
 
     The PLANNER books its own counters on top (:meth:`count_group`):
     ``plan_groups`` / ``group_counts[op]`` count the dispatch groups a
@@ -145,6 +151,7 @@ class EngineStats:
     padded_queries: int = 0          # bucket padding overhead actually paid
     result_cache_hits: int = 0       # query rows served from the result LRU
     result_cache_misses: int = 0     # query rows that had to dispatch
+    epoch_invalidations: int = 0     # result rows retired by a repo epoch
     plan_groups: int = 0             # dispatch groups compiled by search()
     replica_subgroups: int = 0       # replica row-blocks those groups spanned
     pipeline_stage1: int = 0         # pipelines whose dataset stage ran
@@ -266,44 +273,68 @@ class LocalDispatcher:
     """Single-device dispatch: one jitted executable per op over the
     resident repository.
 
-    Each ``build_*`` returns a callable taking only the query-side operands;
-    the repository rides along as a bound leading argument (not a closed-over
-    constant, so XLA never bakes the arrays into the executable).
+    Each ``build_*`` returns a callable taking only the query-side
+    operands; the repository rides along as a LATE-BOUND leading jit
+    argument — the callable reads ``self.repo`` at call time (not a
+    closed-over constant, so XLA never bakes the arrays in, and not a
+    bind-time `partial`, so a live mutation that swaps ``self.repo`` for
+    a same-shape successor takes effect on the very next dispatch with
+    the SAME compiled executable).  The attribute swap is atomic, so a
+    dispatch sees either the whole old repository or the whole new one —
+    never a torn mix.
+
+    ``repo_epoch`` is the LAYOUT epoch: bumped by a live repository only
+    when the slot-array shapes change (capacity-tier growth), and folded
+    into every executable-cache key, so executables whose build closed
+    over the old slot count are retired rather than re-served.
     """
 
     name = "local"
+    #: layout epoch — bumped on slot-shape changes (live tier growth);
+    #: part of every executable-cache key like `autotune.epoch()`
+    repo_epoch = 0
 
     def __init__(self, repo: Repository):
         self.repo = repo
         self.n_slots = repo.n_slots
 
+    def _bind(self, impl):
+        jitted = jax.jit(impl)
+
+        def call(*args, **kw):
+            return jitted(self.repo, *args, **kw)
+
+        return call
+
     def build_range_search(self):
-        return partial(jax.jit(batched_ops.range_search_batched), self.repo)
+        return self._bind(batched_ops.range_search_batched)
 
     def build_topk_ia(self, k: int):
-        return partial(
-            jax.jit(partial(batched_ops.topk_ia_batched, k=k)), self.repo)
+        return self._bind(partial(batched_ops.topk_ia_batched, k=k))
 
     def build_topk_gbo(self, k: int):
-        return partial(
-            jax.jit(partial(batched_ops.topk_gbo_batched, k=k)), self.repo)
+        return self._bind(partial(batched_ops.topk_gbo_batched, k=k))
 
     def build_topk_hausdorff_approx(self, k: int):
-        return partial(
-            jax.jit(partial(batched_ops.topk_hausdorff_approx_batched, k=k)),
-            self.repo)
+        return self._bind(
+            partial(batched_ops.topk_hausdorff_approx_batched, k=k))
 
     def build_topk_hausdorff(self, k: int, refine_levels: int, chunk: int):
         # batched end-to-end: (B, ...) query batch -> one device dispatch
-        # (search._topk_hausdorff_device_batched is already jitted)
-        return partial(batched_ops.topk_hausdorff_batched, self.repo,
-                       k=k, refine_levels=refine_levels, chunk=chunk)
+        # (search._topk_hausdorff_device_batched is already jitted); late
+        # repo binding like every other op
+        def call(q_batch):
+            return batched_ops.topk_hausdorff_batched(
+                self.repo, q_batch, k=k, refine_levels=refine_levels,
+                chunk=chunk)
+
+        return call
 
     def build_range_points(self):
-        return partial(jax.jit(batched_ops.range_points_batched), self.repo)
+        return self._bind(batched_ops.range_points_batched)
 
     def build_nnp(self):
-        return partial(jax.jit(batched_ops.nnp_pruned_batched), self.repo)
+        return self._bind(batched_ops.nnp_pruned_batched)
 
 
 class QueryEngine:
@@ -342,6 +373,12 @@ class QueryEngine:
         self.result_cache_size = result_cache_size
         self._result_cache: OrderedDict = OrderedDict()
         self._n_valid = int(repo.ds_valid.sum())
+        # live-repository versioning: the DATA epoch (bumped on every
+        # mutation; part of every dataset-op result-cache key) and the
+        # per-slot epochs (point-op keys carry their target slot's epoch,
+        # so mutations of OTHER datasets never invalidate them)
+        self._repo_epoch = 0
+        self._slot_epochs = None
         if dispatcher is None:
             if mesh is not None:
                 # a mesh carrying a replica axis selects replica-parallel
@@ -419,14 +456,66 @@ class QueryEngine:
         The autotune table epoch is part of every key: executables close
         over routing decisions made at build time (kernel vs ref, tile
         sizes), so a `tune()` that installs new configs must NOT keep
-        serving stale compilations — the epoch bump retires them."""
-        key = (autotune.epoch(),) + tuple(key)
+        serving stale compilations — the epoch bump retires them.  The
+        dispatcher's LAYOUT epoch rides along for the same reason: builds
+        close over slot-count constants, so a live capacity-tier growth
+        must retire them too (data-only mutations leave both epochs alone
+        and keep every executable)."""
+        key = (autotune.epoch(),
+               getattr(self.dispatch, "repo_epoch", 0)) + tuple(key)
         fn = self._executables.get(key)
         cached = fn is not None
         if not cached:
             fn = build()
             self._executables[key] = fn
         return fn, cached
+
+    # -- repository epochs (live mutations) -------------------------------
+
+    @property
+    def repo_epoch(self) -> int:
+        """The DATA epoch of the resident repository (0 forever on a
+        frozen engine; bumped by :class:`~repro.engine.live.LiveRepository`
+        on every published mutation)."""
+        return self._repo_epoch
+
+    def slot_epoch(self, ds_id) -> int:
+        """Per-slot mutation epoch of dataset ``ds_id`` (0 on a frozen
+        engine) — the component point-op result keys carry, so caches for
+        UNTOUCHED datasets survive mutations elsewhere."""
+        se = self._slot_epochs
+        return 0 if se is None else int(se[int(ds_id)])
+
+    def set_repo_epoch(self, epoch: int, slot_epochs=None) -> None:
+        """Install a new repository epoch after a live mutation.
+
+        ``epoch`` must be monotonically increasing; ``slot_epochs`` (an
+        int array indexed by slot) replaces the per-slot epoch table.
+        Result-cache entries keyed at retired epochs are purged EAGERLY
+        and booked in ``stats.epoch_invalidations`` — they are retired
+        versions, not capacity evictions, and the counter makes the
+        distinction observable.  Executables are NOT touched: data
+        mutations reuse every compiled program (the layout epoch on the
+        dispatcher handles shape changes separately)."""
+        if epoch < self._repo_epoch:
+            raise ValueError(
+                f"repository epoch must be monotone: {epoch} < "
+                f"{self._repo_epoch}")
+        self._repo_epoch = int(epoch)
+        if slot_epochs is not None:
+            self._slot_epochs = slot_epochs
+        stale = []
+        for key in list(self._result_cache):
+            if key[0] in ("range_points", "nnp"):
+                # (op, ds_id, slot_epoch, ...)
+                if key[2] != self.slot_epoch(key[1]):
+                    stale.append(key)
+            elif key[1] != self._repo_epoch:
+                # (op, repo_epoch, ...)
+                stale.append(key)
+        for key in stale:
+            self._result_cache.pop(key, None)
+        self.stats.epoch_invalidations += len(stale)
 
     # -- result cache ------------------------------------------------------
 
@@ -542,7 +631,8 @@ class QueryEngine:
         if not self.result_cache_size:
             return self._range_search_dispatch(r_lo, r_hi)
         lo_np, hi_np = np.asarray(r_lo), np.asarray(r_hi)
-        keys = [("range_search", _digest(lo_np[i], hi_np[i]))
+        keys = [("range_search", self._repo_epoch,
+                 _digest(lo_np[i], hi_np[i]))
                 for i in range(lo_np.shape[0])]
         return self._serve_cached(
             "range_search", keys,
@@ -568,7 +658,7 @@ class QueryEngine:
         if not self.result_cache_size:
             return self._topk_ia_dispatch(q_lo, q_hi, k)
         lo_np, hi_np = np.asarray(q_lo), np.asarray(q_hi)
-        keys = [("topk_ia", k, _digest(lo_np[i], hi_np[i]))
+        keys = [("topk_ia", self._repo_epoch, k, _digest(lo_np[i], hi_np[i]))
                 for i in range(lo_np.shape[0])]
         return self._serve_cached(
             "topk_ia", keys,
@@ -595,7 +685,7 @@ class QueryEngine:
         if not self.result_cache_size:
             return self._topk_gbo_dispatch(q_sigs, k)
         sigs_np = np.asarray(q_sigs)
-        keys = [("topk_gbo", k, _digest(sigs_np[i]))
+        keys = [("topk_gbo", self._repo_epoch, k, _digest(sigs_np[i]))
                 for i in range(sigs_np.shape[0])]
         return self._serve_cached(
             "topk_gbo", keys,
@@ -622,7 +712,8 @@ class QueryEngine:
         # depth is part of the key: (points, valid, depth) fully determine
         # a DatasetIndex built by this codebase (node stats are derived
         # from them), so same points under a different tree never collide
-        keys = [("approx_haus", k, float(eps), q_batch.depth,
+        keys = [("approx_haus", self._repo_epoch, k, float(eps),
+                 q_batch.depth,
                  _digest(pts[i], val[i])) for i in range(pts.shape[0])]
         return self._serve_cached(
             "topk_hausdorff_approx", keys,
@@ -662,7 +753,8 @@ class QueryEngine:
         pts, val = np.asarray(q_batch.points), np.asarray(q_batch.valid)
         # depth in the key for the same reason as ApproHaus (a
         # different tree over the same points changes the SearchStats)
-        keys = [("exact_haus", k, refine_levels, chunk, q_batch.depth,
+        keys = [("exact_haus", self._repo_epoch, k, refine_levels, chunk,
+                 q_batch.depth,
                  _digest(pts[i], val[i])) for i in range(pts.shape[0])]
         return self._serve_cached(
             "topk_hausdorff", keys,
@@ -702,7 +794,38 @@ class QueryEngine:
 
     def _exec_range_points(self, ds_ids, r_lo, r_hi):
         """RangeP for B (dataset id, box) requests -> (take masks
-        (B, n_pad), list[PointStats]).  The traversal's scanned-leaf mask
+        (B, n_pad), list[PointStats]).
+
+        Point ops ride the result cache too, but ONLY when ``ds_ids``
+        arrives host-resident (the planner's op-group path and the legacy
+        shims): pipeline stage 2 hands winning ids over ON DEVICE, and
+        forming host cache keys there would force a sync in the middle of
+        the pipeline — so that path dispatches directly.  Keys carry the
+        target slot's mutation epoch, so a live mutation of dataset j
+        retires exactly the entries that touched j.  Cached rows keep
+        their PointStats; :meth:`EngineStats.record_point_search` books
+        only the rows that actually dispatched."""
+        if self.result_cache_size and not isinstance(ds_ids, jax.Array):
+            ids_np = np.atleast_1d(np.asarray(ds_ids, np.int32))
+            lo_np = np.atleast_2d(np.asarray(r_lo, np.float32))
+            hi_np = np.atleast_2d(np.asarray(r_hi, np.float32))
+            keys = [("range_points", int(ids_np[i]),
+                     self.slot_epoch(ids_np[i]),
+                     _digest(lo_np[i], hi_np[i]))
+                    for i in range(ids_np.shape[0])]
+            return self._serve_cached(
+                "range_points", keys,
+                lambda sel: self._range_points_dispatch(
+                    _take_rows(ids_np, sel), _take_rows(lo_np, sel),
+                    _take_rows(hi_np, sel)),
+                split=lambda raw: [(raw[0][i], raw[1][i])
+                                   for i in range(len(raw[1]))],
+                join=lambda rows: (jnp.stack([r[0] for r in rows]),
+                                   [r[1] for r in rows]))
+        return self._range_points_dispatch(ds_ids, r_lo, r_hi)
+
+    def _range_points_dispatch(self, ds_ids, r_lo, r_hi):
+        """One batched RangeP dispatch; the traversal's scanned-leaf mask
         is no longer discarded: per-query leaf pruning stats are computed
         from it (device-side sums, one tiny transfer) and folded into
         ``EngineStats`` via :meth:`EngineStats.record_point_search`."""
@@ -732,11 +855,34 @@ class QueryEngine:
         """Tree-pruned NNP for B (query, dataset id) requests ->
         (dists (B, nq), idx (B, nq), list[PointStats]).
 
-        Dispatch routes through `core/point_search.nnp_pruned_core` (the
-        Eq. 4 pair-grid prune) on BOTH dispatchers, and the surviving
-        ``pair_live`` mask is surfaced as per-query PointStats — the same
-        counters the host `nnp_pruned` reports — instead of being thrown
-        away."""
+        Same host-gated result caching as RangeP (see
+        :meth:`_exec_range_points`): cacheable only when the ids arrive
+        host-resident; the on-device stage-2 handoff dispatches
+        directly."""
+        if self.result_cache_size and not isinstance(ds_ids, jax.Array):
+            ids_np = np.atleast_1d(np.asarray(ds_ids, np.int32))
+            pts = np.asarray(q_batch.points)
+            val = np.asarray(q_batch.valid)
+            keys = [("nnp", int(ids_np[i]), self.slot_epoch(ids_np[i]),
+                     q_batch.depth, _digest(pts[i], val[i]))
+                    for i in range(ids_np.shape[0])]
+            return self._serve_cached(
+                "nnp", keys,
+                lambda sel: self._nnp_dispatch(
+                    _take_rows(ids_np, sel), _take_tree_rows(q_batch, sel)),
+                split=lambda raw: [(raw[0][i], raw[1][i], raw[2][i])
+                                   for i in range(len(raw[2]))],
+                join=lambda rows: (jnp.stack([r[0] for r in rows]),
+                                   jnp.stack([r[1] for r in rows]),
+                                   [r[2] for r in rows]))
+        return self._nnp_dispatch(ds_ids, q_batch)
+
+    def _nnp_dispatch(self, ds_ids, q_batch: DatasetIndex):
+        """One batched NNP dispatch through
+        `core/point_search.nnp_pruned_core` (the Eq. 4 pair-grid prune)
+        on BOTH dispatchers; the surviving ``pair_live`` mask is surfaced
+        as per-query PointStats — the same counters the host `nnp_pruned`
+        reports — instead of being thrown away."""
         ds_ids = jnp.atleast_1d(jnp.asarray(ds_ids, jnp.int32))
         B = ds_ids.shape[0]
         bucket = self.bucket_for(B)

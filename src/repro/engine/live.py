@@ -1,0 +1,456 @@
+"""LiveRepository: online ingest / delete / replace under serving traffic.
+
+Every engine path so far serves a FROZEN :class:`Repository` built once at
+startup.  This module makes the repository a live catalog:
+
+  * ``ingest(points) -> ds_id`` — build the new dataset's bottom tree and
+    z-order signature ON DEVICE under the pinned cold-build geometry
+    (:mod:`repro.core.repo_mutate`), scatter it into a free slot, and
+    rebuild the tiny upper tree — one jitted executable reused for every
+    mutation, no full rebuild, no repository re-upload (only the new
+    dataset's padded points cross the host->device boundary);
+  * ``delete(ds_id)`` — zero the slot (bit-identical to a never-filled
+    slot) and return it to the free list; ``replace(ds_id, points)`` is
+    an in-place ingest into the same slot;
+  * slot capacity is TIERED like the engine's bucket ladder: when ingest
+    outruns the free list, the slot count doubles (zeros appended on
+    device, shard-aligned) and the dispatcher's layout epoch retires the
+    executables whose builds closed over the old slot count.
+
+Versioning is EPOCH-BASED, two levels:
+
+  * the engine's DATA epoch bumps on every published mutation and is part
+    of every dataset-op result-cache key, so a query cached at epoch N is
+    never served at epoch N+1 (the purged entries are booked in
+    ``stats.epoch_invalidations``, and the identical re-query books a
+    result-cache MISS — the hits+misses==dispatches invariant is
+    untouched);
+  * per-slot epochs version point-granularity results: a RangeP/NNP
+    entry keyed on dataset j survives mutations of every OTHER dataset;
+  * the dispatcher's LAYOUT epoch (executable-cache keys) bumps only on
+    tier growth — data mutations swap ``dispatcher.repo`` atomically and
+    keep every compiled executable (same shapes, same shardings).
+
+The correctness bar is BIT-IDENTITY: after any mutation sequence, the
+resident repository — and every op's results — must equal a cold engine
+built by :func:`repro.core.repo_mutate.build_frozen` from the current
+slot contents (``frozen_repository()``; asserted op-by-op in
+tests/test_live_repository.py and for random interleavings in
+tests/test_mutation_properties.py, on local, sharded, and replicated
+dispatchers).
+
+Mutations never tear in-flight queries: the slot update is a functional
+(non-donating) device computation, so a dispatch that already read the
+old repository keeps consistent old buffers, and the publish step is a
+single Python attribute swap.  Mutation calls themselves are serialized
+by a lock; queries never take it.
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import repo_mutate
+from repro.core.repo_index import Repository
+from repro.engine.engine import QueryEngine
+
+__all__ = ["LiveRepository"]
+
+
+class LiveRepository:
+    """A mutable, versioned repository serving through a QueryEngine.
+
+    ``mesh=None`` serves locally; a 1-D mesh selects sharded dispatch and
+    a (replica x data) mesh replica-parallel dispatch — mutation works
+    identically on all three (the slot updater's outputs are pinned to
+    the dispatcher's placement, so only TOUCHED state moves between
+    devices).
+
+    ``point_capacity`` reserves bottom-tree headroom for datasets larger
+    than any initial one (the bottom depth is pinned; an oversize ingest
+    raises).  ``slot_headroom`` pre-doubles slot capacity that many
+    times.  Remaining engine knobs (buckets, result_cache_size, ...) pass
+    through to :class:`~repro.engine.engine.QueryEngine`.
+    """
+
+    def __init__(
+        self,
+        datasets: Sequence[np.ndarray],
+        *,
+        mesh=None,
+        leaf_capacity: int = 16,
+        repo_leaf_capacity: int | None = None,
+        theta: int = 5,
+        remove_outliers: bool = True,
+        point_capacity: int | None = None,
+        slot_headroom: int = 0,
+        **engine_kwargs,
+    ):
+        repo, geom = repo_mutate.init_live(
+            datasets,
+            leaf_capacity=leaf_capacity,
+            repo_leaf_capacity=repo_leaf_capacity,
+            theta=theta,
+            remove_outliers=remove_outliers,
+            point_capacity=point_capacity,
+            slot_headroom=slot_headroom,
+        )
+        self.geometry = geom
+        self.engine = QueryEngine(repo, leaf_capacity=leaf_capacity,
+                                  mesh=mesh, **engine_kwargs)
+        B = len(datasets)
+        #: DATA epoch of the published repository (monotone, starts at 0)
+        self.epoch = 0
+        #: per-slot epoch: the data epoch at which the slot last changed
+        self.slot_epochs = np.zeros(geom.n_slots, np.int64)
+        #: host->device bytes moved by mutations (ingest/replace payloads
+        #: only — delete and tier growth upload NOTHING; the acceptance
+        #: check that single-dataset mutations never re-upload the
+        #: repository reads this)
+        self.bytes_uploaded = 0
+        self.mutations = 0
+        self._live: set = set(range(B))
+        self._free: list = list(range(B, geom.n_slots))
+        heapq.heapify(self._free)
+        # host copies of current slot contents — the ground truth the
+        # frozen oracle rebuilds from (and the source for `replace`-style
+        # serving tools); one small np array per live dataset
+        self._slot_data = {j: np.asarray(ds, np.float32)
+                           for j, ds in enumerate(datasets)}
+        self._lock = threading.Lock()
+        self._zero_row = repo_mutate.zero_slot_row(geom)
+        self._updater = self._make_updater()
+        self.engine.set_repo_epoch(0, self.slot_epochs)
+
+    # -- views -------------------------------------------------------------
+
+    @property
+    def repo(self) -> Repository:
+        """The currently published (placed) repository."""
+        return self.engine.dispatch.repo
+
+    @property
+    def stats(self):
+        return self.engine.stats
+
+    @property
+    def live_ids(self) -> set:
+        return set(self._live)
+
+    @property
+    def n_slots(self) -> int:
+        return self.geometry.n_slots
+
+    def search(self, queries):
+        """Serve a declarative batch against the current epoch (see
+        :meth:`QueryEngine.search`)."""
+        return self.engine.search(queries)
+
+    def slot_datasets(self) -> list:
+        """Current slot contents, ``None`` for holes — exactly the input
+        :func:`~repro.core.repo_mutate.build_frozen` expects."""
+        return [self._slot_data.get(j) for j in range(self.geometry.n_slots)]
+
+    def frozen_repository(self) -> Repository:
+        """The cold-built oracle equivalent to the current live state —
+        bit-identical to :attr:`repo` (modulo shard padding/placement) by
+        construction; tests assert it."""
+        return repo_mutate.build_frozen(self.slot_datasets(), self.geometry)
+
+    # -- mutations ---------------------------------------------------------
+
+    def ingest(self, points) -> int:
+        """Add a dataset; returns its slot id (stable until deleted).
+        Grows the slot tier first if the free list is empty."""
+        points = self._check_points(points)
+        with self._lock:
+            if not self._free:
+                self._grow()
+            slot = heapq.heappop(self._free)
+            # bookkeeping first: _publish derives the valid-dataset count
+            # (ExactHaus pruning stats) from the live set
+            self._live.add(slot)
+            self._slot_data[slot] = points
+            self._write(slot, points, valid=True)
+            return slot
+
+    def delete(self, ds_id: int) -> None:
+        """Remove a dataset: its slot is zeroed (bit-identical to a
+        never-filled slot) and returned to the free list."""
+        ds_id = int(ds_id)
+        with self._lock:
+            self._check_live(ds_id)
+            self._live.discard(ds_id)
+            del self._slot_data[ds_id]
+            self._write(ds_id, None, valid=False)
+            heapq.heappush(self._free, ds_id)
+
+    def replace(self, ds_id: int, points) -> None:
+        """Swap a live dataset's contents in place — a new VERSION under
+        the same id: the slot keeps its id, its per-slot epoch bumps, and
+        every cached result that touched it is retired."""
+        ds_id = int(ds_id)
+        points = self._check_points(points)
+        with self._lock:
+            self._check_live(ds_id)
+            self._write(ds_id, points, valid=True)
+            self._slot_data[ds_id] = points
+
+    # -- internals ---------------------------------------------------------
+
+    def _check_points(self, points) -> np.ndarray:
+        points = np.asarray(points, np.float32)
+        geom = self.geometry
+        if points.ndim != 2 or points.shape[1] != geom.dim:
+            raise ValueError(f"expected (n, {geom.dim}) points, got "
+                             f"{points.shape}")
+        if points.shape[0] == 0:
+            raise ValueError("cannot ingest an empty dataset")
+        if points.shape[0] > geom.point_capacity:
+            raise ValueError(
+                f"dataset with {points.shape[0]} points exceeds the pinned "
+                f"point capacity {geom.point_capacity}; rebuild the live "
+                f"repository with point_capacity >= {points.shape[0]}")
+        return points
+
+    def _check_live(self, ds_id: int) -> None:
+        if ds_id not in self._live:
+            raise KeyError(f"dataset id {ds_id} is not live")
+
+    def _rep_sharding(self):
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(self.engine.dispatch.mesh, PartitionSpec())
+
+    def _finish(self, repo, ds_index, ds_sigs, ds_valid, roots, geom):
+        """Second mutation stage, shared by every dispatcher: the upper
+        tree from single-device root summaries through the ONE cached
+        stage executable the frozen oracle also calls — bit-identity with
+        the cold build by construction (the same compiled program on
+        bitwise-equal inputs), where re-deriving the tree inside the
+        fused/shard_map stage can drift a node radius by one ulp at some
+        slot counts (reduction codegen is shape- and context-dependent).
+        Roots are O(n_slots) summaries — the hop to the default device
+        and the replicated placement of the finished tree move no slot
+        bodies."""
+        dev0 = jax.devices()[0]
+        tree = repo_mutate._stage_upper(geom.upper_depth)(
+            *(jax.device_put(r, dev0) for r in roots))
+        if getattr(self.engine.dispatch, "specs", None) is not None:
+            tree = jax.device_put(tree, self._rep_sharding())
+        return Repository(ds_index=ds_index, ds_sigs=ds_sigs,
+                          ds_valid=ds_valid, repo=tree,
+                          space_lo=repo.space_lo, space_hi=repo.space_hi)
+
+    def _make_updater(self):
+        """The slot-write executable for the CURRENT tier: dynamic slot +
+        validity operands, so ingest, delete, and replace on any slot all
+        reuse it.  Inputs are NOT donated (in-flight queries keep the old
+        buffers).  It returns the updated slot arrays plus the per-slot
+        ROOT summaries; `_finish` turns those into the upper tree.
+
+        Local dispatch is a plain jitted scatter.  On a mesh the scatter
+        runs inside an EXPLICIT shard_map — the owner shard writes the
+        (replicated) row into its local slice and the roots are
+        all-gathered (tiny: one summary row per slot, not the slot
+        bodies), so only the touched shard's slice changes and nothing
+        moves through the host.  shard_map rather than the SPMD
+        partitioner is load-bearing: jit-of-scatter on a (replica x data)
+        mesh lets the partitioner psum the replicated row operand over
+        the replica axis, silently DOUBLING every slot (the same hazard
+        `ShardedDispatcher._smap` documents for concat)."""
+        geom = self.geometry
+        disp = self.engine.dispatch
+        specs = getattr(disp, "specs", None)
+        B_pad = geom.n_slots
+
+        def roots_of(ds_index, ds_sigs, ds_valid):
+            return (ds_index.centers[:B_pad, 0, :],
+                    ds_index.radii[:B_pad, 0],
+                    ds_index.box_lo[:B_pad, 0, :],
+                    ds_index.box_hi[:B_pad, 0, :],
+                    ds_sigs[:B_pad], ds_valid[:B_pad])
+
+        if specs is None:
+            def scatter(repo, slot, row, sig, valid):
+                ds_index = jax.tree.map(lambda a, r: a.at[slot].set(r),
+                                        repo.ds_index, row)
+                ds_sigs = repo.ds_sigs.at[slot].set(sig)
+                ds_valid = repo.ds_valid.at[slot].set(valid)
+                return (ds_index, ds_sigs, ds_valid,
+                        roots_of(ds_index, ds_sigs, ds_valid))
+            stage = jax.jit(scatter)
+        else:
+            from jax.sharding import PartitionSpec as P
+            from repro.core.distributed import _shard_map
+            axis = disp.axis
+
+            def local(repo_s, slot, row, sig, valid):
+                shard = repo_s.ds_valid.shape[0]
+                me = jax.lax.axis_index(axis)
+                lid = slot - me * shard
+                owns = (lid >= 0) & (lid < shard)
+                lidc = jnp.clip(lid, 0, shard - 1)
+
+                def wr(a, r):
+                    return a.at[lidc].set(jnp.where(owns, r, a[lidc]))
+
+                ds_index = jax.tree.map(wr, repo_s.ds_index, row)
+                ds_sigs = wr(repo_s.ds_sigs, sig)
+                ds_valid = wr(repo_s.ds_valid, valid)
+
+                def gat(x):
+                    # physical slot order == shard-major order, so the
+                    # tiled gather reassembles global slot order; [:B_pad]
+                    # trims the shard-alignment padding
+                    return jax.lax.all_gather(x, axis, tiled=True)[:B_pad]
+
+                roots = (gat(ds_index.centers[:, 0, :]),
+                         gat(ds_index.radii[:, 0]),
+                         gat(ds_index.box_lo[:, 0, :]),
+                         gat(ds_index.box_hi[:, 0, :]),
+                         gat(ds_sigs), gat(ds_valid))
+                return ds_index, ds_sigs, ds_valid, roots
+
+            stage = jax.jit(_shard_map(
+                local, mesh=disp.mesh,
+                in_specs=(specs, P(), P(), P(), P()),
+                out_specs=(specs.ds_index, specs.ds_sigs, specs.ds_valid,
+                           (P(), P(), P(), P(), P(), P())),
+                check_vma=False))
+
+        def fn(repo, slot, row, sig, valid):
+            ds_index, ds_sigs, ds_valid, roots = stage(repo, slot, row,
+                                                       sig, valid)
+            return self._finish(repo, ds_index, ds_sigs, ds_valid, roots,
+                                geom)
+
+        return fn
+
+    def _write(self, slot: int, points, *, valid: bool) -> None:
+        if points is None:
+            row, sig = self._zero_row
+        else:
+            geom = self.geometry
+            # the ONLY host->device traffic a mutation pays: the padded
+            # points + validity of the one new dataset
+            self.bytes_uploaded += (
+                geom.point_capacity * (4 * geom.dim + 1))
+            # the canonical batch-of-1 row pipeline — the same shared
+            # executables the frozen oracle uses (bit-identity by
+            # construction, see core/repo_mutate)
+            rows, sigs = repo_mutate.build_row(points, geom)
+            row = jax.tree.map(lambda x: x[0], rows)
+            sig = sigs[0]
+        new_repo = self._updater(self.repo, jnp.asarray(slot, jnp.int32),
+                                 row, sig, jnp.asarray(valid, bool))
+        self.mutations += 1
+        self._publish(new_repo, touched=(slot,))
+
+    def _grow(self) -> None:
+        """Double the slot tier: zeros appended ON DEVICE (shard-aligned,
+        no host upload), dispatcher layout constants refreshed, layout
+        epoch bumped (executables closing over the old slot count are
+        retired), and the grown state published as its own data epoch —
+        dataset-op result rows change width with the slot axis, so they
+        must retire too (per-slot point-op entries survive: no slot's
+        contents changed)."""
+        old_n = self.geometry.n_slots
+        geom = self.geometry.grown()
+        disp = self.engine.dispatch
+        n_shards = int(getattr(disp, "n_shards", 1))
+        n_phys = -(-geom.n_slots // n_shards) * n_shards
+        if getattr(disp, "specs", None) is None:
+            ds_index, ds_sigs, ds_valid = jax.jit(
+                lambda repo: repo_mutate.pad_slots(repo, n_phys))(self.repo)
+            B_pad = geom.n_slots
+            roots = (ds_index.centers[:B_pad, 0, :],
+                     ds_index.radii[:B_pad, 0],
+                     ds_index.box_lo[:B_pad, 0, :],
+                     ds_index.box_hi[:B_pad, 0, :],
+                     ds_sigs[:B_pad], ds_valid[:B_pad])
+            grown = self._finish(self.repo, ds_index, ds_sigs, ds_valid,
+                                 roots, geom)
+        else:
+            grown = self._grow_sharded(geom, n_phys)
+        self.geometry = geom
+        self.slot_epochs = np.concatenate(
+            [self.slot_epochs, np.zeros(geom.n_slots - old_n, np.int64)])
+        for s in range(old_n, geom.n_slots):
+            heapq.heappush(self._free, s)
+        disp.n_slots = geom.n_slots
+        if hasattr(disp, "shard_slots"):
+            disp.n_slots_sharded = n_phys
+            disp.shard_slots = n_phys // n_shards
+        disp.repo_epoch = getattr(disp, "repo_epoch", 0) + 1
+        self._updater = self._make_updater()
+        self._publish(grown, touched=())
+
+    def _grow_sharded(self, geom, n_phys: int) -> Repository:
+        """Tier growth on a mesh, as an explicit shard_map (the
+        jit-of-concat partitioner path psum-doubles replicated state on a
+        (replica x data) mesh — see `_make_updater`).  Growth must keep
+        the GLOBAL slot order (logical slot j at physical row j), so
+        per-shard local zero-padding is wrong — each shard all-gathers
+        the old slot arrays, appends the zero tier, and slices out its
+        own re-balanced chunk.  Device-to-device only; nothing crosses
+        the host boundary."""
+        disp = self.engine.dispatch
+        specs = disp.specs
+        axis = disp.axis
+        shard_new = n_phys // int(disp.n_shards)
+        B_pad = geom.n_slots
+
+        from jax.sharding import PartitionSpec as P
+        from repro.core.distributed import _shard_map
+
+        def local(repo_s):
+            me = jax.lax.axis_index(axis)
+
+            def full(x):
+                f = jax.lax.all_gather(x, axis, tiled=True)
+                z = jnp.zeros((n_phys - f.shape[0],) + f.shape[1:], f.dtype)
+                return jnp.concatenate([f, z], axis=0)
+
+            def loc(x):
+                return jax.lax.dynamic_slice_in_dim(
+                    x, me * shard_new, shard_new, 0)
+
+            fi = jax.tree.map(full, repo_s.ds_index)
+            fs = full(repo_s.ds_sigs)
+            fv = full(repo_s.ds_valid)
+            roots = (fi.centers[:B_pad, 0, :], fi.radii[:B_pad, 0],
+                     fi.box_lo[:B_pad, 0, :], fi.box_hi[:B_pad, 0, :],
+                     fs[:B_pad], fv[:B_pad])
+            return jax.tree.map(loc, fi), loc(fs), loc(fv), roots
+
+        sm = jax.jit(_shard_map(
+            local, mesh=disp.mesh, in_specs=(specs,),
+            out_specs=(specs.ds_index, specs.ds_sigs, specs.ds_valid,
+                       (P(), P(), P(), P(), P(), P())),
+            check_vma=False))
+
+        ds_index, ds_sigs, ds_valid, roots = sm(self.repo)
+        return self._finish(self.repo, ds_index, ds_sigs, ds_valid, roots,
+                            geom)
+
+    def _publish(self, new_repo: Repository, touched) -> None:
+        """Atomically install the successor repository and its epoch.
+
+        The dispatcher attribute swap is the linearization point: every
+        later dispatch reads the new repository (late-bound executables),
+        every in-flight one keeps the old buffers.  Then the engine's
+        epoch install purges retired result rows (booked as
+        ``epoch_invalidations``) so no future lookup can hit them."""
+        disp = self.engine.dispatch
+        disp.repo = new_repo
+        self.engine.repo = new_repo
+        self.engine._n_valid = len(self._live)
+        self.epoch += 1
+        for s in touched:
+            self.slot_epochs[s] = self.epoch
+        self.engine.set_repo_epoch(self.epoch, self.slot_epochs)

@@ -76,8 +76,6 @@ bit-identical to `topk_hausdorff_host`.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -207,6 +205,11 @@ class ShardedDispatcher:
     #: mesh axis the query-row (leading batch) axis is partitioned over in
     #: every spec; None keeps rows replicated (the base 1-D behavior)
     row_axis: str | None = None
+    #: layout epoch — bumped by a live repository when the slot-array
+    #: shapes change (tier growth); part of every executable-cache key.
+    #: The sharded builds additionally close over `n_slots`/`shard_slots`
+    #: constants, so retiring them on growth is REQUIRED, not just tidy.
+    repo_epoch = 0
 
     def __init__(self, repo: Repository, mesh: Mesh, axis: str = "data"):
         if not isinstance(axis, str):      # accept a PartitionSpec-ish spec
@@ -279,9 +282,18 @@ class ShardedDispatcher:
         return wrapped
 
     def _bind(self, impl):
-        """jit with the sharded repository as the bound leading operand (an
-        operand, not a closed-over constant, so XLA never inlines it)."""
-        return partial(jax.jit(impl), self.repo)
+        """jit with the sharded repository as the LATE-BOUND leading
+        operand (an operand, not a closed-over constant, so XLA never
+        inlines it; read from ``self.repo`` at call time, so a live
+        mutation's atomic placed-repository swap takes effect on the next
+        dispatch without recompiling — same shapes + same shardings hit
+        the same executable)."""
+        jitted = jax.jit(impl)
+
+        def call(*args, **kw):
+            return jitted(self.repo, *args, **kw)
+
+        return call
 
     def _owner_select(self, repo_loc, ds_ids):
         """Per-request (owner mask, local gather of the requested dataset

@@ -24,6 +24,22 @@ amortized across the bucket ladder.
 :class:`~repro.engine.query.Query` / :class:`~repro.engine.query.Pipeline`
 at submission time; clients holding ready-made spec objects can enqueue
 them directly with ``submit_query``.
+
+LIVE serving (``--live`` / ``SearchServer(live=...)``): the server fronts
+a :class:`~repro.engine.live.LiveRepository` and accepts a MUTATION lane
+on the same queue — ``submit_mutation("ingest"|"delete"|"replace", ...)``
+enqueues next to queries, so mutations take effect exactly at their
+submission point in the stream: the dispatcher splits each drain into
+query segments at mutation boundaries, serves each segment as one
+declarative batch, and applies the mutations in order between segments.
+Every query answered after a mutation sees the post-mutation epoch
+(bit-identical to a cold engine over the frozen equivalent — asserted in
+tests/test_serve_search.py); in-flight segments keep the consistent
+pre-mutation snapshot.
+
+The dispatcher's notion of time is injectable (``clock=``): latency
+accounting and the static drain deadline read ``self.clock()``, so tests
+drive deterministic virtual time instead of sleeping.
 """
 from __future__ import annotations
 
@@ -107,10 +123,26 @@ def _legacy_result(res: SearchResult):
     return res                              # pipeline: the full result
 
 
+#: mutation kinds the live lane accepts (LiveRepository methods)
+MUTATION_OPS = ("ingest", "delete", "replace")
+
+
 @dataclass
 class Request:
     op: str
     query: Any                              # Query | Pipeline
+    future: Future = field(default_factory=Future)
+    t_submit: float = field(default_factory=time.perf_counter)
+
+
+@dataclass
+class Mutation:
+    """One mutation riding the request queue: applied IN ORDER at its
+    position in the stream (queries drained before it see the old epoch,
+    queries after it the new one)."""
+    op: str                                 # ingest | delete | replace
+    ds_id: int | None = None
+    points: Any = None
     future: Future = field(default_factory=Future)
     t_submit: float = field(default_factory=time.perf_counter)
 
@@ -123,6 +155,9 @@ class ServerStats:
     latency_sum: float = 0.0
     latencies: list = field(default_factory=list)   # per-request seconds
     op_ewma: dict = field(default_factory=dict)     # op -> EWMA latency s
+    mutations: int = 0                      # mutation-lane ops applied
+    mutation_latency_sum: float = 0.0
+    mutation_latencies: list = field(default_factory=list)
 
     #: same smoothing as EngineStats.EWMA_ALPHA — both feeds estimate
     #: "how long does one more batch of this op take" for the adaptive
@@ -145,6 +180,18 @@ class ServerStats:
         prev = self.op_ewma.get(op)
         self.op_ewma[op] = (seconds if prev is None
                             else prev + self.EWMA_ALPHA * (seconds - prev))
+
+    def record_mutation(self, seconds: float) -> None:
+        """Book one applied mutation's submit->publish latency (kept out
+        of the QUERY latency distribution: mutations are a different
+        SLO)."""
+        self.mutations += 1
+        self.mutation_latency_sum += seconds
+        self.mutation_latencies.append(seconds)
+
+    @property
+    def mean_mutation_ms(self) -> float:
+        return 1e3 * self.mutation_latency_sum / max(self.mutations, 1)
 
     def percentile_ms(self, p: float) -> float:
         """p-th percentile of per-request latency, in ms (0 if empty)."""
@@ -197,18 +244,29 @@ class SearchServer:
 
     def __init__(
         self,
-        engine: QueryEngine,
+        engine: QueryEngine | None = None,
         *,
+        live=None,
         max_batch: int = 64,
         max_wait_ms: float = 2.0,
         adaptive: bool = True,
+        clock=time.perf_counter,
     ):
+        if engine is None:
+            if live is None:
+                raise ValueError("SearchServer needs an engine or a live "
+                                 "repository")
+            engine = live.engine
+        elif live is not None and live.engine is not engine:
+            raise ValueError("live.engine and engine disagree — pass one")
         self.engine = engine
+        self.live = live
         self.max_batch = max_batch
         self.max_wait = max_wait_ms / 1e3
         self.adaptive = adaptive
+        self.clock = clock
         self.stats = ServerStats()
-        self._queue: "queue.Queue[Request | None]" = queue.Queue()
+        self._queue: "queue.Queue[Request | Mutation | None]" = queue.Queue()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._running = False
 
@@ -235,7 +293,7 @@ class SearchServer:
             raise RuntimeError("server is not running (start() it first)")
         if op is None:
             op = "pipeline" if isinstance(query, Pipeline) else query.op
-        req = Request(op, query)
+        req = Request(op, query, t_submit=self.clock())
         self._queue.put(req)
         if not self._running and not req.future.done():
             # lost the race with a concurrent stop(): its drain may have
@@ -246,6 +304,27 @@ class SearchServer:
             except Exception:           # drain got there first
                 pass
         return req.future
+
+    def submit_mutation(self, op: str, *, ds_id: int | None = None,
+                        points=None) -> Future:
+        """Enqueue one live-repository mutation on the request queue.
+
+        Returns a Future resolving to the slot id (ingest/replace) or
+        None (delete) once the mutation is PUBLISHED — every query
+        submitted after this call that drains behind it is answered at
+        the post-mutation epoch."""
+        if self.live is None:
+            raise RuntimeError("mutation lane needs a live repository "
+                               "(SearchServer(live=...))")
+        if op not in MUTATION_OPS:
+            raise ValueError(f"unknown mutation {op!r}; mutation ops: "
+                             f"{MUTATION_OPS}")
+        if not self._running:
+            raise RuntimeError("server is not running (start() it first)")
+        mut = Mutation(op, ds_id=ds_id, points=points,
+                       t_submit=self.clock())
+        self._queue.put(mut)
+        return mut.future
 
     def start(self) -> "SearchServer":
         self._running = True
@@ -330,9 +409,9 @@ class SearchServer:
                 # bounded by max_batch renewals of <= max_wait each)
                 waited = False
             return batch
-        deadline = time.perf_counter() + self.max_wait
+        deadline = self.clock() + self.max_wait
         while len(batch) < self.max_batch:
-            timeout = deadline - time.perf_counter()
+            timeout = deadline - self.clock()
             try:
                 req = self._queue.get(timeout=max(timeout, 0.0))
             except queue.Empty:
@@ -342,48 +421,81 @@ class SearchServer:
             batch.append(req)
         return batch
 
-    def _loop(self) -> None:
+    def _apply_mutation(self, mut: Mutation):
+        if mut.op == "ingest":
+            return self.live.ingest(mut.points)
+        if mut.op == "delete":
+            self.live.delete(mut.ds_id)
+            return None
+        self.live.replace(mut.ds_id, mut.points)
+        return mut.ds_id
+
+    def _serve_segment(self, segment: list[Request]) -> None:
+        """One declarative engine call for a (sub-)drain of queries: the
+        planner groups compatible rows into shared dispatches and
+        returns per-request results in input order."""
         from repro.engine import plan as plan_lib
 
+        try:
+            results = self.engine.search([r.query for r in segment])
+        except Exception:
+            # a poisoned row fails the whole mixed call; isolate by
+            # re-running per request so every healthy future still
+            # resolves and only the bad rows carry the exception
+            # (the executable cache makes the re-runs cheap)
+            results = []
+            for r in segment:
+                try:
+                    results.append(self.engine.search([r.query])[0])
+                except Exception as e:
+                    results.append(e)
+        now = self.clock()
+        # dispatch-group count (stage-1 op groups + pipeline stage-2
+        # groups), planned locally (host-only grouping) so a client
+        # sharing the engine from another thread can't skew the
+        # server's own metric; guarded — the accounting must never be
+        # able to kill the dispatcher after results exist
+        try:
+            self.stats.batches += plan_lib.count_groups(
+                [r.query for r in segment], self.engine.leaf_capacity)
+        except Exception:
+            self.stats.batches += 1
+        self.stats.batch_size_sum += len(segment)
+        for req, res in zip(segment, results):
+            self.stats.record(req.op, now - req.t_submit)
+            if isinstance(res, Exception):
+                if not req.future.done():
+                    req.future.set_exception(res)
+            else:
+                req.future.set_result(_legacy_result(res))
+
+    def _loop(self) -> None:
         while self._running:
             batch = self._drain()
             if not batch:
                 continue
-            # ONE declarative engine call for the whole mixed drain: the
-            # planner groups compatible rows into shared dispatches and
-            # returns per-request results in input order
-            try:
-                results = self.engine.search([r.query for r in batch])
-            except Exception:
-                # a poisoned row fails the whole mixed call; isolate by
-                # re-running per request so every healthy future still
-                # resolves and only the bad rows carry the exception
-                # (the executable cache makes the re-runs cheap)
-                results = []
-                for r in batch:
-                    try:
-                        results.append(self.engine.search([r.query])[0])
-                    except Exception as e:
-                        results.append(e)
-            now = time.perf_counter()
-            # dispatch-group count (stage-1 op groups + pipeline stage-2
-            # groups), planned locally (host-only grouping) so a client
-            # sharing the engine from another thread can't skew the
-            # server's own metric; guarded — the accounting must never be
-            # able to kill the dispatcher after results exist
-            try:
-                self.stats.batches += plan_lib.count_groups(
-                    [r.query for r in batch], self.engine.leaf_capacity)
-            except Exception:
-                self.stats.batches += 1
-            self.stats.batch_size_sum += len(batch)
-            for req, res in zip(batch, results):
-                self.stats.record(req.op, now - req.t_submit)
-                if isinstance(res, Exception):
-                    if not req.future.done():
-                        req.future.set_exception(res)
+            # split the drain into query segments at mutation boundaries:
+            # each segment is one declarative engine call against the
+            # epoch current at ITS point in the stream, and mutations
+            # publish in submission order between segments
+            segment: list[Request] = []
+            for item in batch:
+                if not isinstance(item, Mutation):
+                    segment.append(item)
+                    continue
+                if segment:
+                    self._serve_segment(segment)
+                    segment = []
+                try:
+                    out = self._apply_mutation(item)
+                except Exception as e:
+                    if not item.future.done():
+                        item.future.set_exception(e)
                 else:
-                    req.future.set_result(_legacy_result(res))
+                    self.stats.record_mutation(self.clock() - item.t_submit)
+                    item.future.set_result(out)
+            if segment:
+                self._serve_segment(segment)
 
 
 # ---------------------------------------------------------------------------
@@ -391,21 +503,56 @@ class SearchServer:
 # ---------------------------------------------------------------------------
 
 
-def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0):
+def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0,
+                 mutate_every: int = 0):
     """Pre-build a mixed stream of (op, payload) requests covering all
     seven serving ops PLUS two pipeline kinds (top-k IA -> RangeP inside
     the winners, and ApproHaus -> NNP inside the winners — the paper's
     dataset->point workflow), so a drain exercises genuinely
     heterogeneous declarative batches.  Payload construction (signatures
     etc.) happens here, off the submission path, like a real client would
-    send ready-made queries."""
+    send ready-made queries.
+
+    ``mutate_every > 0`` adds a MUTATION LANE for live serving: every
+    mutate_every-th stream position becomes an ingest / delete / replace
+    (round-robin) with a SAFE id discipline — deletes only ever target
+    the reserved ids [0, n_ds//4), each at most once; replaces rotate
+    over [n_ds//4, n_ds//2) (always live); ingests are fresh jittered
+    copies, so they only ever land in freed or new slots.  Point-query
+    ds_ids then avoid the delete-reserved range, so every query in the
+    stream is valid whenever it drains relative to the mutations."""
     from repro.core import zorder
 
     rng = np.random.default_rng(seed)
     n_ds = len(datasets)
     eps = float(zorder.default_epsilon(repo.space_lo, repo.space_hi, 5))
+    del_pool = list(range(n_ds // 4)) if mutate_every else []
+    rep_pool = list(range(n_ds // 4, n_ds // 2)) if mutate_every else []
+
+    def q_id():
+        # with a mutation lane, never reference a deletable id
+        if mutate_every and n_ds // 4 < n_ds:
+            return int(rng.integers(n_ds // 4, n_ds))
+        return int(rng.integers(n_ds))
+
+    def jittered():
+        base = datasets[int(rng.integers(n_ds))]
+        return (base + rng.normal(0, 0.5, base.shape)).astype(np.float32)
+
     out = []
+    n_mut = 0
     for i in range(n_requests):
+        if mutate_every and i and i % mutate_every == 0:
+            kind = n_mut % 3
+            n_mut += 1
+            if kind == 1 and del_pool:
+                out.append(("delete", dict(ds_id=del_pool.pop(0))))
+            elif kind == 2 and rep_pool:
+                sid = rep_pool[n_mut % len(rep_pool)]
+                out.append(("replace", dict(ds_id=sid, points=jittered())))
+            else:
+                out.append(("ingest", dict(points=jittered())))
+            continue
         c = rng.uniform(20, 80, 2).astype(np.float32)
         lo, hi = c - 2.0, c + 2.0
         kind = i % 9
@@ -427,10 +574,10 @@ def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0):
             out.append(("topk_hausdorff", dict(q=q, k=5)))
         elif kind == 5:
             out.append(("range_points", dict(
-                ds_id=int(rng.integers(n_ds)), r_lo=lo, r_hi=hi)))
+                ds_id=q_id(), r_lo=lo, r_hi=hi)))
         elif kind == 6:
             q = datasets[int(rng.integers(n_ds))][:64]
-            out.append(("nnp", dict(ds_id=int(rng.integers(n_ds)), q=q)))
+            out.append(("nnp", dict(ds_id=q_id(), q=q)))
         elif kind == 7:
             # dataset->point pipeline: top-3 IA datasets, then RangeP
             # inside each winner (ids never leave the device)
@@ -470,11 +617,39 @@ def main(argv=None):
     ap.add_argument("--data-shards", type=int, default=None, metavar="D",
                     help="data-axis extent per replica group (default: all "
                          "remaining local devices / R)")
+    ap.add_argument("--live", action="store_true",
+                    help="serve from a mutable LiveRepository (composes "
+                         "with --sharded/--replicas) and open the "
+                         "mutation lane")
+    ap.add_argument("--mutate-every", type=int, default=0, metavar="N",
+                    help="with --live: make every N-th request of the "
+                         "measured stream an ingest/delete/replace "
+                         "mutation (0 = queries only)")
     args = ap.parse_args(argv)
+    if args.mutate_every and not args.live:
+        ap.error("--mutate-every requires --live")
 
     lake = synthetic.trajectory_repository(args.datasets, seed=0)
-    repo, _ = build_repository(lake, leaf_capacity=16, theta=5)
-    if args.replicas:
+    live = None
+    if args.live:
+        from repro.engine import LiveRepository, data_mesh, replica_mesh
+        mesh = None
+        if args.replicas:
+            mesh = replica_mesh(args.replicas, args.data_shards)
+        elif args.sharded:
+            mesh = data_mesh()
+        live = LiveRepository(lake, leaf_capacity=16, theta=5, mesh=mesh)
+        engine = live.engine
+        repo = live.repo
+        print(f"[serve_search] live repository: {live.n_slots} slots "
+              f"({len(live.live_ids)} live), "
+              f"{'mesh ' + str(tuple(mesh.shape.values())) if mesh else 'local'}"
+              f" dispatch, mutation lane open")
+    else:
+        repo, _ = build_repository(lake, leaf_capacity=16, theta=5)
+    if args.live:
+        pass
+    elif args.replicas:
         from repro.engine.replicated import ReplicatedQueryEngine
         engine = ReplicatedQueryEngine(repo, n_replicas=args.replicas,
                                        n_data=args.data_shards)
@@ -493,30 +668,51 @@ def main(argv=None):
               f"'{engine.dispatch.axis}' axis")
     else:
         engine = QueryEngine(repo)
-    server = SearchServer(engine, max_batch=args.max_batch,
+    server = SearchServer(engine, live=live, max_batch=args.max_batch,
                           max_wait_ms=args.max_wait_ms,
                           adaptive=not args.static_window)
 
-    # warmup: run the measured traffic once, pre-filled BEFORE the
+    # warmup: run the QUERY traffic once, pre-filled BEFORE the
     # dispatcher starts so the warm drains are full-depth and aligned
     # with the measured burst — compiling exactly the bucket shapes AND
     # payload shapes (pipeline queries embed variable-length datasets,
-    # which trace per length) the measurement will hit.  The result
-    # cache is dropped afterwards so measured dispatches re-execute;
-    # only the compiled executables carry over.
-    traffic = make_traffic(repo, lake, args.requests)
-    warm_reqs = [Request(op, _to_query(op, p)) for op, p in traffic]
+    # which trace per length) the measurement will hit.  Query-only even
+    # under --mutate-every: warmup must not consume the one-shot delete
+    # budget or move the epoch before measurement.  The result cache is
+    # dropped afterwards so measured dispatches re-execute; only the
+    # compiled executables carry over.
+    warm_traffic = make_traffic(repo, lake, args.requests)
+    warm_reqs = [Request(op, _to_query(op, p)) for op, p in warm_traffic]
     for req in warm_reqs:
         server._queue.put(req)
     server.start()
     for req in warm_reqs:
         req.future.result(timeout=600)
+    if live is not None and args.mutate_every:
+        # warm the MUTATION path too: an ingest (which may trigger a
+        # tier growth — compiling the growth executables here, outside
+        # the measured window), a replace and a delete compile the
+        # row-build stages and both updater variants; the probe slot is
+        # deleted again so the measured stream starts from the live set
+        # its id discipline expects
+        probe = (lake[0] + np.float32(0.25)).astype(np.float32)
+        wid = live.ingest(probe)
+        live.replace(wid, probe)
+        live.delete(wid)
+        live.bytes_uploaded = 0        # report the measured window only
     engine._result_cache.clear()
     server.stats = ServerStats()       # report the measured window only
 
+    traffic = make_traffic(repo, lake, args.requests,
+                           mutate_every=args.mutate_every)
+    i0 = engine.stats.epoch_invalidations
     h0, m0 = engine.stats.cache_hits, engine.stats.cache_misses
     t0 = time.perf_counter()
-    futures = [server.submit(op, **payload) for op, payload in traffic]
+    futures = [
+        (server.submit_mutation(op, **payload) if op in MUTATION_OPS
+         else server.submit(op, **payload))
+        for op, payload in traffic
+    ]
     for f in futures:
         f.result(timeout=600)
     dt = time.perf_counter() - t0
@@ -535,6 +731,14 @@ def main(argv=None):
           f"(measured window: {engine.stats.cache_hits - h0}/"
           f"{engine.stats.cache_misses - m0}), pipelines: "
           f"{engine.stats.pipeline_stage1}")
+    if live is not None:
+        print(f"[serve_search] mutation lane: {server.stats.mutations} "
+              f"applied, mean {server.stats.mean_mutation_ms:.1f} ms; "
+              f"epoch {live.epoch} "
+              f"(layout {getattr(live.engine.dispatch, 'repo_epoch', 0)}), "
+              f"{engine.stats.epoch_invalidations - i0} cached rows retired, "
+              f"{live.bytes_uploaded} bytes uploaded, "
+              f"{live.n_slots} slots ({len(live.live_ids)} live)")
     return server.stats
 
 

@@ -1,0 +1,389 @@
+"""LiveRepository: online mutations under the bit-identity contract.
+
+The correctness bar (tentpole): after ANY mutation sequence, the resident
+repository — and every op's results — must be bit-identical to a COLD
+engine built by `repo_mutate.build_frozen` from the equivalent frozen slot
+contents.  These tests drive targeted mutation sequences (the random
+interleavings live in tests/test_mutation_properties.py) and additionally
+pin down:
+
+  * epoch semantics: the data epoch is monotone, bumps exactly once per
+    published mutation, and per-slot epochs move only for touched slots;
+  * result-cache versioning: a query cached at epoch N is NEVER served
+    after a `replace()` of a dataset it touched (booked as a result-cache
+    MISS + `epoch_invalidations`, not a silent eviction), while per-slot
+    point-op entries SURVIVE mutations of other datasets;
+  * the `cache_hits + cache_misses == dispatches` invariant across
+    mutation-heavy sequences;
+  * placement accounting: single-dataset mutations upload only that
+    dataset's padded payload (never the repository), deletes and tier
+    growth upload NOTHING;
+  * the bucket-ladder slot tier: growth doubles capacity, bumps the
+    dispatcher LAYOUT epoch (executable retirement), and preserves
+    bit-identity; capacity/validation errors raise before any state
+    changes;
+  * per-device residency bounds on the 3-shard and 2x4 replica meshes
+    (`check_live_*` bodies run via `dispatch_device_check`, so the
+    single-device tier-1 session still exercises them in subprocesses).
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import dispatch_device_check
+from repro.core import repo_mutate
+from repro.engine import LiveRepository, Query, QueryEngine
+
+# -- helpers ----------------------------------------------------------------
+
+
+def make_datasets(n, seed=0, n_points=30, d=2, spread=3.0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        c = rng.uniform(-40, 40, size=d)
+        out.append((c + rng.normal(0, spread, size=(n_points, d)))
+                   .astype(np.float32))
+    return out
+
+
+WHOLE_LO = np.float32([-60, -60])
+WHOLE_HI = np.float32([60, 60])
+
+
+def mixed_queries(live_ids, qpts):
+    """One query per op family — a mixed batch touching dataset- and
+    point-granularity paths in a single search() call."""
+    ids = sorted(live_ids)
+    return [
+        Query(op="range_search", r_lo=WHOLE_LO, r_hi=WHOLE_HI),
+        Query(op="topk_ia", r_lo=np.float32([-20, -20]),
+              r_hi=np.float32([30, 30]), k=4),
+        Query(op="topk_hausdorff_approx", q=qpts, k=3, eps=0.05),
+        Query(op="topk_hausdorff", q=qpts, k=3),
+        Query(op="range_points", ds_id=ids[0], r_lo=WHOLE_LO, r_hi=WHOLE_HI),
+        Query(op="nnp", ds_id=ids[-1], q=qpts),
+    ]
+
+
+def assert_results_equal(got, want):
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        assert a.op == b.op
+        for name in ("vals", "ids", "mask"):
+            x, y = getattr(a, name), getattr(b, name)
+            assert (x is None) == (y is None), (a.op, name)
+            if x is None:
+                continue
+            x, y = np.asarray(x), np.asarray(y)
+            en = bool(np.issubdtype(x.dtype, np.floating))
+            assert np.array_equal(x, y, equal_nan=en), (a.op, name)
+
+
+def assert_repo_equal(live_repo, frozen, *, n_slots):
+    """Bitwise pytree equality over the logical slot region + the full
+    upper tree (live slot arrays may carry extra shard-alignment padding
+    rows; they are zero and outside the logical region)."""
+    la, lb = jax.tree.leaves(live_repo), jax.tree.leaves(frozen)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        if x.shape != y.shape:
+            assert x.shape[1:] == y.shape[1:]
+            m = min(x.shape[0], y.shape[0])
+            assert m >= n_slots
+            x, y = x[:m], y[:m]
+        en = bool(np.issubdtype(x.dtype, np.floating))
+        assert np.array_equal(x, y, equal_nan=en)
+
+
+def check_bit_identity(live, *, mesh=None, leaf_capacity=8):
+    """The tentpole assertion: resident pytree == frozen oracle AND a
+    mixed op batch == the same batch on a cold engine over the oracle."""
+    frozen = live.frozen_repository()
+    assert_repo_equal(live.repo, frozen, n_slots=live.n_slots)
+    cold = QueryEngine(frozen, leaf_capacity=leaf_capacity, mesh=mesh)
+    qpts = make_datasets(1, seed=99, n_points=12)[0]
+    qs = mixed_queries(live.live_ids, qpts)
+    assert_results_equal(live.search(qs), cold.search(qs))
+
+
+# -- bit-identity under targeted sequences (local dispatch) -----------------
+
+
+def test_init_matches_frozen_oracle():
+    ds = make_datasets(6, seed=3)
+    live = LiveRepository(ds, leaf_capacity=8)
+    frozen = repo_mutate.build_frozen(
+        list(ds) + [None] * (live.n_slots - len(ds)), live.geometry)
+    assert_repo_equal(live.repo, frozen, n_slots=live.n_slots)
+
+
+def test_mutation_sequence_bit_identical():
+    ds = make_datasets(7, seed=1)
+    live = LiveRepository(ds, leaf_capacity=8, result_cache_size=32)
+    extra = make_datasets(4, seed=7)
+
+    sid = live.ingest(extra[0])
+    assert sid == 7
+    check_bit_identity(live)
+
+    live.delete(2)
+    check_bit_identity(live)
+
+    live.replace(4, extra[1])
+    check_bit_identity(live)
+
+    # re-ingest lands in the freed slot (smallest-slot free list)
+    assert live.ingest(extra[2]) == 2
+    check_bit_identity(live)
+
+    # growth-triggering ingest: free list empty at 8 slots
+    assert live.n_slots == 8
+    live.ingest(extra[3])
+    assert live.n_slots == 16
+    check_bit_identity(live)
+
+
+def test_epoch_monotone_and_per_slot():
+    ds = make_datasets(5, seed=2)
+    live = LiveRepository(ds, leaf_capacity=8)
+    assert live.epoch == 0 and live.engine.repo_epoch == 0
+
+    seen = [live.epoch]
+    sid = live.ingest(make_datasets(1, seed=11)[0])
+    seen.append(live.epoch)
+    live.replace(sid, make_datasets(1, seed=12)[0])
+    seen.append(live.epoch)
+    live.delete(sid)
+    seen.append(live.epoch)
+    assert seen == [0, 1, 2, 3]          # exactly one bump per mutation
+    assert live.engine.repo_epoch == 3
+
+    # only the touched slot's epoch moved
+    assert live.slot_epochs[sid] == 3
+    assert all(live.slot_epochs[j] == 0 for j in range(live.n_slots)
+               if j != sid)
+
+    # installing an older epoch is refused
+    with pytest.raises(ValueError):
+        live.engine.set_repo_epoch(1)
+
+
+# -- result-cache versioning (satellite: cache epochs) ----------------------
+
+
+def test_replace_invalidates_cached_dataset_result():
+    ds = make_datasets(6, seed=5, spread=1.0)
+    live = LiveRepository(ds, leaf_capacity=8, result_cache_size=16)
+    q = [Query(op="range_search", r_lo=WHOLE_LO, r_hi=WHOLE_HI)]
+
+    first = live.search(q)
+    assert live.stats.result_cache_misses == 1
+    again = live.search(q)
+    assert live.stats.result_cache_hits == 1          # served from cache
+    assert_results_equal(first, again)
+
+    # move dataset 3 far outside the old box: the cached row MUST retire
+    far = (make_datasets(1, seed=21)[0] + np.float32([500, 500]))
+    live.replace(3, far)
+    assert live.stats.epoch_invalidations >= 1
+    after = live.search(q)
+    assert live.stats.result_cache_misses == 2        # booked as a MISS
+    assert live.stats.result_cache_hits == 1          # NOT served stale
+    mask_before = np.asarray(first[0].mask)
+    mask_after = np.asarray(after[0].mask)
+    assert mask_before[3] and not mask_after[3]       # value really moved
+
+    # and the fresh result is the frozen oracle's
+    cold = QueryEngine(live.frozen_repository(), leaf_capacity=8)
+    assert_results_equal(after, cold.search(q))
+
+
+def test_point_op_cache_survives_unrelated_mutations():
+    ds = make_datasets(6, seed=6)
+    live = LiveRepository(ds, leaf_capacity=8, result_cache_size=16)
+    qpts = make_datasets(1, seed=33, n_points=10)[0]
+    q = [Query(op="nnp", ds_id=2, q=qpts),
+         Query(op="range_points", ds_id=2, r_lo=WHOLE_LO, r_hi=WHOLE_HI)]
+
+    live.search(q)
+    base_misses = live.stats.result_cache_misses
+    live.search(q)
+    assert live.stats.result_cache_hits == 2
+
+    # mutate OTHER datasets: per-slot entries for ds 2 must survive
+    live.replace(4, make_datasets(1, seed=34)[0])
+    live.delete(0)
+    live.search(q)
+    assert live.stats.result_cache_hits == 4
+    assert live.stats.result_cache_misses == base_misses
+
+    # mutate ds 2 itself: both entries retire, refreshed results match
+    # the oracle
+    live.replace(2, make_datasets(1, seed=35)[0])
+    fresh = live.search(q)
+    assert live.stats.result_cache_misses == base_misses + 2
+    cold = QueryEngine(live.frozen_repository(), leaf_capacity=8,
+                       result_cache_size=16)
+    assert_results_equal(fresh, cold.search(q))
+
+
+def test_cache_counter_invariant_across_mutations():
+    ds = make_datasets(6, seed=8)
+    live = LiveRepository(ds, leaf_capacity=8, result_cache_size=16)
+    qpts = make_datasets(1, seed=44, n_points=10)[0]
+    rng = np.random.default_rng(9)
+    for step in range(6):
+        live.search(mixed_queries(live.live_ids, qpts))
+        kind = step % 3
+        if kind == 0:
+            live.ingest(make_datasets(1, seed=100 + step)[0])
+        elif kind == 1:
+            live.replace(int(rng.choice(sorted(live.live_ids))),
+                         make_datasets(1, seed=200 + step)[0])
+        else:
+            live.delete(int(rng.choice(sorted(live.live_ids))))
+        s = live.stats
+        assert s.cache_hits + s.cache_misses == s.dispatches
+    assert live.stats.epoch_invalidations > 0
+
+
+# -- placement accounting (no full re-upload) -------------------------------
+
+
+def test_mutations_upload_only_the_touched_payload():
+    ds = make_datasets(6, seed=4)
+    live = LiveRepository(ds, leaf_capacity=8)
+    geom = live.geometry
+    per_payload = geom.point_capacity * (4 * geom.dim + 1)
+    # repository slot bodies dwarf one payload: re-uploading would show
+    repo_bytes = sum(np.asarray(x).nbytes
+                     for x in jax.tree.leaves(live.repo.ds_index))
+    assert repo_bytes > 4 * per_payload
+
+    assert live.bytes_uploaded == 0
+    live.ingest(make_datasets(1, seed=50)[0])
+    assert live.bytes_uploaded == per_payload
+    live.replace(1, make_datasets(1, seed=51)[0])
+    assert live.bytes_uploaded == 2 * per_payload
+    live.delete(3)                       # uploads nothing
+    assert live.bytes_uploaded == 2 * per_payload
+
+    # fill to force growth: the growth itself uploads nothing beyond the
+    # triggering ingest's payload
+    n_ingests = 2
+    while live.n_slots == 8:
+        live.ingest(make_datasets(1, seed=60 + n_ingests)[0])
+        n_ingests += 1
+    assert live.bytes_uploaded == n_ingests * per_payload
+
+
+# -- the slot tier (bucket ladder) ------------------------------------------
+
+
+def test_tier_growth_doubles_and_bumps_layout_epoch():
+    ds = make_datasets(4, seed=10)
+    live = LiveRepository(ds, leaf_capacity=8)
+    n0 = live.n_slots
+    assert getattr(live.engine.dispatch, "repo_epoch", 0) == 0
+
+    live.search([Query(op="range_search", r_lo=WHOLE_LO, r_hi=WHOLE_HI)])
+
+    i = 0
+    while live.n_slots == n0:            # fill the tier, then one more
+        live.ingest(make_datasets(1, seed=70 + i)[0])
+        i += 1
+    assert live.n_slots == 2 * n0        # the ladder doubles
+    assert live.engine.dispatch.repo_epoch == 1
+    # post-growth queries still match a cold engine (executables built
+    # against the old slot count were retired by the layout epoch)
+    check_bit_identity(live)
+
+
+def test_validation_errors_leave_state_untouched():
+    ds = make_datasets(3, seed=12)
+    live = LiveRepository(ds, leaf_capacity=8)
+    epoch = live.epoch
+
+    with pytest.raises(ValueError):
+        live.ingest(np.zeros((0, 2), np.float32))       # empty
+    with pytest.raises(ValueError):
+        live.ingest(np.zeros((5, 3), np.float32))       # wrong dim
+    cap = live.geometry.point_capacity
+    with pytest.raises(ValueError):
+        live.ingest(np.zeros((cap + 1, 2), np.float32))  # oversize
+    with pytest.raises(KeyError):
+        live.delete(2 ** 20)                            # never existed
+    live.delete(1)
+    with pytest.raises(KeyError):
+        live.delete(1)                                  # already gone
+    with pytest.raises(KeyError):
+        live.replace(1, ds[0])                          # not live
+
+    assert live.epoch == epoch + 1                      # only the delete
+    assert live.live_ids == {0, 2}
+    check_bit_identity(live)
+
+
+def test_point_capacity_headroom_admits_larger_ingests():
+    ds = make_datasets(3, seed=13, n_points=20)
+    live = LiveRepository(ds, leaf_capacity=8, point_capacity=128)
+    big = make_datasets(1, seed=14, n_points=100)[0]
+    live.ingest(big)
+    check_bit_identity(live)
+
+
+# -- mesh dispatchers (subprocess-or-inprocess via conftest) ----------------
+
+
+def _check_live_on_mesh(mesh, n_devices):
+    from repro.engine import repo_device_bytes
+    ds = make_datasets(7, seed=1)
+    live = LiveRepository(ds, mesh=mesh, leaf_capacity=8,
+                          result_cache_size=16)
+    extra = make_datasets(4, seed=7)
+    live.ingest(extra[0])
+    live.delete(2)
+    live.replace(4, extra[1])
+    check_bit_identity(live, mesh=mesh)
+
+    # per-device residency: slot bodies stay sharded after mutations —
+    # no device holds everything (the replicated upper tree + space
+    # bounds are tiny)
+    dev = repo_device_bytes(live.repo)
+    assert len(dev) == n_devices
+    total = sum(dev.values())
+    body = sum(np.asarray(x).nbytes
+               for x in jax.tree.leaves(live.repo.ds_index))
+    n_sh = int(live.engine.dispatch.n_shards)
+    assert max(dev.values()) <= (total - body) + body // n_sh + body // 8
+
+    # growth on the mesh: shard-aligned, still bit-identical
+    while live.n_slots == 8:
+        live.ingest(make_datasets(1, seed=80 + live.mutations)[0])
+    assert live.n_slots == 16
+    check_bit_identity(live, mesh=mesh)
+
+    s = live.stats
+    assert s.cache_hits + s.cache_misses == s.dispatches
+
+
+def check_live_sharded():
+    from repro.engine import data_mesh
+    _check_live_on_mesh(data_mesh(3), 3)
+
+
+def check_live_replicated():
+    from repro.engine import replica_mesh
+    _check_live_on_mesh(replica_mesh(2, 4), 8)
+
+
+def test_live_sharded_bit_identity():
+    dispatch_device_check("test_live_repository", "check_live_sharded",
+                          devices=3)
+
+
+def test_live_replicated_bit_identity():
+    dispatch_device_check("test_live_repository", "check_live_replicated",
+                          devices=8)

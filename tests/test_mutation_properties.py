@@ -1,0 +1,188 @@
+"""Property tests: random mutation-vs-query interleavings on a live
+repository, checked against a host-side model.
+
+Each example drives a random interleaving of
+{ingest, delete, replace, search(mixed batch), cache-hit replay} against
+`LiveRepository`, mirroring every mutation into a plain host-side dict
+(slot id -> points).  After every step the cheap invariants hold:
+
+  * the data epoch is monotone and the live-id set equals the model's;
+  * ``cache_hits + cache_misses == dispatches`` (the executable-cache
+    invariant is undisturbed by mutations and epoch purges);
+  * a replayed query batch with NO intervening mutation is served from
+    the result cache (hits strictly increase).
+
+At checkpoints (and at the end) the FULL tentpole contract is asserted:
+the resident repository is bitwise equal to `build_frozen(model)` and a
+mixed op batch returns bit-identical results to a cold engine over that
+frozen build — on local dispatch in the hypothesis/seeded sweep, and on
+the 3-shard and 2x4 replica meshes via `dispatch_device_check` (with a
+per-device residency bound: mutated slot bodies stay sharded).
+
+Runs under hypothesis when installed (the CI path); without it — or with
+``REPRO_SEEDED_PROPS=1`` set, the deterministic-CI knob — the same
+property runs over a seeded sweep so the contract never silently skips
+(pattern from tests/test_exacthaus_properties.py).
+
+Geometry is pinned across examples (fixed point budget per dataset, fixed
+leaf capacity, ``point_capacity=32``) so every example reuses the same
+stage executables instead of recompiling per draw.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from conftest import dispatch_device_check
+from repro.engine import LiveRepository, Query
+from test_live_repository import (
+    WHOLE_HI,
+    WHOLE_LO,
+    check_bit_identity,
+)
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+USE_SEEDED = (not HAVE_HYPOTHESIS
+              or bool(os.environ.get("REPRO_SEEDED_PROPS")))
+
+N_INIT = 6
+LEAF = 8
+POINT_CAP = 32
+
+
+def _mk_dataset(rng):
+    n = int(rng.integers(8, 28))
+    c = rng.uniform(-40, 40, 2)
+    return (c + rng.normal(0, rng.uniform(1, 4), (n, 2))).astype(np.float32)
+
+
+def _mixed_batch(rng, live_ids):
+    """A random mixed dataset+point op batch over the current live set."""
+    ids = sorted(live_ids)
+    lo = np.sort(rng.uniform(-50, 30, (2, 2)).astype(np.float32), axis=0)
+    qpts = _mk_dataset(rng)[:12]
+    return [
+        Query(op="range_search", r_lo=lo[0], r_hi=lo[1]),
+        Query(op="topk_ia", r_lo=lo[0], r_hi=lo[1],
+              k=int(rng.integers(1, 5))),
+        Query(op="topk_hausdorff_approx", q=qpts, k=2, eps=0.05),
+        Query(op="range_points", ds_id=int(rng.choice(ids)),
+              r_lo=WHOLE_LO, r_hi=WHOLE_HI),
+        Query(op="nnp", ds_id=int(rng.choice(ids)), q=qpts),
+    ]
+
+
+def _run_interleaving(seed: int, mesh=None, steps: int = 12,
+                      checkpoints=(5,)):
+    rng = np.random.default_rng(seed)
+    init = [_mk_dataset(rng) for _ in range(N_INIT)]
+    live = LiveRepository(init, mesh=mesh, leaf_capacity=LEAF,
+                          point_capacity=POINT_CAP, result_cache_size=64)
+    model = {j: init[j] for j in range(N_INIT)}
+    last_batch = None
+    mutated_since_search = True
+    prev_epoch = live.epoch
+
+    for step in range(steps):
+        kind = int(rng.integers(0, 5))
+        if kind == 0:
+            ds = _mk_dataset(rng)
+            sid = live.ingest(ds)
+            assert sid not in model           # a freed or fresh slot
+            model[sid] = ds
+            mutated_since_search = True
+        elif kind == 1 and len(model) > 1:
+            sid = int(rng.choice(sorted(model)))
+            live.delete(sid)
+            del model[sid]
+            mutated_since_search = True
+        elif kind == 2:
+            sid = int(rng.choice(sorted(model)))
+            ds = _mk_dataset(rng)
+            live.replace(sid, ds)
+            model[sid] = ds
+            mutated_since_search = True
+        elif kind == 3:
+            last_batch = _mixed_batch(rng, live.live_ids)
+            live.search(last_batch)
+            mutated_since_search = False
+        elif last_batch is not None and all(
+                q.ds_id is None or q.ds_id in live.live_ids
+                for q in last_batch):
+            # cache-hit replay: identical batch, same epoch -> served
+            # from the result cache, bit-identical by the cache contract
+            h0 = live.stats.result_cache_hits
+            live.search(last_batch)
+            if not mutated_since_search:
+                assert live.stats.result_cache_hits >= h0 + len(last_batch)
+
+        # cheap per-step invariants
+        assert live.epoch >= prev_epoch
+        prev_epoch = live.epoch
+        assert live.live_ids == set(model)
+        s = live.stats
+        assert s.cache_hits + s.cache_misses == s.dispatches
+        for j in range(live.n_slots):
+            got = live._slot_data.get(j)
+            want = model.get(j)
+            assert (got is None) == (want is None)
+
+        if step in checkpoints:
+            check_bit_identity(live, mesh=mesh, leaf_capacity=LEAF)
+
+    check_bit_identity(live, mesh=mesh, leaf_capacity=LEAF)
+    return live
+
+
+if not USE_SEEDED:
+    @given(seed=st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=8, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_mutation_interleaving_matches_frozen(seed):
+        _run_interleaving(seed)
+
+else:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_mutation_interleaving_matches_frozen(seed):
+        _run_interleaving(seed)
+
+
+def _check_mesh_interleaving(mesh, n_devices):
+    import jax
+
+    from repro.engine import repo_device_bytes
+    live = _run_interleaving(3, mesh=mesh, steps=10, checkpoints=(4,))
+    dev = repo_device_bytes(live.repo)
+    assert len(dev) == n_devices
+    total = sum(dev.values())
+    body = sum(np.asarray(x).nbytes
+               for x in jax.tree.leaves(live.repo.ds_index))
+    n_sh = int(live.engine.dispatch.n_shards)
+    # slot bodies stay sharded through arbitrary interleavings: no device
+    # holds more than its shard plus the replicated (tiny) remainder
+    assert max(dev.values()) <= (total - body) + body // n_sh + body // 8
+
+
+def check_mutation_props_sharded():
+    from repro.engine import data_mesh
+    _check_mesh_interleaving(data_mesh(3), 3)
+
+
+def check_mutation_props_replicated():
+    from repro.engine import replica_mesh
+    _check_mesh_interleaving(replica_mesh(2, 4), 8)
+
+
+def test_mutation_interleaving_sharded():
+    dispatch_device_check("test_mutation_properties",
+                          "check_mutation_props_sharded", devices=3)
+
+
+def test_mutation_interleaving_replicated():
+    dispatch_device_check("test_mutation_properties",
+                          "check_mutation_props_replicated", devices=8)

@@ -268,6 +268,220 @@ def test_stop_fails_queued_requests(env):
         req.future.result(timeout=0)
 
 
+# -- live serving: the mutation lane ----------------------------------------
+
+
+def _segment_queries(ds_id, probe_lo, probe_hi):
+    """Three fixed queries reused verbatim across segments, so a stale
+    cached row from an earlier epoch would be SERVED (not just possible)
+    if epoch keying were broken: dataset discovery, top-k, and a point
+    probe into ``ds_id`` (box tight around the ORIGINAL content, so a
+    replace that moves the points visibly changes the mask)."""
+    lo = np.float32([20, 20])
+    return [
+        ("range_search", dict(r_lo=lo, r_hi=lo + 40.0)),
+        ("topk_ia", dict(q_lo=np.float32([-60, -60]),
+                         q_hi=np.float32([60, 60]), k=3)),
+        ("range_points", dict(ds_id=ds_id, r_lo=probe_lo, r_hi=probe_hi)),
+    ]
+
+
+def _res_np(res):
+    return [np.asarray(x) for x in (res if isinstance(res, tuple) else (res,))]
+
+
+def _assert_same(got, want_engine, traffic):
+    """Each legacy response equals the same legacy call on a cold engine."""
+    for (op, payload), res in zip(traffic, got):
+        if op == "range_search":
+            want = want_engine.range_search(payload["r_lo"][None],
+                                            payload["r_hi"][None])[0]
+        elif op == "topk_ia":
+            want = want_engine.topk_ia(payload["q_lo"][None],
+                                       payload["q_hi"][None], payload["k"])
+            want = (want[0][0], want[1][0])
+        else:                                       # range_points
+            want = want_engine.range_points(
+                np.int32([payload["ds_id"]]), payload["r_lo"][None],
+                payload["r_hi"][None])[0]
+        for x, y in zip(_res_np(res), _res_np(want)):
+            np.testing.assert_array_equal(x, np.asarray(y))
+
+
+def test_live_interleaved_mutation_drain():
+    """Mutations submitted MID-BURST take effect exactly at their stream
+    position: the whole interleaved burst is pre-filled before the
+    dispatcher starts, so one drain sees [queries, replace, same queries,
+    ingest, delete, same queries] — each segment's answers must be
+    bit-identical to a cold engine over the frozen equivalent of the
+    repository AT THAT POINT (the middle segment repeats the first
+    segment's payloads verbatim, so a cached epoch-0 row being re-served
+    after the replace would be caught, and the replaced dataset's point
+    probe must visibly change)."""
+    from repro.core import repo_mutate
+    from repro.engine import LiveRepository
+    from repro.launch.serve_search import Mutation, _to_query
+
+    datasets = make_clustered_datasets(10, seed=5, n_points=(20, 50))
+    live = LiveRepository(datasets, leaf_capacity=16, theta=THETA,
+                          result_cache_size=64)
+    n_slots = live.n_slots
+    new0 = (datasets[0] + np.float32(30.0))        # visibly moved
+    fresh = (datasets[3] + np.float32(7.0))
+    ingest_slot = min(set(range(n_slots)) - live.live_ids)
+
+    traffic = _segment_queries(
+        ds_id=0, probe_lo=datasets[0].min(0) - np.float32(1.0),
+        probe_hi=datasets[0].max(0) + np.float32(1.0))
+    reqs = [[Request(op, _to_query(op, p)) for op, p in traffic]
+            for _ in range(3)]
+    muts = [Mutation("replace", ds_id=0, points=new0),
+            Mutation("ingest", points=fresh),
+            Mutation("delete", ds_id=1)]
+    server = SearchServer(live=live, max_batch=64, max_wait_ms=250.0)
+    for item in (*reqs[0], muts[0], *reqs[1], muts[1], muts[2], *reqs[2]):
+        server._queue.put(item)
+    server.start()
+    try:
+        got = [[r.future.result(timeout=600) for r in seg] for seg in reqs]
+        assert muts[0].future.result(timeout=600) == 0
+        assert muts[1].future.result(timeout=600) == ingest_slot
+        assert muts[2].future.result(timeout=600) is None
+    finally:
+        server.stop()
+
+    assert live.epoch == 3
+    assert server.stats.mutations == 3
+    assert server.stats.mutation_latencies[0] >= 0.0
+
+    # frozen equivalents of the repository at each segment's position
+    slots0 = list(datasets) + [None] * (n_slots - len(datasets))
+    slots1 = [new0] + slots0[1:]
+    cold0 = QueryEngine(repo_mutate.build_frozen(slots0, live.geometry),
+                        leaf_capacity=16)
+    cold1 = QueryEngine(repo_mutate.build_frozen(slots1, live.geometry),
+                        leaf_capacity=16)
+    cold2 = QueryEngine(live.frozen_repository(), leaf_capacity=16)
+    _assert_same(got[0], cold0, traffic)
+    _assert_same(got[1], cold1, traffic)
+    _assert_same(got[2], cold2, traffic)
+    # the replace was actually visible: the point probe into ds 0 must
+    # differ between the first two segments (same payload, new content)
+    assert not np.array_equal(np.asarray(got[0][2]), np.asarray(got[1][2]))
+
+
+def test_live_poisoned_row_fallback_and_lane_errors():
+    """A poisoned query sharing a drain with healthy queries AND a
+    mutation on a LIVE engine fails only its own future: the mutation
+    still publishes, healthy futures resolve with post-mutation-correct
+    results, and the dispatcher survives.  Plus the lane's error
+    contract: no live repo -> RuntimeError, unknown mutation -> ValueError."""
+    from repro.engine import LiveRepository
+
+    datasets = make_clustered_datasets(8, seed=9, n_points=(20, 40))
+    live = LiveRepository(datasets, leaf_capacity=16, theta=THETA)
+    # a TIGHT cluster: sparse bases get fully dropped by outlier removal
+    # (their MBR refines to empty), which would make the mask probe moot
+    fresh = (datasets[4] + np.float32(4.0))
+    ingest_slot = min(set(range(live.n_slots)) - live.live_ids)
+    server = SearchServer(live=live, max_batch=16, max_wait_ms=200.0).start()
+    try:
+        with pytest.raises(ValueError):
+            server.submit_mutation("compact")
+        lo = np.float32([-200, -200])      # covers the whole [0,100]^2 lake
+        good1 = server.submit("topk_ia", q_lo=lo, q_hi=-lo, k=3)
+        bad = server.submit("topk_ia", q_lo=np.zeros(3, np.float32),
+                            q_hi=np.ones(3, np.float32), k=3)
+        mfut = server.submit_mutation("ingest", points=fresh)
+        good2 = server.submit("range_search", r_lo=lo, r_hi=-lo)
+        assert np.asarray(good1.result(timeout=600)[0]).shape == (3,)
+        with pytest.raises(Exception):
+            bad.result(timeout=600)
+        assert mfut.result(timeout=600) == ingest_slot
+        mask = np.asarray(good2.result(timeout=600))
+        # a mutation whose apply raises fails ITS future, nothing else
+        bad_mut = server.submit_mutation("delete", ds_id=999)
+        with pytest.raises(KeyError):
+            bad_mut.result(timeout=600)
+        # dispatcher survived; post-mutation answers match a cold engine
+        after = server.submit("range_search", r_lo=lo, r_hi=-lo)
+        cold = QueryEngine(live.frozen_repository(), leaf_capacity=16)
+        want = cold.range_search(lo[None], (-lo)[None])[0]
+        np.testing.assert_array_equal(np.asarray(after.result(timeout=600)),
+                                      np.asarray(want))
+        if ingest_slot < mask.shape[0]:
+            assert mask[ingest_slot]       # good2 saw the ingested dataset
+    finally:
+        server.stop()
+
+
+def test_mutation_lane_needs_live(env):
+    datasets, repo = env
+    server = SearchServer(QueryEngine(repo), max_batch=8).start()
+    try:
+        with pytest.raises(RuntimeError):
+            server.submit_mutation("ingest", points=datasets[0])
+    finally:
+        server.stop()
+
+
+# -- injectable clock (deterministic drain-bound / latency tests) -----------
+
+
+class _FakeClock:
+    """Virtual time: every call returns the current instant, then
+    advances by ``step`` (0 = pinned)."""
+
+    def __init__(self, t=0.0, step=0.0):
+        self.t, self.step = t, step
+
+    def __call__(self):
+        now = self.t
+        self.t += self.step
+        return now
+
+
+def test_clock_injected_static_drain_deadline(env):
+    """The static drain's deadline reads the INJECTED clock: with virtual
+    time jumping past max_wait between queue reads, a pre-filled partial
+    batch drains and exits immediately — no real sleeping against a
+    5-second window (the old sleep-based timing assumption)."""
+    import time as _time
+
+    datasets, repo = env
+    clk = _FakeClock(t=100.0, step=10.0)           # step >> max_wait
+    server = SearchServer(QueryEngine(repo), max_batch=64,
+                          max_wait_ms=5000.0, adaptive=False, clock=clk)
+    for _ in range(3):
+        server._queue.put(Request("range_search", None, t_submit=clk()))
+    t0 = _time.perf_counter()
+    batch = server._drain()
+    elapsed = _time.perf_counter() - t0
+    assert len(batch) == 3                 # instantly-available rows taken
+    assert elapsed < 2.0                   # virtual deadline, real exit
+    assert clk.t > 100.0                   # the drain consulted the clock
+
+
+def test_clock_injected_latency_accounting(env):
+    """With a PINNED injected clock, submit->resolve latency is exactly
+    0.0 for every request — latency stats become deterministic instead
+    of sleep-calibrated."""
+    datasets, repo = env
+    clk = _FakeClock(t=50.0, step=0.0)
+    server = SearchServer(QueryEngine(repo), max_batch=8, max_wait_ms=20.0,
+                          adaptive=False, clock=clk).start()
+    try:
+        lo = np.float32([-10, -10])
+        futures = [server.submit("range_search", r_lo=lo, r_hi=-lo)
+                   for _ in range(3)]
+        for f in futures:
+            f.result(timeout=600)
+    finally:
+        server.stop()
+    assert server.stats.latencies == [0.0, 0.0, 0.0]
+    assert server.stats.p99_ms == server.stats.p50_ms == 0.0
+
+
 def check_replicated_serving():
     """SearchServer over a ReplicatedQueryEngine (2 x 4 mesh): a mixed
     burst pre-filled BEFORE the dispatcher starts drains as ONE batch ->
