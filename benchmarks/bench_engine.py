@@ -592,21 +592,33 @@ def bench_replica_scaling(repo, lake, k, eps, *, repeats, max_batch=None,
 
 
 def bench_mutation_sweep(lake, k, *, repeats, max_batch=None):
-    """Live-repository serving under churn: saturated mixed-query QPS/p99
-    on a LiveRepository with NO mutations (baseline) vs the SAME pool
-    while a background thread streams ingest / replace / delete
-    mutations as fast as they publish (worst-case churn).
+    """Live-repository serving under churn: closed-loop mixed-query QPS
+    on a LiveRepository with NO mutations (baseline) vs the SAME load
+    while a churn thread streams ingest / replace / delete BURSTS
+    through the server's mutation lane (the two-stage pipeline: each
+    burst's prepare overlaps the in-flight query segment and the whole
+    burst publishes as ONE coalesced epoch at its stream position).
+
+    Both phases use the same closed-loop feeder — a bounded in-flight
+    window of queries, so drains stay saturated without pre-filling the
+    whole phase (a pre-filled queue would push every mutation behind
+    ALL queries and nothing would interleave).  Each phase runs on a
+    FRESH server with fresh ``ServerStats``, so per-phase mean_batch
+    actually shows the segment splits churn causes.
 
     The mutation stream keeps the safe id discipline: replaces rotate
     over original ids (always live), deletes only ever target slots the
-    stream itself ingested — so every point query in the pool stays
-    valid no matter how the stream interleaves with the drains.
+    stream itself ingested (and only after their publish resolved) — so
+    every point query in the pool stays valid no matter how the bursts
+    interleave with the drains.
 
-    Also records the mutation lane itself: publish latency percentiles,
-    bytes uploaded (placement accounting: single-dataset payloads only —
+    Also records the mutation lane itself: per-publish latency
+    percentiles, coalescing and prepare-overlap counters, bytes
+    uploaded (placement accounting: single-dataset payloads only —
     never a full re-upload), epoch movement, and tier growth.
     """
     import threading
+    from collections import deque
 
     from repro.engine import LiveRepository
     from repro.engine.query import Pipeline
@@ -616,102 +628,149 @@ def bench_mutation_sweep(lake, k, *, repeats, max_batch=None):
                           remove_outliers=False, result_cache_size=0)
     eps = float(zorder.default_epsilon(live.repo.space_lo,
                                        live.repo.space_hi, 5))
-    server_batch = 16 if max_batch is None else min(16, max_batch)
+    # deeper drains than the query-only serving bench: under churn every
+    # mutation run SPLITS its drain into separate engine calls, so the
+    # per-call planning/dispatch overhead amortizes over the drain depth
+    # — depth 32 keeps post-split segments as large as the query-only
+    # bench's whole drains
+    server_batch = 32 if max_batch is None else min(32, max_batch)
     b_rows = 64 if max_batch is None else max(8, max_batch)
-    sat_rounds = 4
+    # 6 pool rounds per measured phase: long enough that one drain of
+    # warm-up jitter can't move the phase QPS by more than a few percent
+    sat_rounds = 6
+    burst = 8
+    window = 4 * server_batch
     pool = make_mixed_pool(live.repo, lake, b_rows, k, eps, seed=3)
     rng = np.random.default_rng(11)
     payloads = [(lake[int(rng.integers(len(lake)))]
                  + rng.normal(0, 0.5, 2).astype(np.float32))
                 for _ in range(8)]
+    counts = {"applied": 0, "payload": 0}
+    own: list = []                          # slots the churn ingested
 
-    def run_saturating():
-        server = SearchServer(live.engine, max_batch=server_batch,
+    def churn(server, stop):
+        i = counts["applied"]
+        while not stop.is_set():
+            futs = []
+            for _ in range(burst):          # one back-to-back burst
+                kind = i % 3
+                if kind == 1:
+                    futs.append(server.submit_mutation(
+                        "replace", ds_id=int(i // 3) % len(lake),
+                        points=payloads[(i + 1) % len(payloads)]))
+                    counts["payload"] += 1
+                elif kind == 2 and own:
+                    futs.append(server.submit_mutation(
+                        "delete", ds_id=own.pop(0)))
+                else:
+                    futs.append(server.submit_mutation(
+                        "ingest", points=payloads[i % len(payloads)]))
+                    counts["payload"] += 1
+                i += 1
+            for f in futs:
+                out = f.result(timeout=600)
+                counts["applied"] += 1
+                if isinstance(out, int) and out not in range(len(lake)):
+                    own.append(out)         # a fresh ingest slot
+
+    def run_phase(mutate: bool):
+        server = SearchServer(live=live, max_batch=server_batch,
                               max_wait_ms=2.0, adaptive=True)
-        reqs = []
-        for q in pool * sat_rounds:
-            op = "pipeline" if isinstance(q, Pipeline) else q.op
-            req = Request(op, q)
-            reqs.append(req)
-            server._queue.put(req)
-        t0 = time.perf_counter()
+        n_total = len(pool) * sat_rounds
         server.start()
+        stop = threading.Event()
+        thread = None
+        if mutate:
+            thread = threading.Thread(target=churn, args=(server, stop),
+                                      daemon=True)
+        inflight: deque = deque()
+        reqs = 0
+        t0 = time.perf_counter()
+        if thread is not None:
+            thread.start()
         try:
-            for req in reqs:
-                req.future.result(timeout=600)
+            for n in range(n_total):
+                q = pool[n % len(pool)]
+                op = "pipeline" if isinstance(q, Pipeline) else q.op
+                req = Request(op, q)
+                server._queue.put(req)
+                inflight.append(req)
+                reqs += 1
+                if len(inflight) >= window:
+                    inflight.popleft().future.result(timeout=600)
+            while inflight:
+                inflight.popleft().future.result(timeout=600)
             dt = time.perf_counter() - t0
-            return {"qps": len(reqs) / dt,
-                    "p50_ms": server.stats.p50_ms,
-                    "p99_ms": server.stats.p99_ms,
-                    "mean_batch": server.stats.mean_batch}
         finally:
+            # join BEFORE stopping: the last burst's futures must still
+            # be served, or its submitted-but-unapplied mutations would
+            # skew the placement accounting
+            stop.set()
+            if thread is not None:
+                thread.join(timeout=120)
             server.stop()
+        return {"qps": reqs / dt,
+                "p50_ms": server.stats.p50_ms,
+                "p99_ms": server.stats.p99_ms,
+                "mean_batch": server.stats.mean_batch,
+                "mutations_in_phase": server.stats.mutations}
 
     # warm both lanes off the measured path: the query drains compile
-    # their bucket shapes, and one ingest/replace/delete probe compiles
-    # the row-build stages, both updater variants, AND the tier growth
+    # their bucket shapes; one ingest/replace/delete probe compiles the
+    # row-build stages, the group-of-1 updater, AND the tier growth
     # (128 datasets fill the initial ladder tier exactly, so the first
-    # ingest doubles it here, not mid-measurement)
-    run_saturating()
+    # ingest doubles it here, not mid-measurement); coalesced groups of
+    # {2, 4, 8} compile the batched publish buckets the bursts will hit
+    run_phase(mutate=False)
     wid = live.ingest(payloads[0])
     live.replace(wid, payloads[1])
     live.delete(wid)
+    for width in (2, 4, 8):
+        group = live.prepare_group(
+            [("ingest", None, payloads[i % len(payloads)])
+             for i in range(width)])
+        sids = live.publish_group(group)
+        live.publish_group(live.prepare_group(
+            [("delete", sid, None) for sid in sids]))
     live.bytes_uploaded = 0
     epoch0, layout0 = live.epoch, getattr(live.engine.dispatch,
                                           "repo_epoch", 0)
+    estats = live.engine.stats
+    pub0 = len(estats.publish_seconds)
+    mc0 = estats.mutations_coalesced
+    ov0 = estats.prepare_overlap_seconds
 
-    baseline = max((run_saturating() for _ in range(2)),
+    baseline = max((run_phase(mutate=False) for _ in range(2)),
                    key=lambda r: r["qps"])
+    under = max((run_phase(mutate=True) for _ in range(2)),
+                key=lambda r: r["qps"])
 
-    mut_lat: list = []
-    stop = threading.Event()
-
-    def churn():
-        i = 0
-        own: list = []                      # slots this stream ingested
-        while not stop.is_set():
-            kind = i % 3
-            t0 = time.perf_counter()
-            if kind == 0:
-                own.append(live.ingest(payloads[i % len(payloads)]))
-            elif kind == 1:
-                live.replace(int(i // 3) % len(lake),
-                             payloads[(i + 1) % len(payloads)])
-            elif own:
-                live.delete(own.pop(0))
-            mut_lat.append(time.perf_counter() - t0)
-            i += 1
-
-    thread = threading.Thread(target=churn, daemon=True)
-    thread.start()
-    try:
-        under = max((run_saturating() for _ in range(2)),
-                    key=lambda r: r["qps"])
-    finally:
-        stop.set()
-        thread.join(timeout=60)
-
-    lat_ms = sorted(1e3 * x for x in mut_lat)
-    pct = lambda p: lat_ms[min(len(lat_ms) - 1,          # noqa: E731
-                               int(p * (len(lat_ms) - 1)))] if lat_ms else 0.0
+    pub_ms = sorted(1e3 * x for x in estats.publish_seconds[pub0:])
+    pct = lambda p: pub_ms[min(len(pub_ms) - 1,          # noqa: E731
+                               int(p * (len(pub_ms) - 1)))] if pub_ms else 0.0
     geom = live.geometry
     per_mutation = geom.point_capacity * (4 * geom.dim + 1)
-    payload_mutations = sum(1 for i in range(len(mut_lat)) if i % 3 != 2
-                            ) if mut_lat else 0
     return {
-        "method": ("saturated pre-filled-queue mixed serving on a "
-                   "LiveRepository; 'under_mutation' repeats the pool "
-                   "while a thread streams ingest/replace/delete "
-                   "back-to-back; mutation latency is per-publish wall "
-                   "time in that thread"),
+        "method": ("closed-loop mixed serving (bounded in-flight query "
+                   "window) on a LiveRepository; 'under_mutation' repeats "
+                   "the load while a churn thread submits back-to-back "
+                   "8-mutation bursts through the server lane — each "
+                   "burst prepares concurrently with the in-flight "
+                   "segment and publishes as one coalesced epoch; "
+                   "mutation latency is per-PUBLISH wall time"),
         "n_requests": b_rows * sat_rounds,
+        "in_flight_window": window,
+        "burst": burst,
         "baseline": baseline,
         "under_mutation": under,
         "qps_ratio_under_mutation": under["qps"] / baseline["qps"],
-        "mutations_applied": len(mut_lat),
-        "mutation_mean_ms": (sum(lat_ms) / len(lat_ms)) if lat_ms else 0.0,
+        "mutations_applied": counts["applied"],
+        "mutations_coalesced": estats.mutations_coalesced - mc0,
+        "publishes": len(pub_ms),
+        "mutation_mean_ms": (sum(pub_ms) / len(pub_ms)) if pub_ms else 0.0,
         "mutation_p50_ms": pct(0.50),
         "mutation_p99_ms": pct(0.99),
+        "prepare_overlap_seconds": estats.prepare_overlap_seconds - ov0,
         "epoch_delta": live.epoch - epoch0,
         "layout_epoch_delta": getattr(live.engine.dispatch, "repo_epoch", 0)
                               - layout0,
@@ -720,7 +779,7 @@ def bench_mutation_sweep(lake, k, *, repeats, max_batch=None):
         # placement accounting: every upload is ONE padded dataset row
         # (ingest/replace); deletes and growth upload nothing
         "no_full_reupload": live.bytes_uploaded
-                            == payload_mutations * per_mutation,
+                            == counts["payload"] * per_mutation,
         "slots": live.n_slots,
         "live_datasets": len(live.live_ids),
     }
@@ -888,7 +947,11 @@ def main(argv=None):
                 round(ms["qps_ratio_under_mutation"], 3),
             "p99_ms_under_mutation": round(ms["under_mutation"]["p99_ms"], 1),
             "mutation_p50_ms": round(ms["mutation_p50_ms"], 1),
+            "mutation_p99_ms": round(ms["mutation_p99_ms"], 1),
             "mutations_applied": ms["mutations_applied"],
+            "mutations_coalesced": ms["mutations_coalesced"],
+            "prepare_overlap_seconds":
+                round(ms["prepare_overlap_seconds"], 3),
             "no_full_reupload": ms["no_full_reupload"],
         }
         rec["summary"] = summary

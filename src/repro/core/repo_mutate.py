@@ -20,10 +20,11 @@ code path per slot:
     only way a live batch-of-1 ingest can be bit-identical to a cold
     rebuild is for the cold rebuild to use the SAME batch-of-1
     executables — which :func:`init_live` and :func:`build_frozen` do;
-  * :func:`update_slot` — the functional single-slot repository update
-    (ingest / delete / replace are all one scatter + upper-tree rebuild;
-    a DELETED slot is ZEROED entirely, matching the cold builder's
-    ``pad_to(..., 0)`` padding exactly);
+  * :func:`update_slots` — the functional MULTI-slot repository update
+    (ingest / delete / replace are all one batched scatter + ONE
+    upper-tree rebuild for N coalesced mutations; a DELETED slot is
+    ZEROED entirely, matching the cold builder's ``pad_to(..., 0)``
+    padding exactly), with :func:`update_slot` as the N=1 form;
   * :func:`build_frozen` — the bit-identity ORACLE: a cold,
     slot-preserving build from ``{slot j -> dataset_j | None}`` under the
     same geometry, against which any live mutation sequence must agree.
@@ -383,13 +384,35 @@ def init_live(
     return assemble(ds_index, ds_sigs, ds_valid, geom), geom
 
 
-def update_slot(repo: Repository, slot: Array, row: DatasetIndex,
-                sig: Array, valid: Array, *, geom: RepoGeometry
-                ) -> Repository:
-    """Functional single-slot update: scatter the new row (ingest /
-    replace) or the zero row (delete) into the slot arrays and rebuild the
-    upper tree from the refreshed roots.  Traceable with a DYNAMIC slot
-    and validity, so one jitted executable serves every mutation kind on
+def scatter_slots(repo: Repository, slots: Array, rows: DatasetIndex,
+                  sigs: Array, valids: Array):
+    """Slot arrays with the (N, ...) batched ``rows``/``sigs``/``valids``
+    scattered at ``slots`` — the shared write kernel of every batched
+    publish.  Scatter is pure data movement (no reductions), so writing N
+    rows in one dispatch is bitwise equal to N sequential single-row
+    scatters as long as ``slots`` carries no conflicting duplicates
+    (callers dedup last-write-wins; padding a group by REPEATING its last
+    (slot, row) entry is safe — duplicate indices with bitwise-identical
+    update values give the same result under any XLA application order).
+    """
+    ds_index = jax.tree.map(lambda a, r: a.at[slots].set(r),
+                            repo.ds_index, rows)
+    ds_sigs = repo.ds_sigs.at[slots].set(sigs)
+    ds_valid = repo.ds_valid.at[slots].set(valids)
+    return ds_index, ds_sigs, ds_valid
+
+
+def update_slots(repo: Repository, slots: Array, rows: DatasetIndex,
+                 sigs: Array, valids: Array, *, geom: RepoGeometry
+                 ) -> Repository:
+    """Functional MULTI-slot update: one scatter dispatch and ONE
+    upper-tree rebuild for N mutations (ingest / replace / delete mixed
+    freely — a delete is a zero row with ``valids[i]=False``), instead of
+    N of each.  This is the device side of a COALESCED publish: a run of
+    consecutive mutations with no intervening queries lands as a single
+    batched write, and the (tiny) upper tree is rebuilt once from the
+    refreshed roots.  Slots, rows, and validity are DYNAMIC operands, so
+    one jitted executable per group size serves every mutation mix on
     every slot of the current tier.
 
     NOT donated: the previous repository's buffers stay intact, so an
@@ -397,11 +420,20 @@ def update_slot(repo: Repository, slot: Array, row: DatasetIndex,
     snapshot while future queries see the new one — the repository is
     never torn.
     """
-    ds_index = jax.tree.map(lambda a, r: a.at[slot].set(r),
-                            repo.ds_index, row)
-    ds_sigs = repo.ds_sigs.at[slot].set(sig)
-    ds_valid = repo.ds_valid.at[slot].set(valid)
+    ds_index, ds_sigs, ds_valid = scatter_slots(repo, slots, rows, sigs,
+                                                valids)
     return assemble(ds_index, ds_sigs, ds_valid, geom)
+
+
+def update_slot(repo: Repository, slot: Array, row: DatasetIndex,
+                sig: Array, valid: Array, *, geom: RepoGeometry
+                ) -> Repository:
+    """Single-slot :func:`update_slots` (kept for callers holding an
+    unbatched row; the batched form is the publish path)."""
+    return update_slots(
+        repo, jnp.asarray(slot)[None],
+        jax.tree.map(lambda x: x[None], row), sig[None],
+        jnp.asarray(valid)[None], geom=geom)
 
 
 def pad_slots(repo: Repository, n_physical: int):

@@ -152,6 +152,9 @@ class EngineStats:
     result_cache_hits: int = 0       # query rows served from the result LRU
     result_cache_misses: int = 0     # query rows that had to dispatch
     epoch_invalidations: int = 0     # result rows retired by a repo epoch
+    mutations_coalesced: int = 0     # mutations that shared another's publish
+    prepare_overlap_seconds: float = 0.0   # prepare time hidden under serving
+    publish_seconds: list = field(default_factory=list)  # per-publish wall s
     plan_groups: int = 0             # dispatch groups compiled by search()
     replica_subgroups: int = 0       # replica row-blocks those groups spanned
     pipeline_stage1: int = 0         # pipelines whose dataset stage ran
@@ -205,6 +208,32 @@ class EngineStats:
         per["queries"] += hits
         per["result_hits"] = per.get("result_hits", 0) + hits
         per["result_misses"] = per.get("result_misses", 0) + misses
+
+    def record_publish(self, seconds: float, coalesced: int = 0) -> None:
+        """Book one mutation PUBLISH (the batched slot write + upper-tree
+        rebuild + atomic swap installing a group of prepared mutations):
+        its wall time joins the publish latency distribution, and
+        ``coalesced`` counts the mutations beyond the first that shared
+        this publish (group size - 1; a lone mutation books 0)."""
+        self.publish_seconds.append(seconds)
+        self.mutations_coalesced += coalesced
+
+    def publish_percentile_ms(self, p: float) -> float:
+        """p-th percentile of per-publish wall time, in ms (0 if no
+        publish has been recorded)."""
+        if not self.publish_seconds:
+            return 0.0
+        import numpy as _np
+        return 1e3 * float(_np.percentile(
+            _np.asarray(self.publish_seconds), p))
+
+    @property
+    def publish_p50_ms(self) -> float:
+        return self.publish_percentile_ms(50.0)
+
+    @property
+    def publish_p99_ms(self) -> float:
+        return self.publish_percentile_ms(99.0)
 
     def record_latency(self, op: str, seconds: float) -> None:
         """Book one dispatch group's wall-clock latency: cumulative
@@ -486,7 +515,8 @@ class QueryEngine:
         se = self._slot_epochs
         return 0 if se is None else int(se[int(ds_id)])
 
-    def set_repo_epoch(self, epoch: int, slot_epochs=None) -> None:
+    def set_repo_epoch(self, epoch: int, slot_epochs=None,
+                       touched=None) -> None:
         """Install a new repository epoch after a live mutation.
 
         ``epoch`` must be monotonically increasing; ``slot_epochs`` (an
@@ -496,7 +526,15 @@ class QueryEngine:
         versions, not capacity evictions, and the counter makes the
         distinction observable.  Executables are NOT touched: data
         mutations reuse every compiled program (the layout epoch on the
-        dispatcher handles shape changes separately)."""
+        dispatcher handles shape changes separately).
+
+        ``touched`` (optional) is the exact set of slots this publish
+        wrote: invalidation is then PRECISE for point-granularity rows —
+        only entries keyed on a touched slot are even inspected, so
+        entries for untouched slots survive a publish without a per-key
+        epoch probe (a coalesced N-mutation publish makes ONE such sweep,
+        not N).  Dataset-granularity rows always retire on a data-epoch
+        move: any slot write can change a whole-repository answer."""
         if epoch < self._repo_epoch:
             raise ValueError(
                 f"repository epoch must be monotone: {epoch} < "
@@ -508,6 +546,8 @@ class QueryEngine:
         for key in list(self._result_cache):
             if key[0] in ("range_points", "nnp"):
                 # (op, ds_id, slot_epoch, ...)
+                if touched is not None and key[1] not in touched:
+                    continue               # precise retention: untouched
                 if key[2] != self.slot_epoch(key[1]):
                     stale.append(key)
             elif key[1] != self._repo_epoch:

@@ -44,11 +44,36 @@ Mutations never tear in-flight queries: the slot update is a functional
 old repository keeps consistent old buffers, and the publish step is a
 single Python attribute swap.  Mutation calls themselves are serialized
 by a lock; queries never take it.
+
+Every mutation runs as a TWO-STAGE pipeline:
+
+  * **prepare** (:meth:`LiveRepository.prepare_group`) — validation, slot
+    reservation, and the host-side jitted row-stage builds + padded
+    payload upload.  Prepare touches nothing a query can observe, so a
+    serving front-end may run it CONCURRENTLY with an in-flight query
+    segment against the immutable pre-mutation snapshot (late-bound
+    dispatchers make this safe).  A prepare that fails mid-group aborts
+    cleanly: its reserved slot returns to the free list, the other items
+    stay publishable (:meth:`abort_group` abandons a whole group).
+  * **publish** (:meth:`LiveRepository.publish_group`) — the cheap
+    install: ONE batched owner-write dispatch + ONE upper-tree rebuild
+    for the whole group (:func:`repro.core.repo_mutate.update_slots`),
+    then the atomic repo swap.  A run of N consecutive mutations with no
+    intervening queries COALESCES into one publish and bumps the data
+    epoch ONCE — semantics-preserving because every query is still
+    answered at the epoch of its stream position (no query can observe
+    the intermediate states a serial apply would have materialized).
+
+``ingest``/``delete``/``replace`` are the group-of-1 form of the same
+pipeline — one mutation, one publish, one epoch bump, exactly the
+pre-pipeline semantics.
 """
 from __future__ import annotations
 
 import heapq
 import threading
+import time
+from dataclasses import dataclass, field
 from typing import Sequence
 
 import jax
@@ -59,7 +84,31 @@ from repro.core import repo_mutate
 from repro.core.repo_index import Repository
 from repro.engine.engine import QueryEngine
 
-__all__ = ["LiveRepository"]
+__all__ = ["LiveRepository", "PreparedGroup", "PreparedMutation"]
+
+
+@dataclass
+class PreparedMutation:
+    """One mutation after its prepare stage: the target slot (reserved
+    for ingest), the built batch-of-1 row + signature (zero row for
+    delete), or the error its prepare raised (in which case every
+    reservation was already returned — never half-reserved)."""
+    op: str
+    slot: int | None = None
+    points: np.ndarray | None = None    # host copy (slot-data ground truth)
+    row: object | None = None           # batch-of-1 DatasetIndex
+    sig: object | None = None           # (1, W) signature words
+    valid: bool = False
+    error: Exception | None = None
+
+
+@dataclass
+class PreparedGroup:
+    """An ordered run of prepared mutations awaiting one coalesced
+    publish (or :meth:`LiveRepository.abort_group`)."""
+    items: list = field(default_factory=list)
+    published: bool = False
+    aborted: bool = False
 
 
 class LiveRepository:
@@ -74,8 +123,10 @@ class LiveRepository:
     ``point_capacity`` reserves bottom-tree headroom for datasets larger
     than any initial one (the bottom depth is pinned; an oversize ingest
     raises).  ``slot_headroom`` pre-doubles slot capacity that many
-    times.  Remaining engine knobs (buckets, result_cache_size, ...) pass
-    through to :class:`~repro.engine.engine.QueryEngine`.
+    times.  ``clock`` injects the timebase for publish-latency
+    accounting (tests drive it with virtual time).  Remaining engine
+    knobs (buckets, result_cache_size, ...) pass through to
+    :class:`~repro.engine.engine.QueryEngine`.
     """
 
     def __init__(
@@ -89,8 +140,10 @@ class LiveRepository:
         remove_outliers: bool = True,
         point_capacity: int | None = None,
         slot_headroom: int = 0,
+        clock=time.perf_counter,
         **engine_kwargs,
     ):
+        self._clock = clock
         repo, geom = repo_mutate.init_live(
             datasets,
             leaf_capacity=leaf_capacity,
@@ -123,8 +176,22 @@ class LiveRepository:
         self._slot_data = {j: np.asarray(ds, np.float32)
                            for j, ds in enumerate(datasets)}
         self._lock = threading.Lock()
-        self._zero_row = repo_mutate.zero_slot_row(geom)
-        self._updater = self._make_updater()
+        # direct ingest/delete/replace serialize through this OUTER lock
+        # (each is a group-of-1 prepare+publish, preserving the exact
+        # pre-pipeline semantics); the inner ``_lock`` guards free-list /
+        # live-set / publish internals so a serving front-end can overlap
+        # prepare_group with an in-flight query segment
+        self._api_lock = threading.Lock()
+        zr, zs = repo_mutate.zero_slot_row(geom)
+        # batch-of-1 zero row: deletes coalesce into the same batched
+        # scatter as ingests/replaces
+        self._zero_row1 = (jax.tree.map(lambda x: x[None], zr), zs[None])
+        #: tiers reserved VIRTUALLY by prepare (free list extended past
+        #: the current slot count) and not yet materialized by a publish
+        self._grows_pending = 0
+        # batched slot-write executables keyed by padded group size;
+        # cleared on tier growth (they close over the slot count)
+        self._updaters: dict = {}
         self.engine.set_repo_epoch(0, self.slot_epochs)
 
     # -- views -------------------------------------------------------------
@@ -164,42 +231,201 @@ class LiveRepository:
 
     # -- mutations ---------------------------------------------------------
 
+    #: rows per device dispatch inside one publish — larger groups chunk
+    #: (bounds the executable-variant count; padded buckets are powers
+    #: of two, so the updater cache holds at most log2(MAX_GROUP)+1
+    #: entries per tier)
+    MAX_GROUP = 16
+
     def ingest(self, points) -> int:
         """Add a dataset; returns its slot id (stable until deleted).
         Grows the slot tier first if the free list is empty."""
-        points = self._check_points(points)
-        with self._lock:
-            if not self._free:
-                self._grow()
-            slot = heapq.heappop(self._free)
-            # bookkeeping first: _publish derives the valid-dataset count
-            # (ExactHaus pruning stats) from the live set
-            self._live.add(slot)
-            self._slot_data[slot] = points
-            self._write(slot, points, valid=True)
-            return slot
+        return self._apply_one("ingest", None, points)
 
     def delete(self, ds_id: int) -> None:
         """Remove a dataset: its slot is zeroed (bit-identical to a
         never-filled slot) and returned to the free list."""
-        ds_id = int(ds_id)
-        with self._lock:
-            self._check_live(ds_id)
-            self._live.discard(ds_id)
-            del self._slot_data[ds_id]
-            self._write(ds_id, None, valid=False)
-            heapq.heappush(self._free, ds_id)
+        self._apply_one("delete", int(ds_id), None)
 
     def replace(self, ds_id: int, points) -> None:
         """Swap a live dataset's contents in place — a new VERSION under
         the same id: the slot keeps its id, its per-slot epoch bumps, and
         every cached result that touched it is retired."""
-        ds_id = int(ds_id)
-        points = self._check_points(points)
+        self._apply_one("replace", int(ds_id), points)
+
+    def _apply_one(self, op, ds_id, points):
+        with self._api_lock:
+            group = self.prepare_group([(op, ds_id, points)])
+            item = group.items[0]
+            if item.error is not None:
+                group.published = True      # nothing reserved to return
+                raise item.error
+            return self.publish_group(group)[0]
+
+    # -- prepare stage -----------------------------------------------------
+
+    def prepare_group(self, specs) -> PreparedGroup:
+        """Prepare a run of mutations ``[(op, ds_id, points), ...]`` —
+        validation, slot reservation, and the jitted row builds + padded
+        payload uploads — WITHOUT publishing anything.  Queries served
+        while this runs still see the pre-mutation snapshot unchanged.
+
+        Items validate against a group-local view of the live set
+        (pending ingests visible, pending deletes excluded), so the
+        outcome of each item matches a sequential apply of the group.  A
+        failing item records its error (its reservation returned
+        immediately) and does NOT poison the rest of the group; the
+        caller sees the error in :meth:`publish_group`'s outcomes."""
+        items = []
         with self._lock:
-            self._check_live(ds_id)
-            self._write(ds_id, points, valid=True)
-            self._slot_data[ds_id] = points
+            view_live = set(self._live)
+        for op, ds_id, points in specs:
+            try:
+                if op == "ingest":
+                    items.append(self._prepare_ingest(points, view_live))
+                elif op == "replace":
+                    items.append(
+                        self._prepare_replace(int(ds_id), points, view_live))
+                elif op == "delete":
+                    items.append(self._prepare_delete(int(ds_id), view_live))
+                else:
+                    raise ValueError(f"unknown mutation op {op!r}")
+            except Exception as e:  # noqa: BLE001 — recorded per item
+                items.append(PreparedMutation(op, error=e))
+        return PreparedGroup(items)
+
+    def _prepare_ingest(self, points, view_live):
+        # reserve FIRST so concurrent prepares in the same group never
+        # collide, then validate/build; ANY failure past the reservation
+        # runs the abort path (slot back on the free list — never
+        # half-reserved, tested by the abort-path suite)
+        with self._lock:
+            slot = self._reserve_slot()
+        try:
+            pts = self._check_points(points)
+            row, sig = self._build_payload(pts)
+        except Exception:
+            with self._lock:
+                heapq.heappush(self._free, slot)
+            raise
+        view_live.add(slot)
+        return PreparedMutation("ingest", slot=slot, points=pts,
+                                row=row, sig=sig, valid=True)
+
+    def _prepare_replace(self, ds_id, points, view_live):
+        if ds_id not in view_live:
+            raise KeyError(f"dataset id {ds_id} is not live")
+        pts = self._check_points(points)
+        row, sig = self._build_payload(pts)
+        return PreparedMutation("replace", slot=ds_id, points=pts,
+                                row=row, sig=sig, valid=True)
+
+    def _prepare_delete(self, ds_id, view_live):
+        if ds_id not in view_live:
+            raise KeyError(f"dataset id {ds_id} is not live")
+        view_live.discard(ds_id)
+        row, sig = self._zero_row1
+        return PreparedMutation("delete", slot=ds_id,
+                                row=row, sig=sig, valid=False)
+
+    def _build_payload(self, pts):
+        geom = self.geometry
+        # the canonical batch-of-1 row pipeline — the same shared
+        # executables the frozen oracle uses (bit-identity by
+        # construction, see core/repo_mutate); the ONLY host->device
+        # traffic a mutation pays is this one padded payload
+        rows, sigs = repo_mutate.build_row(pts, geom)
+        with self._lock:
+            self.bytes_uploaded += geom.point_capacity * (4 * geom.dim + 1)
+        return rows, sigs
+
+    def _reserve_slot(self) -> int:
+        """Pop a free slot (caller holds ``_lock``).  An empty free list
+        extends VIRTUALLY into the next tier — ids past the current slot
+        count — deferring the actual growth (its device work, layout
+        epoch, and data epoch) to the publish stage."""
+        if not self._free:
+            base = self.geometry.n_slots << self._grows_pending
+            self._grows_pending += 1
+            for s in range(base, 2 * base):
+                heapq.heappush(self._free, s)
+        return heapq.heappop(self._free)
+
+    def abort_group(self, group: PreparedGroup) -> None:
+        """Abandon a prepared, unpublished group: every ingest
+        reservation returns to the free list (subsequent ingests reuse
+        the slots) and the group is marked consumed."""
+        if group.published or group.aborted:
+            raise RuntimeError("group already consumed")
+        group.aborted = True
+        with self._lock:
+            for p in group.items:
+                if p.error is None and p.op == "ingest":
+                    heapq.heappush(self._free, p.slot)
+                    p.error = RuntimeError("prepare aborted")
+
+    # -- publish stage -----------------------------------------------------
+
+    def publish_group(self, group: PreparedGroup):
+        """Install a prepared group as ONE coalesced publish: one batched
+        owner-write dispatch + one upper-tree rebuild for the whole run
+        (chunked at :attr:`MAX_GROUP`), the data epoch bumped once per
+        chunk.  Returns per-item outcomes in stream order: the slot id
+        for ingest, the dataset id for replace, ``None`` for delete, or
+        the item's prepare-stage exception."""
+        if group.published or group.aborted:
+            raise RuntimeError("group already consumed")
+        group.published = True
+        outcomes: list = [p.error for p in group.items]
+        applied = [(i, p) for i, p in enumerate(group.items)
+                   if p.error is None]
+        with self._lock:
+            for lo in range(0, len(applied), self.MAX_GROUP):
+                self._publish_chunk(
+                    [p for _, p in applied[lo:lo + self.MAX_GROUP]])
+        for i, p in applied:
+            outcomes[i] = None if p.op == "delete" else p.slot
+        return outcomes
+
+    def _publish_chunk(self, chunk) -> None:
+        """One coalesced install (caller holds ``_lock``): materialize
+        any tier growth the prepare stage reserved virtually, dedup the
+        chunk's writes by slot (last write wins — stream order), pad to
+        the power-of-two bucket by REPEATING the last write (duplicate
+        scatter indices with identical payloads are deterministic), run
+        the one batched updater, then apply host bookkeeping in stream
+        order and publish the successor epoch."""
+        t0 = self._clock()
+        top = max(p.slot for p in chunk)
+        while top >= self.geometry.n_slots:
+            self._grow(push_free=False)
+        last: dict = {}
+        for p in chunk:                      # dict preserves insertion,
+            last[p.slot] = p                 # value is the LAST write
+        writes = list(last.values())
+        bucket = 1
+        while bucket < len(writes):
+            bucket *= 2
+        writes = writes + [writes[-1]] * (bucket - len(writes))
+        slots = jnp.asarray([p.slot for p in writes], jnp.int32)
+        rows = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                            *[p.row for p in writes])
+        sigs = jnp.concatenate([p.sig for p in writes], axis=0)
+        valids = jnp.asarray([p.valid for p in writes], bool)
+        new_repo = self._updater_for(bucket)(self.repo, slots, rows,
+                                             sigs, valids)
+        for p in chunk:
+            if p.op == "delete":
+                self._live.discard(p.slot)
+                self._slot_data.pop(p.slot, None)
+                heapq.heappush(self._free, p.slot)
+            else:
+                self._live.add(p.slot)
+                self._slot_data[p.slot] = p.points
+        self.mutations += len(chunk)
+        self._publish(new_repo, touched=tuple(last))
+        self.engine.stats.record_publish(self._clock() - t0,
+                                         coalesced=len(chunk) - 1)
 
     # -- internals ---------------------------------------------------------
 
@@ -246,22 +472,34 @@ class LiveRepository:
                           ds_valid=ds_valid, repo=tree,
                           space_lo=repo.space_lo, space_hi=repo.space_hi)
 
-    def _make_updater(self):
-        """The slot-write executable for the CURRENT tier: dynamic slot +
-        validity operands, so ingest, delete, and replace on any slot all
-        reuse it.  Inputs are NOT donated (in-flight queries keep the old
-        buffers).  It returns the updated slot arrays plus the per-slot
-        ROOT summaries; `_finish` turns those into the upper tree.
+    def _updater_for(self, bucket: int):
+        fn = self._updaters.get(bucket)
+        if fn is None:
+            fn = self._make_updater(bucket)
+            self._updaters[bucket] = fn
+        return fn
 
-        Local dispatch is a plain jitted scatter.  On a mesh the scatter
-        runs inside an EXPLICIT shard_map — the owner shard writes the
-        (replicated) row into its local slice and the roots are
-        all-gathered (tiny: one summary row per slot, not the slot
-        bodies), so only the touched shard's slice changes and nothing
-        moves through the host.  shard_map rather than the SPMD
-        partitioner is load-bearing: jit-of-scatter on a (replica x data)
-        mesh lets the partitioner psum the replicated row operand over
-        the replica axis, silently DOUBLING every slot (the same hazard
+    def _make_updater(self, bucket: int):
+        """The batched slot-write executable for the CURRENT tier and one
+        padded group size: ``bucket`` (slot, row, sig, valid) writes land
+        in ONE dispatch — dynamic slot + validity operands, so any mix of
+        ingest/delete/replace on any slots reuses it.  Inputs are NOT
+        donated (in-flight queries keep the old buffers).  It returns the
+        updated slot arrays plus the per-slot ROOT summaries; `_finish`
+        turns those into the upper tree.
+
+        Local dispatch is a plain jitted scatter (slots are pre-deduped,
+        so the batched scatter is bitwise equal to ``bucket`` sequential
+        single-row scatters — pure data movement).  On a mesh the writes
+        run inside an EXPLICIT shard_map as a STATIC unroll of owner
+        writes — the owner shard folds each (replicated) row into its
+        local slice, later writes winning, and the roots are all-gathered
+        once (tiny: one summary row per slot, not the slot bodies), so
+        only the touched shards' slices change and nothing moves through
+        the host.  shard_map rather than the SPMD partitioner is
+        load-bearing: jit-of-scatter on a (replica x data) mesh lets the
+        partitioner psum the replicated row operand over the replica
+        axis, silently DOUBLING every slot (the same hazard
         `ShardedDispatcher._smap` documents for concat)."""
         geom = self.geometry
         disp = self.engine.dispatch
@@ -276,11 +514,9 @@ class LiveRepository:
                     ds_sigs[:B_pad], ds_valid[:B_pad])
 
         if specs is None:
-            def scatter(repo, slot, row, sig, valid):
-                ds_index = jax.tree.map(lambda a, r: a.at[slot].set(r),
-                                        repo.ds_index, row)
-                ds_sigs = repo.ds_sigs.at[slot].set(sig)
-                ds_valid = repo.ds_valid.at[slot].set(valid)
+            def scatter(repo, slots, rows, sigs, valids):
+                ds_index, ds_sigs, ds_valid = repo_mutate.scatter_slots(
+                    repo, slots, rows, sigs, valids)
                 return (ds_index, ds_sigs, ds_valid,
                         roots_of(ds_index, ds_sigs, ds_valid))
             stage = jax.jit(scatter)
@@ -289,19 +525,24 @@ class LiveRepository:
             from repro.core.distributed import _shard_map
             axis = disp.axis
 
-            def local(repo_s, slot, row, sig, valid):
+            def local(repo_s, slots, rows, sigs, valids):
                 shard = repo_s.ds_valid.shape[0]
                 me = jax.lax.axis_index(axis)
-                lid = slot - me * shard
-                owns = (lid >= 0) & (lid < shard)
-                lidc = jnp.clip(lid, 0, shard - 1)
+                ds_index = repo_s.ds_index
+                ds_sigs = repo_s.ds_sigs
+                ds_valid = repo_s.ds_valid
+                for i in range(bucket):
+                    lid = slots[i] - me * shard
+                    owns = (lid >= 0) & (lid < shard)
+                    lidc = jnp.clip(lid, 0, shard - 1)
 
-                def wr(a, r):
-                    return a.at[lidc].set(jnp.where(owns, r, a[lidc]))
+                    def wr(a, r):
+                        return a.at[lidc].set(jnp.where(owns, r, a[lidc]))
 
-                ds_index = jax.tree.map(wr, repo_s.ds_index, row)
-                ds_sigs = wr(repo_s.ds_sigs, sig)
-                ds_valid = wr(repo_s.ds_valid, valid)
+                    ds_index = jax.tree.map(
+                        wr, ds_index, jax.tree.map(lambda x: x[i], rows))
+                    ds_sigs = wr(ds_sigs, sigs[i])
+                    ds_valid = wr(ds_valid, valids[i])
 
                 def gat(x):
                     # physical slot order == shard-major order, so the
@@ -323,42 +564,24 @@ class LiveRepository:
                            (P(), P(), P(), P(), P(), P())),
                 check_vma=False))
 
-        def fn(repo, slot, row, sig, valid):
-            ds_index, ds_sigs, ds_valid, roots = stage(repo, slot, row,
-                                                       sig, valid)
+        def fn(repo, slots, rows, sigs, valids):
+            ds_index, ds_sigs, ds_valid, roots = stage(repo, slots, rows,
+                                                       sigs, valids)
             return self._finish(repo, ds_index, ds_sigs, ds_valid, roots,
                                 geom)
 
         return fn
 
-    def _write(self, slot: int, points, *, valid: bool) -> None:
-        if points is None:
-            row, sig = self._zero_row
-        else:
-            geom = self.geometry
-            # the ONLY host->device traffic a mutation pays: the padded
-            # points + validity of the one new dataset
-            self.bytes_uploaded += (
-                geom.point_capacity * (4 * geom.dim + 1))
-            # the canonical batch-of-1 row pipeline — the same shared
-            # executables the frozen oracle uses (bit-identity by
-            # construction, see core/repo_mutate)
-            rows, sigs = repo_mutate.build_row(points, geom)
-            row = jax.tree.map(lambda x: x[0], rows)
-            sig = sigs[0]
-        new_repo = self._updater(self.repo, jnp.asarray(slot, jnp.int32),
-                                 row, sig, jnp.asarray(valid, bool))
-        self.mutations += 1
-        self._publish(new_repo, touched=(slot,))
-
-    def _grow(self) -> None:
+    def _grow(self, push_free: bool = True) -> None:
         """Double the slot tier: zeros appended ON DEVICE (shard-aligned,
         no host upload), dispatcher layout constants refreshed, layout
         epoch bumped (executables closing over the old slot count are
         retired), and the grown state published as its own data epoch —
         dataset-op result rows change width with the slot axis, so they
         must retire too (per-slot point-op entries survive: no slot's
-        contents changed)."""
+        contents changed).  ``push_free=False`` materializes a tier the
+        prepare stage already reserved virtually (its ids are on the
+        free list or held by prepared ingests)."""
         old_n = self.geometry.n_slots
         geom = self.geometry.grown()
         disp = self.engine.dispatch
@@ -380,14 +603,17 @@ class LiveRepository:
         self.geometry = geom
         self.slot_epochs = np.concatenate(
             [self.slot_epochs, np.zeros(geom.n_slots - old_n, np.int64)])
-        for s in range(old_n, geom.n_slots):
-            heapq.heappush(self._free, s)
+        if push_free:
+            for s in range(old_n, geom.n_slots):
+                heapq.heappush(self._free, s)
+        else:
+            self._grows_pending = max(0, self._grows_pending - 1)
         disp.n_slots = geom.n_slots
         if hasattr(disp, "shard_slots"):
             disp.n_slots_sharded = n_phys
             disp.shard_slots = n_phys // n_shards
         disp.repo_epoch = getattr(disp, "repo_epoch", 0) + 1
-        self._updater = self._make_updater()
+        self._updaters = {}
         self._publish(grown, touched=())
 
     def _grow_sharded(self, geom, n_phys: int) -> Repository:
@@ -453,4 +679,8 @@ class LiveRepository:
         self.epoch += 1
         for s in touched:
             self.slot_epochs[s] = self.epoch
-        self.engine.set_repo_epoch(self.epoch, self.slot_epochs)
+        # `touched` makes the sweep precise: point-op entries for
+        # untouched slots survive the publish (one sweep per coalesced
+        # group, not per mutation)
+        self.engine.set_repo_epoch(self.epoch, self.slot_epochs,
+                                   touched=touched)

@@ -47,7 +47,7 @@ import argparse
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -269,6 +269,17 @@ class SearchServer:
         self._queue: "queue.Queue[Request | Mutation | None]" = queue.Queue()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._running = False
+        # lazy 1-worker pool for the prepare stage of the NEXT mutation
+        # run — overlapped with the current query segment (the segment
+        # serves the immutable pre-mutation snapshot, so the concurrent
+        # row builds are invisible to it)
+        self._prep_pool: ThreadPoolExecutor | None = None
+        self._segment_span = (0.0, 0.0)
+        # first request seen past a mutation run: carried to the next
+        # drain so a publish always lands at a drain TAIL and never
+        # splits one query segment into two engine calls (stream order
+        # is untouched — drain boundaries are free choices)
+        self._carry: Request | Mutation | None = None
 
     # -- client API --------------------------------------------------------
 
@@ -335,7 +346,12 @@ class SearchServer:
         self._running = False
         self._queue.put(None)          # wake the dispatcher
         self._thread.join(timeout=30)
-        # fail anything still queued so no client Future hangs forever
+        # fail anything still queued (or carried between drains) so no
+        # client Future hangs forever
+        if self._carry is not None and not self._carry.future.done():
+            self._carry.future.set_exception(
+                RuntimeError("server stopped before request ran"))
+        self._carry = None
         while True:
             try:
                 req = self._queue.get_nowait()
@@ -344,6 +360,9 @@ class SearchServer:
             if req is not None and not req.future.done():
                 req.future.set_exception(
                     RuntimeError("server stopped before request ran"))
+        if self._prep_pool is not None:
+            self._prep_pool.shutdown(wait=True)
+            self._prep_pool = None
 
     # -- dispatcher --------------------------------------------------------
 
@@ -367,13 +386,24 @@ class SearchServer:
         straggler windows that renew on every arrival, and a drain
         bound that scales to OVERFILL x max_batch under deep backlog),
         fixed max_wait deadline up to max_batch when static (the seed
-        policy)."""
-        try:
-            first = self._queue.get(timeout=0.1)
-        except queue.Empty:
-            return []
-        if first is None:
-            return []
+        policy).
+
+        A drain closes at the first mutation->query transition (the
+        query is carried to the next drain): each drain is then at most
+        one query segment plus one tail run of mutations, so the
+        per-segment planning/dispatch floor is paid once per drain —
+        splitting a segment in two costs ~a full extra group floor,
+        which under churn was most of the serving collapse."""
+        if self._carry is not None:
+            first = self._carry
+            self._carry = None
+        else:
+            try:
+                first = self._queue.get(timeout=0.1)
+            except queue.Empty:
+                return []
+            if first is None:
+                return []
         batch = [first]
         if self.adaptive:
             # depth-scaled bound: when the backlog already exceeds
@@ -402,12 +432,35 @@ class SearchServer:
                         break
                 if req is None:
                     break
+                if (isinstance(batch[-1], Mutation)
+                        and not isinstance(req, Mutation)):
+                    self._carry = req
+                    break
                 batch.append(req)
                 # every arrival renews the straggler budget: the batch
                 # keeps growing while traffic flows and ships the moment
                 # one full window passes with no arrival (total wait is
                 # bounded by max_batch renewals of <= max_wait each)
                 waited = False
+            # absorb a contiguous run of mutations sitting just past
+            # the drain bound (the first non-mutation after them is
+            # carried): their publish then rides THIS drain's tail and
+            # their prepare overlaps THIS drain's query segment,
+            # instead of opening the next drain with nothing to hide
+            # the row builds under
+            if not isinstance(batch[-1], Mutation) and self._carry is None:
+                while True:
+                    try:
+                        req = self._queue.get_nowait()
+                    except queue.Empty:
+                        break
+                    if req is None:
+                        break
+                    if isinstance(req, Mutation):
+                        batch.append(req)
+                        continue
+                    self._carry = req
+                    break
             return batch
         deadline = self.clock() + self.max_wait
         while len(batch) < self.max_batch:
@@ -418,17 +471,60 @@ class SearchServer:
                 break
             if req is None:
                 break
+            if (isinstance(batch[-1], Mutation)
+                    and not isinstance(req, Mutation)):
+                self._carry = req
+                break
             batch.append(req)
         return batch
 
-    def _apply_mutation(self, mut: Mutation):
-        if mut.op == "ingest":
-            return self.live.ingest(mut.points)
-        if mut.op == "delete":
-            self.live.delete(mut.ds_id)
-            return None
-        self.live.replace(mut.ds_id, mut.points)
-        return mut.ds_id
+    def _prepare_ahead(self, muts: list[Mutation]):
+        """Kick off the prepare stage (row builds + payload uploads) of
+        the next mutation run on the side pool, to overlap with the
+        query segment the dispatcher is about to serve.  Safe because
+        prepare touches nothing a query observes, and the previous
+        group's publish already happened (runs are consumed in stream
+        order within one drain)."""
+        if self._prep_pool is None:
+            self._prep_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="mutation-prepare")
+
+        def work():
+            t0 = self.clock()
+            group = self.live.prepare_group(
+                [(m.op, m.ds_id, m.points) for m in muts])
+            return group, t0, self.clock()
+
+        return self._prep_pool.submit(work)
+
+    def _publish_run(self, muts: list[Mutation], prepared) -> None:
+        """Install one coalesced run of consecutive mutations: join (or
+        run inline) its prepare, book the wall time it hid under the
+        preceding query segment, publish the whole group as ONE epoch,
+        and resolve every mutation future from the per-item outcomes."""
+        if prepared is not None:
+            group, tp0, tp1 = prepared.result()
+            s0, s1 = self._segment_span
+            self.engine.stats.prepare_overlap_seconds += max(
+                0.0, min(tp1, s1) - max(tp0, s0))
+        else:
+            group = self.live.prepare_group(
+                [(m.op, m.ds_id, m.points) for m in muts])
+        try:
+            outcomes = self.live.publish_group(group)
+        except Exception as e:
+            for m in muts:
+                if not m.future.done():
+                    m.future.set_exception(e)
+            return
+        now = self.clock()
+        for m, out in zip(muts, outcomes):
+            if isinstance(out, Exception):
+                if not m.future.done():
+                    m.future.set_exception(out)
+            else:
+                self.stats.record_mutation(now - m.t_submit)
+                m.future.set_result(out)
 
     def _serve_segment(self, segment: list[Request]) -> None:
         """One declarative engine call for a (sub-)drain of queries: the
@@ -474,28 +570,32 @@ class SearchServer:
             batch = self._drain()
             if not batch:
                 continue
-            # split the drain into query segments at mutation boundaries:
-            # each segment is one declarative engine call against the
-            # epoch current at ITS point in the stream, and mutations
-            # publish in submission order between segments
-            segment: list[Request] = []
+            # partition the drain into alternating runs of queries and
+            # mutations: each query run is one declarative engine call
+            # against the epoch current at ITS point in the stream, and
+            # each MUTATION run coalesces into one prepared group whose
+            # prepare stage overlaps the query segment just before it
+            # (late-bound dispatch keeps that segment on the immutable
+            # pre-publish snapshot) and whose publish is a single epoch
+            # at the run's stream position
+            runs: list[tuple[bool, list]] = []
             for item in batch:
-                if not isinstance(item, Mutation):
-                    segment.append(item)
-                    continue
-                if segment:
-                    self._serve_segment(segment)
-                    segment = []
-                try:
-                    out = self._apply_mutation(item)
-                except Exception as e:
-                    if not item.future.done():
-                        item.future.set_exception(e)
+                is_mut = isinstance(item, Mutation)
+                if runs and runs[-1][0] == is_mut:
+                    runs[-1][1].append(item)
                 else:
-                    self.stats.record_mutation(self.clock() - item.t_submit)
-                    item.future.set_result(out)
-            if segment:
-                self._serve_segment(segment)
+                    runs.append((is_mut, [item]))
+            prepared = None
+            for i, (is_mut, items) in enumerate(runs):
+                if is_mut:
+                    self._publish_run(items, prepared)
+                    prepared = None
+                    continue
+                if i + 1 < len(runs) and runs[i + 1][0]:
+                    prepared = self._prepare_ahead(runs[i + 1][1])
+                t0 = self.clock()
+                self._serve_segment(items)
+                self._segment_span = (t0, self.clock())
 
 
 # ---------------------------------------------------------------------------
@@ -692,13 +792,23 @@ def main(argv=None):
         # warm the MUTATION path too: an ingest (which may trigger a
         # tier growth — compiling the growth executables here, outside
         # the measured window), a replace and a delete compile the
-        # row-build stages and both updater variants; the probe slot is
-        # deleted again so the measured stream starts from the live set
-        # its id discipline expects
+        # row-build stages and the group-of-1 updater; then coalesced
+        # groups of sizes {2, 4} compile the BATCHED publish buckets, so
+        # the first churn burst in the measured window pays no compile
+        # time.  Every probe slot is deleted again so the measured
+        # stream starts from the live set its id discipline expects.
         probe = (lake[0] + np.float32(0.25)).astype(np.float32)
         wid = live.ingest(probe)
         live.replace(wid, probe)
         live.delete(wid)
+        for width in (2, 4):
+            group = live.prepare_group(
+                [("ingest", None, probe + np.float32(i))
+                 for i in range(width)])
+            sids = live.publish_group(group)
+            cleanup = live.prepare_group(
+                [("delete", sid, None) for sid in sids])
+            live.publish_group(cleanup)
         live.bytes_uploaded = 0        # report the measured window only
     engine._result_cache.clear()
     server.stats = ServerStats()       # report the measured window only
@@ -707,6 +817,9 @@ def main(argv=None):
                            mutate_every=args.mutate_every)
     i0 = engine.stats.epoch_invalidations
     h0, m0 = engine.stats.cache_hits, engine.stats.cache_misses
+    p_n0 = len(engine.stats.publish_seconds)
+    mc0 = engine.stats.mutations_coalesced
+    ov0 = engine.stats.prepare_overlap_seconds
     t0 = time.perf_counter()
     futures = [
         (server.submit_mutation(op, **payload) if op in MUTATION_OPS
@@ -732,6 +845,9 @@ def main(argv=None):
           f"{engine.stats.cache_misses - m0}), pipelines: "
           f"{engine.stats.pipeline_stage1}")
     if live is not None:
+        pub = np.asarray(engine.stats.publish_seconds[p_n0:], np.float64)
+        pub_p50 = 1e3 * float(np.percentile(pub, 50)) if pub.size else 0.0
+        pub_p99 = 1e3 * float(np.percentile(pub, 99)) if pub.size else 0.0
         print(f"[serve_search] mutation lane: {server.stats.mutations} "
               f"applied, mean {server.stats.mean_mutation_ms:.1f} ms; "
               f"epoch {live.epoch} "
@@ -739,6 +855,11 @@ def main(argv=None):
               f"{engine.stats.epoch_invalidations - i0} cached rows retired, "
               f"{live.bytes_uploaded} bytes uploaded, "
               f"{live.n_slots} slots ({len(live.live_ids)} live)")
+        print(f"[serve_search] publish pipeline: {pub.size} publishes "
+              f"(p50 {pub_p50:.1f} / p99 {pub_p99:.1f} ms), "
+              f"{engine.stats.mutations_coalesced - mc0} coalesced, "
+              f"{engine.stats.prepare_overlap_seconds - ov0:.3f} s of "
+              f"prepare hidden under serving")
     return server.stats
 
 

@@ -334,6 +334,66 @@ def test_point_capacity_headroom_admits_larger_ingests():
     check_bit_identity(live)
 
 
+def test_failed_prepare_returns_reserved_slot(monkeypatch):
+    """A prepare that fails AFTER reserving a slot (poisoned payload
+    blowing up mid-row-build) must put the slot back: the free list is
+    never half-reserved, no bytes are booked, and the next ingest reuses
+    the same slot."""
+    ds = make_datasets(3, seed=15)
+    live = LiveRepository(ds, leaf_capacity=8)
+    free0 = sorted(live._free)
+    bytes0 = live.bytes_uploaded
+    epoch0 = live.epoch
+
+    def poisoned(points, geom):
+        raise RuntimeError("poisoned payload")
+
+    monkeypatch.setattr(repo_mutate, "build_row", poisoned)
+    with pytest.raises(RuntimeError):
+        live.ingest(ds[0])
+    group = live.prepare_group([("ingest", None, ds[0])])
+    assert isinstance(group.items[0].error, RuntimeError)
+    monkeypatch.undo()
+
+    # nothing half-reserved, nothing published, nothing booked
+    assert sorted(live._free) == free0
+    assert live.bytes_uploaded == bytes0
+    assert live.epoch == epoch0
+    # the next ingest reuses the slot the failed prepares gave back
+    sid = live.ingest(make_datasets(1, seed=16)[0])
+    assert sid == free0[0]
+    check_bit_identity(live)
+
+
+def test_abort_group_returns_all_reservations():
+    """abort_group on a prepared-but-unpublished group frees EVERY
+    ingest reservation (subsequent ingests reuse the slots, smallest
+    first) and the group can never publish afterwards."""
+    ds = make_datasets(3, seed=17)
+    live = LiveRepository(ds, leaf_capacity=8)
+    free0 = sorted(live._free)
+    epoch0 = live.epoch
+    extra = make_datasets(3, seed=18)
+
+    group = live.prepare_group([("ingest", None, extra[0]),
+                                ("ingest", None, extra[1]),
+                                ("replace", 0, extra[2])])
+    assert [p.slot for p in group.items[:2]] == free0[:2]
+    live.abort_group(group)
+    with pytest.raises(RuntimeError):
+        live.publish_group(group)
+    with pytest.raises(RuntimeError):
+        live.abort_group(group)
+
+    assert sorted(live._free) == free0
+    assert live.epoch == epoch0              # nothing published
+    assert live.live_ids == {0, 1, 2}
+    a = live.ingest(extra[0])
+    b = live.ingest(extra[1])
+    assert [a, b] == free0[:2]               # reservations were reusable
+    check_bit_identity(live)
+
+
 # -- mesh dispatchers (subprocess-or-inprocess via conftest) ----------------
 
 

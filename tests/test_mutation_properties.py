@@ -152,6 +152,195 @@ else:
         _run_interleaving(seed)
 
 
+# -- concurrent-prepare model (two-stage pipeline) --------------------------
+#
+# The serving scheduler prepares the NEXT mutation run while the current
+# query segment is in flight, then publishes the whole run as one epoch.
+# This model replays that interleaving DETERMINISTICALLY (no threads, no
+# sleeps): for every round a random N-mutation run is prepared first,
+# queries are served with the prepared-but-unpublished group in flight —
+# they must still see the pre-publish snapshot bit-exactly — and only
+# then does the group publish, landing all N mutations at ONE stream
+# position / data epoch.
+
+
+def _mk_group_specs(rng, model, n):
+    """A random run of n mutations, sequentially valid as a group: the
+    view tracks in-group deletes so no later item targets a dead id."""
+    specs, view = [], set(model)
+    for _ in range(n):
+        kind = int(rng.integers(0, 3))
+        if kind == 0 or len(view) <= 1:
+            specs.append(("ingest", None, _mk_dataset(rng)))
+        elif kind == 1:
+            sid = int(rng.choice(sorted(view)))
+            view.discard(sid)
+            specs.append(("delete", sid, None))
+        else:
+            specs.append(("replace", int(rng.choice(sorted(view))),
+                          _mk_dataset(rng)))
+    return specs
+
+
+def _run_concurrent_prepare(seed: int, mesh=None, rounds: int = 8,
+                            checkpoints=(2, 5)):
+    rng = np.random.default_rng(seed)
+    init = [_mk_dataset(rng) for _ in range(N_INIT)]
+    live = LiveRepository(init, mesh=mesh, leaf_capacity=LEAF,
+                          point_capacity=POINT_CAP, result_cache_size=64)
+    model = {j: init[j] for j in range(N_INIT)}
+    disp = live.engine.dispatch
+
+    for rnd in range(rounds):
+        specs = _mk_group_specs(rng, model, int(rng.integers(1, 5)))
+        epoch0 = live.epoch
+        layout0 = getattr(disp, "repo_epoch", 0)
+        mc0 = live.engine.stats.mutations_coalesced
+
+        group = live.prepare_group(specs)
+        assert all(p.error is None for p in group.items)
+        # prepare is INVISIBLE: epoch, live set, and every query answer
+        # still belong to the pre-publish stream position
+        assert live.epoch == epoch0
+        assert live.live_ids == set(model)
+        if rnd in checkpoints:
+            check_bit_identity(live, mesh=mesh, leaf_capacity=LEAF)
+        else:
+            live.search(_mixed_batch(rng, live.live_ids))
+
+        outcomes = live.publish_group(group)
+        for (op, ds_id, pts), out in zip(specs, outcomes):
+            assert not isinstance(out, Exception)
+            if op == "ingest":
+                assert out not in model       # a freed or fresh slot
+                model[out] = pts
+            elif op == "delete":
+                assert out is None
+                del model[ds_id]
+            else:
+                assert out == ds_id
+                model[ds_id] = pts
+        # the whole run lands at ONE data epoch (plus one per tier
+        # growth the prepare stage reserved virtually), and every
+        # mutation beyond the first is booked as coalesced
+        grows = getattr(disp, "repo_epoch", 0) - layout0
+        assert live.epoch == epoch0 + 1 + grows
+        assert live.engine.stats.mutations_coalesced == mc0 + len(specs) - 1
+        assert live.live_ids == set(model)
+        s = live.stats
+        assert s.cache_hits + s.cache_misses == s.dispatches
+        for j in range(live.n_slots):
+            assert (live._slot_data.get(j) is None) == (model.get(j) is None)
+
+    check_bit_identity(live, mesh=mesh, leaf_capacity=LEAF)
+    return live
+
+
+if not USE_SEEDED:
+    @given(seed=st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=6, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_concurrent_prepare_matches_stream_position(seed):
+        _run_concurrent_prepare(seed)
+
+else:
+    @pytest.mark.parametrize("seed", range(6))
+    def test_concurrent_prepare_matches_stream_position(seed):
+        _run_concurrent_prepare(seed)
+
+
+def test_server_coalesced_runs_fake_clock():
+    """The full scheduler under an INJECTABLE clock (virtual seconds, no
+    sleeps): a pre-filled drain [queries, M, M, queries, M, queries]
+    must answer every segment at its stream position while the adjacent
+    mutation pair coalesces into one publish whose prepare overlapped
+    the preceding segment — and the overlap/publish accounting comes out
+    of the fake clock, not wall time."""
+    from repro.launch.serve_search import Mutation, SearchServer
+
+    class _TickClock:
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            self.t += 1.0
+            return self.t
+
+    rng = np.random.default_rng(17)
+    tick = _TickClock()
+    init = [_mk_dataset(rng) for _ in range(N_INIT)]
+    live = LiveRepository(init, leaf_capacity=LEAF, clock=tick,
+                          point_capacity=POINT_CAP, result_cache_size=64)
+    model = {j: init[j] for j in range(N_INIT)}
+
+    from repro.launch.serve_search import Request
+
+    def seg():
+        # point-op targets avoid the to-be-deleted id so every segment
+        # is valid at (and after) its stream position
+        q = _mixed_batch(rng, set(model) - {2})
+        return [Request(x.op, x, t_submit=0.0) for x in q]
+
+    d0, d1 = _mk_dataset(rng), _mk_dataset(rng)
+    segs = [seg(), seg(), seg()]
+    muts = [Mutation("ingest", points=d0, t_submit=0.0),
+            Mutation("replace", ds_id=1, points=d1, t_submit=0.0),
+            Mutation("delete", ds_id=2, t_submit=0.0)]
+    server = SearchServer(live=live, max_batch=64, max_wait_ms=250.0,
+                          clock=tick)
+    for item in (*segs[0], muts[0], muts[1], *segs[1], muts[2], *segs[2]):
+        server._queue.put(item)
+    server.start()
+    try:
+        got = [[r.future.result(timeout=600) for r in s] for s in segs]
+        sid = muts[0].future.result(timeout=600)
+        assert muts[1].future.result(timeout=600) == 1
+        assert muts[2].future.result(timeout=600) is None
+    finally:
+        server.stop()
+
+    # run [ingest, replace] coalesced -> one epoch; delete alone -> one
+    assert live.epoch == 2
+    assert live.engine.stats.mutations_coalesced == 1
+    assert len(live.engine.stats.publish_seconds) == 2
+    assert server.stats.mutations == 3
+    # every duration was measured on the virtual clock: publishes and
+    # the overlap window are whole (positive) ticks
+    assert all(t >= 1.0 for t in live.engine.stats.publish_seconds)
+    assert live.engine.stats.prepare_overlap_seconds >= 0.0
+    assert all(t >= 1.0 for t in server.stats.mutation_latencies)
+
+    # segment answers match the frozen oracle at each stream position
+    from repro.core import repo_mutate
+    from repro.engine import QueryEngine
+    states = [dict(model)]
+    model[sid] = d0
+    model[1] = d1
+    states.append(dict(model))
+    del model[2]
+    states.append(dict(model))
+    assert live.live_ids == set(model)
+    from repro.launch.serve_search import _legacy_result
+    for want_state, s, res in zip(states, segs, got):
+        slots = [want_state.get(j) for j in range(live.n_slots)]
+        cold = QueryEngine(repo_mutate.build_frozen(slots, live.geometry),
+                           leaf_capacity=LEAF)
+        want = cold.search([r.query for r in s])
+        for a, b in zip(res, want):
+            for x, y in zip(_leaves(a), _leaves(_legacy_result(b))):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _leaves(res):
+    """Flatten a search result (array or tuple of arrays) to arrays."""
+    if isinstance(res, tuple):
+        out = []
+        for x in res:
+            out.extend(_leaves(x))
+        return out
+    return [res]
+
+
 def _check_mesh_interleaving(mesh, n_devices):
     import jax
 
@@ -186,3 +375,30 @@ def test_mutation_interleaving_sharded():
 def test_mutation_interleaving_replicated():
     dispatch_device_check("test_mutation_properties",
                           "check_mutation_props_replicated", devices=8)
+
+
+# the coalesced (bucket > 1) owner-write updater under both mesh shapes:
+# the concurrent-prepare model drives groups of up to 4 through the
+# batched shard_map scatter and asserts the same bit-identity bar
+
+
+def check_concurrent_prepare_sharded():
+    from repro.engine import data_mesh
+    _run_concurrent_prepare(5, mesh=data_mesh(3), rounds=6,
+                            checkpoints=(2,))
+
+
+def check_concurrent_prepare_replicated():
+    from repro.engine import replica_mesh
+    _run_concurrent_prepare(5, mesh=replica_mesh(2, 4), rounds=6,
+                            checkpoints=(2,))
+
+
+def test_concurrent_prepare_sharded():
+    dispatch_device_check("test_mutation_properties",
+                          "check_concurrent_prepare_sharded", devices=3)
+
+
+def test_concurrent_prepare_replicated():
+    dispatch_device_check("test_mutation_properties",
+                          "check_concurrent_prepare_replicated", devices=8)

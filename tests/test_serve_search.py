@@ -350,9 +350,14 @@ def test_live_interleaved_mutation_drain():
     finally:
         server.stop()
 
-    assert live.epoch == 3
+    # the adjacent ingest+delete COALESCE into one publish (one epoch);
+    # the replace, separated by queries, publishes alone — so 3 applied
+    # mutations produce 2 data epochs and exactly 1 coalesced mutation
+    assert live.epoch == 2
     assert server.stats.mutations == 3
     assert server.stats.mutation_latencies[0] >= 0.0
+    assert live.engine.stats.mutations_coalesced == 1
+    assert len(live.engine.stats.publish_seconds) == 2
 
     # frozen equivalents of the repository at each segment's position
     slots0 = list(datasets) + [None] * (n_slots - len(datasets))
