@@ -41,6 +41,13 @@ composition it replaced in ExactHaus phases 0/1 (B in {1, 8, 32}) — and
 window vs the seed's static max-wait window (QPS + p50/p99 at low and
 saturating load).
 
+``--join-sweep`` runs the joinable-op mode on its own record
+(``BENCH_engine_join.json``): batched ``topk_overlap`` / ``topk_coverage``
+QPS at batch 1..32 vs the per-query dispatch loop, the bound-phase pruned
+fraction per row, and a PRE-FILLED saturating serving segment mixing
+joinable queries with dataset→dataset re-rank pipelines (see
+``bench_join_sweep``).
+
 ``--replica-sweep`` runs a third mode on its own record
 (``BENCH_engine_replica.json``): the ReplicatedQueryEngine over R x D
 (replica x data) meshes at fixed D — saturated serving QPS plus the
@@ -785,6 +792,133 @@ def bench_mutation_sweep(lake, k, *, repeats, max_batch=None):
     }
 
 
+JOIN_BATCHES = (1, 2, 4, 8, 16, 32)
+JOIN_Q_POINTS = 64
+JOIN_CHUNK = 16
+
+
+def bench_join_sweep(repo, lake, k, *, repeats, max_batch=None):
+    """Joinable dataset search: batched QPS + bound-phase pruning.
+
+    For each joinable op (``topk_overlap`` / ``topk_coverage``), batch
+    1..32 query point sets answered as ONE `engine.search` call each
+    (bound phase + shared-order chunked refine in a single dispatch),
+    against the per-query dispatch loop baseline.  Every row also
+    records the refine-loop work actually done: the mean bound-phase
+    pruned fraction (1 - exact evaluations / valid slots) — the Eq.-4
+    bound family earning its keep on the joinable ops.
+
+    A serving segment rides along: a PRE-FILLED saturating queue (the
+    whole burst visible to the first drain — in-flight feeding would
+    measure the feeder) of joinable queries mixed with dataset→dataset
+    pipeline requests (top-k IA winners re-ranked by overlap), drained
+    through `SearchServer` / the single mixed `engine.search` path.
+    """
+    from repro.engine import Pipeline, Query
+    from repro.launch.serve_search import Request, SearchServer, _to_query
+
+    batches = [b for b in JOIN_BATCHES
+               if max_batch is None or b <= max_batch]
+    n_pool = max(batches)
+    engine = QueryEngine(repo, result_cache_size=0,
+                         default_chunk=JOIN_CHUNK)
+    n_valid = int(np.asarray(repo.ds_valid).sum())
+    qsets = [np.asarray(lake[i % len(lake)][:JOIN_Q_POINTS], np.float32)
+             for i in range(n_pool)]
+
+    rec = {
+        "method": ("engine.search batches of B joinable queries (one "
+                   "bound+refine dispatch) vs a per-query dispatch "
+                   "loop; pruned fraction = 1 - exact evaluations / "
+                   f"valid slots, refine chunk {JOIN_CHUNK}"),
+        "k": k,
+        "n_valid": n_valid,
+        "chunk": JOIN_CHUNK,
+        "ops": {},
+    }
+    for op in ("topk_overlap", "topk_coverage"):
+        def one(i, op=op):
+            return engine.search([Query(op=op, q=qsets[i % n_pool], k=k)])
+
+        n_base = min(n_pool, 8)
+        t = _time(lambda: [one(i) for i in range(n_base)],
+                  repeats=max(2, repeats // 2))
+        baseline_qps = n_base / t
+
+        rows = []
+        for b in batches:
+            qs = [Query(op=op, q=qsets[i], k=k) for i in range(b)]
+            res_box = {}
+
+            def run(qs=qs, res_box=res_box):
+                res_box["res"] = engine.search(qs)
+                return res_box["res"][0].vals
+
+            tb = _time_best(run, repeats=repeats)
+            stats = [r.stats for r in res_box["res"]]
+            pruned = sum(s.pruned_fraction for s in stats) / len(stats)
+            rows.append({
+                "batch": b,
+                "seconds_per_batch": tb,
+                "qps": b / tb,
+                "speedup_vs_loop": (b / tb) / baseline_qps,
+                "pruned_fraction": pruned,
+                "evaluated_mean": (sum(s.exact_evaluations for s in stats)
+                                   / len(stats)),
+            })
+        rec["ops"][op] = {
+            "baseline_qps": baseline_qps,
+            "baseline_loop_size": n_base,
+            "batches": rows,
+        }
+
+    # serving segment: pre-filled saturating queue of joinable +
+    # dataset→dataset pipeline requests through the mixed search() drain
+    n_req = 4 * max(batches)
+    reqs = []
+    for i in range(n_req):
+        q = qsets[i % n_pool]
+        kind = i % 3
+        if kind == 0:
+            reqs.append(("topk_overlap", dict(q=q, k=k)))
+        elif kind == 1:
+            reqs.append(("topk_coverage", dict(q=q, k=k)))
+        else:
+            c = q.mean(axis=0)
+            reqs.append(("pipeline", dict(
+                dataset=dict(op="topk_ia", r_lo=c - 10.0, r_hi=c + 10.0,
+                             k=min(8, n_valid)),
+                point=dict(op="topk_overlap", q=q, k=min(3, k)))))
+    serve_engine = QueryEngine(repo, result_cache_size=0,
+                               default_chunk=JOIN_CHUNK)
+
+    def serve_once():
+        server = SearchServer(serve_engine, max_batch=max(batches),
+                              max_wait_ms=2.0, adaptive=True)
+        items = [Request(op, _to_query(op, p)) for op, p in reqs]
+        for r in items:
+            server._queue.put(r)
+        t0 = time.perf_counter()
+        server.start()
+        try:
+            for r in items:
+                r.future.result(timeout=600)
+            dt = time.perf_counter() - t0
+        finally:
+            server.stop()
+        return {"qps": n_req / dt, "p50_ms": server.stats.p50_ms,
+                "p99_ms": server.stats.p99_ms,
+                "mean_batch": server.stats.mean_batch}
+
+    serve_once()                             # warm the bucket ladder
+    rec["serving"] = max((serve_once() for _ in range(2)),
+                         key=lambda r: r["qps"])
+    rec["serving"]["n_requests"] = n_req
+    rec["serving"]["mix"] = ("1/3 topk_overlap, 1/3 topk_coverage, "
+                             "1/3 IA->overlap rerank pipeline")
+    return rec
+
+
 def bench_exacthaus(repo, qi, k, repeats):
     """Sharded ExactHaus: single-query latency + per-device resident
     repository bytes at 1/3/8 shards (clipped to the available devices).
@@ -918,12 +1052,18 @@ def main(argv=None):
                          "(saturated mixed serving with and without a "
                          "background ingest/replace/delete stream) "
                          "-> BENCH_engine_live.json")
+    ap.add_argument("--join-sweep", action="store_true",
+                    help="run ONLY the joinable-op benchmark (batched "
+                         "overlap/coverage QPS + bound-phase pruned "
+                         "fraction + a pre-filled mixed serving segment) "
+                         "-> BENCH_engine_join.json")
     args = ap.parse_args(argv)
     if args.max_batch is not None:
         global BATCHES
         BATCHES = tuple(b for b in BATCHES if b <= args.max_batch)
     if args.out is None:
         args.out = ("BENCH_engine_live.json" if args.mutation_sweep
+                    else "BENCH_engine_join.json" if args.join_sweep
                     else "BENCH_engine_replica.json" if args.replica_sweep
                     else "BENCH_engine_sharded.json" if args.sharded
                     else "BENCH_engine.json")
@@ -960,6 +1100,37 @@ def main(argv=None):
         return rec
     repo, info = build_repository(lake, leaf_capacity=16, theta=5,
                                   remove_outliers=False)
+
+    if args.join_sweep:
+        rec = {
+            "bench": "engine_join",
+            "n_datasets": args.datasets,
+            "n_devices": jax.device_count(),
+            # k=5: the 10th-best join score of a 64-point trajectory probe
+            # is typically 0 (few walks cross it), which pins tau at 0 and
+            # disables pruning entirely; at k=5 tau is positive and the
+            # bound phase actually earns its keep
+            "join_sweep": bench_join_sweep(
+                repo, lake, 5, repeats=max(2, args.repeats // 2),
+                max_batch=args.max_batch),
+        }
+        js = rec["join_sweep"]
+        top = {op: js["ops"][op]["batches"][-1] for op in js["ops"]}
+        summary = {
+            "n_valid": js["n_valid"],
+            "qps_top_batch": {op: round(row["qps"], 1)
+                              for op, row in top.items()},
+            "speedup_top_batch": {op: round(row["speedup_vs_loop"], 2)
+                                  for op, row in top.items()},
+            "pruned_fraction": {op: round(row["pruned_fraction"], 3)
+                                for op, row in top.items()},
+            "serving_qps": round(js["serving"]["qps"], 1),
+            "serving_mean_batch": round(js["serving"]["mean_batch"], 2),
+        }
+        rec["summary"] = summary
+        Path(args.out).write_text(json.dumps(rec, indent=2))
+        print(json.dumps(summary, indent=2))
+        return rec
 
     if args.replica_sweep:
         eps = float(zorder.default_epsilon(repo.space_lo, repo.space_hi, 5))

@@ -19,6 +19,13 @@ ingest / delete / replace under a pinned cold-build geometry
 (`core/repo_mutate`), epoch-versioned result and executable caches, and
 bit-identity with a cold build of the equivalent frozen repository after
 any mutation sequence — on all three dispatchers.
+
+The JOINABLE op family (`core/join_search`) adds dataset->dataset search
+over the same resident repository: ``topk_overlap`` / ``topk_coverage``
+score every slot's grid-cell overlap (resp. point coverage) against a raw
+query point set, with a coarse-signature bound phase pruning slots before
+the exact fine-grid refine, and `Pipeline` accepts a joinable second
+stage that re-ranks stage-1 dataset winners by joinability.
 """
 from repro.engine.batched_ops import (  # noqa: F401
     nnp_pruned_batched,
@@ -27,6 +34,7 @@ from repro.engine.batched_ops import (  # noqa: F401
     topk_gbo_batched,
     topk_hausdorff_approx_batched,
     topk_ia_batched,
+    topk_join_batched,
 )
 from repro.engine.engine import (  # noqa: F401
     DEFAULT_BUCKETS,
@@ -38,6 +46,7 @@ from repro.engine.live import (  # noqa: F401
     LiveRepository,
 )
 from repro.engine.query import (  # noqa: F401
+    DATASET_RERANK_OPS,
     DATASET_TOPK_OPS,
     OPS,
     POINT_OPS,

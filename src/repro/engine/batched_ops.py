@@ -16,7 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import geometry, point_search, search
+from repro.core import geometry, join_search, point_search, search
 from repro.core.index import DatasetIndex
 from repro.core.repo_index import Repository
 from repro.kernels import ops
@@ -61,6 +61,20 @@ def topk_gbo_batched(repo: Repository, q_sigs: Array, k: int):
     vals, ids = jax.lax.top_k(counts, k)
     ids = jnp.where(vals < 0, -1, ids)
     return vals, ids
+
+
+def topk_join_batched(repo: Repository, q_pts: Array, q_val: Array, k: int,
+                      mode: str, chunk: int):
+    """Joinable top-k (grid overlap / coverage) for B raw query point sets:
+    coarse-signature bound phase, then the shared-order chunked exact
+    refine (see :mod:`repro.core.join_search`).  Returns
+    (vals (B, k), ids (B, k), nodes (B,), cand_after (B,), evaluated (B,))
+    with -1 sentinels past the valid / unpruned supply."""
+    exact, nodes, cand, evaluated = join_search.topk_join_scores(
+        repo, q_pts, q_val, k, mode, chunk)
+    vals, ids = jax.lax.top_k(exact, k)
+    ids = jnp.where(vals < 0, -1, ids)
+    return vals, ids, nodes, cand, evaluated
 
 
 # ---------------------------------------------------------------------------

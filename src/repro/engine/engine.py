@@ -66,7 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import index as index_lib
-from repro.core import point_search, search
+from repro.core import join_search, point_search, search
 from repro.core.build import pad_batch
 from repro.core.index import DatasetIndex
 from repro.core.repo_index import Repository
@@ -364,6 +364,25 @@ class LocalDispatcher:
 
     def build_nnp(self):
         return self._bind(batched_ops.nnp_pruned_batched)
+
+    def build_topk_overlap(self, k: int, chunk: int):
+        return self._bind(partial(batched_ops.topk_join_batched, k=k,
+                                  mode="overlap", chunk=chunk))
+
+    def build_topk_coverage(self, k: int, chunk: int):
+        return self._bind(partial(batched_ops.topk_join_batched, k=k,
+                                  mode="coverage", chunk=chunk))
+
+    def build_join_rerank(self, mode: str):
+        # dataset→dataset pipeline stage 2: row-wise exact join score of
+        # stage-1 winner slots (gathered by id on device) vs the query row
+        def impl(repo, ds_ids, q_pts, q_val):
+            d_pts = repo.ds_index.points[ds_ids]
+            d_val = repo.ds_index.valid[ds_ids]
+            return join_search.pair_scores(repo, d_pts, d_val,
+                                           q_pts, q_val, mode)
+
+        return self._bind(impl)
 
 
 class QueryEngine:
@@ -742,6 +761,68 @@ class QueryEngine:
         self.stats.count("topk_gbo", B, bucket, cached=cached)
         return vals[:B], ids[:B]
 
+    def _exec_topk_join(self, op: str, q_pts, q_val, k: int):
+        """Joinable top-k (``topk_overlap`` / ``topk_coverage``) for B raw
+        query point sets -> (vals (B, k), ids (B, k), list[SearchStats]).
+
+        Scores are exact integers, so cached rows replay bit-identically;
+        keys carry the repository epoch (the bound phase reads resident
+        coarse signatures and the refine reads resident points, so ANY
+        published mutation may change a row) — `set_repo_epoch` retires
+        them wholesale like every dataset-granularity op."""
+        q_pts = jnp.asarray(q_pts, jnp.float32)
+        q_val = jnp.asarray(q_val, bool)
+        if not self.result_cache_size:
+            return self._topk_join_dispatch(op, q_pts, q_val, k)
+        pts_np, val_np = np.asarray(q_pts), np.asarray(q_val)
+        keys = [(op, self._repo_epoch, k, _digest(pts_np[i], val_np[i]))
+                for i in range(pts_np.shape[0])]
+        return self._serve_cached(
+            op, keys,
+            lambda sel: self._topk_join_dispatch(
+                op, _take_rows(q_pts, sel), _take_rows(q_val, sel), k),
+            split=lambda raw: [(raw[0][i], raw[1][i], raw[2][i])
+                               for i in range(len(raw[2]))],
+            join=lambda rows: (jnp.stack([r[0] for r in rows]),
+                               jnp.stack([r[1] for r in rows]),
+                               [r[2] for r in rows]))
+
+    def _topk_join_dispatch(self, op: str, q_pts, q_val, k: int):
+        B = q_pts.shape[0]
+        bucket = self.bucket_for(B)
+        chunk = self.default_chunk
+        key = (op, bucket, q_pts.shape[1], k, chunk)
+        fn, cached = self._executable(
+            key, lambda: getattr(self.dispatch, "build_" + op)(k, chunk))
+        vals, ids, nodes, cand_after, evaluated = fn(
+            self._pad_rows(q_pts, bucket), self._pad_rows(q_val, bucket))
+        self.stats.count(op, B, bucket, cached=cached)
+        stats = join_search.join_stats_host(
+            self._n_valid, evaluated[:B], nodes[:B], cand_after[:B])
+        self.stats.record_search(op, stats)
+        return vals[:B], ids[:B], stats
+
+    def _exec_join_rerank(self, op: str, ds_ids, q_pts, q_val):
+        """Stage-2 dataset→dataset scoring: row-wise exact join score of
+        winner slot `ds_ids[t]` vs query row t -> (T,) int32 on device.
+
+        Like the point-stage executors, the device-resident id handoff
+        path skips the result cache (host keys would force a mid-pipeline
+        sync); the executable rides the bucket ladder as usual."""
+        mode = "overlap" if op == "topk_overlap" else "coverage"
+        T = ds_ids.shape[0]
+        bucket = self.bucket_for(T)
+        key = ("join_rerank", mode, bucket, q_pts.shape[1])
+        fn, cached = self._executable(
+            key, lambda: self.dispatch.build_join_rerank(mode))
+        scores = fn(self._pad_rows(jnp.asarray(ds_ids, jnp.int32), bucket),
+                    self._pad_rows(jnp.asarray(q_pts, jnp.float32), bucket),
+                    self._pad_rows(jnp.asarray(q_val, bool), bucket))
+        # stage-2 rows count like the point-stage dispatches do (one row
+        # per stage-1 winner), keeping hits+misses == dispatches intact
+        self.stats.count(op, T, bucket, cached=cached)
+        return scores[:T]
+
     def _exec_topk_hausdorff_approx(self, q_batch: DatasetIndex, k: int,
                                     eps):
         """ApproHaus for a (B, ...) query-index batch -> (vals, ids,
@@ -984,6 +1065,25 @@ class QueryEngine:
                            for i in range(sigs.shape[0])])
         return (jnp.asarray(np.stack([r.vals for r in res])),
                 jnp.asarray(np.stack([r.ids for r in res])))
+
+    def topk_overlap(self, pointsets, k: int):
+        """Convenience shim (use `search`): joinable top-k by grid-cell
+        overlap for B raw query point sets -> (vals (B, k), ids (B, k),
+        list[SearchStats])."""
+        return self._join_shim("topk_overlap", pointsets, k)
+
+    def topk_coverage(self, pointsets, k: int):
+        """Convenience shim (use `search`): joinable top-k by grid-cell
+        coverage (query points inside cells the winner occupies) ->
+        (vals (B, k), ids (B, k), list[SearchStats])."""
+        return self._join_shim("topk_coverage", pointsets, k)
+
+    def _join_shim(self, op: str, pointsets, k: int):
+        res = self.search([Query(op=op, q=np.asarray(ps, np.float32), k=k)
+                           for ps in pointsets])
+        return (jnp.asarray(np.stack([r.vals for r in res])),
+                jnp.asarray(np.stack([r.ids for r in res])),
+                [r.stats for r in res])
 
     def topk_hausdorff_approx(self, q_batch: DatasetIndex, k: int, eps):
         """DEPRECATED shim (use `search`): ApproHaus for a (B, ...)

@@ -67,6 +67,14 @@ Every mutation runs as a TWO-STAGE pipeline:
 ``ingest``/``delete``/``replace`` are the group-of-1 form of the same
 pipeline — one mutation, one publish, one epoch bump, exactly the
 pre-pipeline semantics.
+
+The joinable ops (``topk_overlap`` / ``topk_coverage``) need nothing
+special here: their result-cache keys carry the data epoch like every
+other dataset op, their coarse bounds read the same upper tree the
+publish step rebuilds, and their exact refine gathers slot points through
+``repo.ds_index`` — so a joinable query after any mutation sequence is
+bit-identical to the cold frozen build (asserted at every epoch in
+tests/test_join_search.py).
 """
 from __future__ import annotations
 

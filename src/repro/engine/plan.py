@@ -20,7 +20,13 @@ Pipelines run in two stages:
     sentinel winners are clamped to slot 0 for the gather and masked out
     of the result).  Stage-2 rows group across pipelines by (point op,
     statics, built query capacity), so P pipelines with compatible point
-    stages cost one dispatch of ``sum(k_p)`` rows.
+    stages cost one dispatch of ``sum(k_p)`` rows.  A joinable stage-2
+    (``topk_overlap`` / ``topk_coverage`` — the dataset→dataset pipeline)
+    takes the same handoff: winner slots are gathered by id on device and
+    exactly re-scored against the stage's query set in one grouped
+    dispatch, then re-ranked host-side to the stage's top-k (descending
+    score, ties keeping stage-1 rank; sentinel winners score ``-1`` and
+    stay sentinels).
 
 Grouping keys are host-side only (op tags, static scalars, array shapes) —
 planning never syncs device values.  Per-row payload marshalling is
@@ -42,7 +48,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import index as index_lib
-from repro.engine.query import Pipeline, Query, SearchResult
+from repro.engine.query import (DATASET_RERANK_OPS, Pipeline, Query,
+                                SearchResult)
 
 
 @dataclass
@@ -202,7 +209,30 @@ def _run_group(engine, g: DispatchGroup):
         return [SearchResult(op=op, vals=d, ids=i, mask=m, stats=s)
                 for d, i, m, s in zip(_split(dists), _split(idxs),
                                       valid, stats)], None
+    if op in DATASET_RERANK_OPS:
+        pts, val = _stack_pointsets(
+            [q.q for q in qs],
+            max(q.built_capacity(engine.leaf_capacity) for q in qs))
+        vals, ids, stats = engine._exec_topk_join(op, pts, val, qs[0].k)
+        return [SearchResult(op=op, vals=v, ids=i, stats=s)
+                for v, i, s in zip(_split(vals), _split(ids),
+                                   stats)], ids
     raise ValueError(f"unplannable op {op!r}")  # pragma: no cover
+
+
+def _stack_pointsets(pointsets, cap: int):
+    """(B, cap, d) points + (B, cap) validity from raw per-query sets —
+    the joinable ops score on the shared grid, so no tree build: ONE
+    numpy pad/stack, one upload at dispatch.  Padding rows are invalid
+    and park in the grid's overflow cell, so any two groupings of the
+    same query produce bit-identical scores."""
+    sets = [np.asarray(ps, np.float32) for ps in pointsets]
+    pts = np.zeros((len(sets), cap, sets[0].shape[-1]), np.float32)
+    val = np.zeros((len(sets), cap), bool)
+    for i, s in enumerate(sets):
+        pts[i, :s.shape[0]] = s
+        val[i, :s.shape[0]] = True
+    return pts, val
 
 
 # ---------------------------------------------------------------------------
@@ -221,6 +251,10 @@ def _stage2_key(ps: Query, leaf_capacity: int) -> tuple:
         else:
             depth = index_lib.depth_for(cap, leaf_capacity)
         return (ps.op, ps.statics(), cap, depth)
+    if ps.op in DATASET_RERANK_OPS:
+        # joinable re-rank rows stack raw padded point sets: the key pins
+        # the padded capacity so the group's stack is shape-exact
+        return (ps.op, ps.statics(), ps.built_capacity(leaf_capacity))
     return (ps.op, ps.statics())
 
 
@@ -266,6 +300,39 @@ def _run_stage2(engine, items, stage1, handoffs, results) -> None:
                     op="pipeline",
                     mask=take_np[off:off + k] & v[:, None],
                     stats=stats[off:off + k],
+                    extras={"stage1": stage1[pos],
+                            "ds_ids": stage1[pos].ids, "valid": v})
+                off += k
+        elif pop in DATASET_RERANK_OPS:
+            # dataset→dataset: exact join score of each winner slot vs the
+            # pipeline's query set (one grouped dispatch, ids on device),
+            # then a host-side re-rank to the stage's top-k.  Sentinel
+            # winners were clamped to slot 0 above; their rows are forced
+            # to score -1 here, so a pipeline with ZERO surviving winners
+            # degrades to all-sentinel output instead of ranking slot 0
+            pts, val = _stack_pointsets(
+                [items[pos].point_stage.q for pos in poss], key[2])
+            reps = np.asarray(ks, np.int32)
+            pts_rep = jnp.repeat(jnp.asarray(pts), reps, axis=0,
+                                 total_repeat_length=total)
+            val_rep = jnp.repeat(jnp.asarray(val), reps, axis=0,
+                                 total_repeat_length=total)
+            scores = engine._exec_join_rerank(pop, ds_flat, pts_rep, val_rep)
+            s_np = np.asarray(scores)
+            off = 0
+            for pos, k, v in zip(poss, ks, valid_rows):
+                k2 = items[pos].point_stage.k
+                seg = np.where(v, s_np[off:off + k], -1).astype(np.int32)
+                win = np.asarray(stage1[pos].ids, np.int32)[:k]
+                # descending score; stable sort keeps stage-1 rank on ties
+                order = np.argsort(-seg, kind="stable")[:k2]
+                vals2 = np.full((k2,), -1, np.int32)
+                ids2 = np.full((k2,), -1, np.int32)
+                vals2[:len(order)] = seg[order]
+                ids2[:len(order)] = np.where(vals2[:len(order)] < 0, -1,
+                                             win[order])
+                results[pos] = SearchResult(
+                    op="pipeline", vals=vals2, ids=ids2, mask=vals2 >= 0,
                     extras={"stage1": stage1[pos],
                             "ds_ids": stage1[pos].ids, "valid": v})
                 off += k

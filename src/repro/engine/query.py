@@ -24,7 +24,17 @@ Op tags and their required params:
     topk_hausdorff         q or q_index, k [, refine_levels, chunk]
     range_points           ds_id, r_lo, r_hi
     nnp                    ds_id, q or q_index
+    topk_overlap           q (raw points), k
+    topk_coverage          q (raw points), k
     =====================  ==========================================
+
+The joinable ops (``topk_overlap`` / ``topk_coverage``) rank repository
+datasets by grid-cell joinability with the query point set (see
+:mod:`repro.core.join_search`); they take RAW points only — the scoring
+grid needs no ball tree.  They may drive a Pipeline's first stage like
+any dataset top-k, and uniquely may also serve as its SECOND stage
+(a dataset→dataset pipeline: stage-1 winners re-ranked by joinability
+with the stage-2 query set, the id handoff staying on device).
 
 Index-consuming ops accept either a raw ``(n, d)`` point array (``q``) —
 the planner batches the ball-tree builds per dispatch group — or a
@@ -40,14 +50,19 @@ import numpy as np
 
 OPS = (
     "range_search", "topk_ia", "topk_gbo", "topk_hausdorff_approx",
-    "topk_hausdorff", "range_points", "nnp",
+    "topk_hausdorff", "range_points", "nnp", "topk_overlap",
+    "topk_coverage",
 )
+#: joinable dataset ops (grid overlap / coverage) — dataset-granularity
+#: top-k ops that can also RE-RANK a pipeline's stage-1 winners
+DATASET_RERANK_OPS = ("topk_overlap", "topk_coverage")
 #: dataset-granularity ops returning a top-k id list — the only ops that can
 #: drive a Pipeline's first stage (RangeS returns a mask, not ranked ids)
 DATASET_TOPK_OPS = (
     "topk_ia", "topk_gbo", "topk_hausdorff_approx", "topk_hausdorff",
-)
-#: point-granularity ops — the only ops a Pipeline's second stage may run
+) + DATASET_RERANK_OPS
+#: ops a Pipeline's second stage may run: point ops inside each winner, or
+#: a joinable op re-ranking the winners themselves (dataset→dataset)
 POINT_OPS = ("range_points", "nnp")
 
 # params that must be present (not None) per op; ds_id is checked separately
@@ -60,6 +75,8 @@ _REQUIRED = {
     "topk_hausdorff": ("k",),
     "range_points": ("r_lo", "r_hi"),
     "nnp": (),
+    "topk_overlap": ("q", "k"),
+    "topk_coverage": ("q", "k"),
 }
 _NEEDS_QUERY_SET = ("topk_hausdorff_approx", "topk_hausdorff", "nnp")
 
@@ -104,6 +121,10 @@ class Query:
                     f"Query(op={self.op!r}): q_index must be a built "
                     f"DatasetIndex row (got {type(self.q_index)!r}); "
                     f"pass raw points as q= instead")
+        if self.op in DATASET_RERANK_OPS and self.q_index is not None:
+            raise ValueError(
+                f"Query(op={self.op!r}) scores on the shared grid — pass "
+                f"raw points as q=, not a built index row")
 
     # -- planning keys -----------------------------------------------------
 
@@ -111,7 +132,8 @@ class Query:
         """The static (compile-relevant / shared-scalar) part of the query:
         two queries may share one device dispatch iff their op AND statics
         agree — the same compatibility rule serve_search grouped by."""
-        if self.op == "topk_ia" or self.op == "topk_gbo":
+        if (self.op == "topk_ia" or self.op == "topk_gbo"
+                or self.op in DATASET_RERANK_OPS):
             return (self.k,)
         if self.op == "topk_hausdorff_approx":
             return (self.k, float(self.eps))
@@ -153,6 +175,12 @@ class Pipeline:
     datasets — one point query per winner, the id handoff staying on
     device.  Planned as two engine dispatches: stage 1 rides the mixed-op
     groups alongside ordinary queries; stage 2 groups across pipelines.
+
+    ``point_stage`` may instead be a joinable op (``topk_overlap`` /
+    ``topk_coverage``): a dataset→dataset pipeline where the stage-1
+    winners are exactly re-scored against the stage's own query set and
+    re-ranked to its top-``k`` (ties keep stage-1 rank order); the winner
+    ids still never leave the device before stage-2 scoring.
     """
 
     dataset_stage: Query
@@ -163,9 +191,11 @@ class Pipeline:
             raise ValueError(
                 f"Pipeline dataset_stage must be a top-k dataset op "
                 f"{DATASET_TOPK_OPS}, got {self.dataset_stage.op!r}")
-        if self.point_stage.op not in POINT_OPS:
+        if (self.point_stage.op not in POINT_OPS
+                and self.point_stage.op not in DATASET_RERANK_OPS):
             raise ValueError(
-                f"Pipeline point_stage must be a point op {POINT_OPS}, "
+                f"Pipeline point_stage must be a point op {POINT_OPS} or "
+                f"a joinable re-rank op {DATASET_RERANK_OPS}, "
                 f"got {self.point_stage.op!r}")
         if self.point_stage.ds_id is not None:
             raise ValueError(

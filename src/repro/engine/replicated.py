@@ -18,10 +18,11 @@ construction, for every replica count and row split:
   * every collective inside the per-shard ops — the O(k) ``all_gather``
     top-k merges, the ApproHaus ``pmin``/``pmax`` scalar reductions, the
     owner-exclusive ``psum`` merges, ExactHaus's batched tau
-    ``global_kth_smallest`` all-reduce — names the ``data`` axis only, so
-    inside one replica group the program IS the PR-2/3/4 1-D sharded
-    pipeline, unchanged (asserted per op in
-    tests/test_engine_replicated.py and by the property suite);
+    ``global_kth_smallest`` all-reduce, and the joinable refine loop's
+    integer τ all-reduce + psum'd continue flag — names the ``data`` axis
+    only, so inside one replica group the program IS the PR-2/3/4 1-D
+    sharded pipeline, unchanged (asserted per op in
+    tests/test_engine_replicated.py and by the property suites);
   * per-row computations are independent: a replica group's answers
     depend only on its own rows (ExactHaus's shared phase-2 frontier is
     per-query lockstep — co-resident rows never perturb a row's

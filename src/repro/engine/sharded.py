@@ -81,7 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import geometry, point_search, search
+from repro.core import geometry, join_search, point_search, search
 from repro.core.distributed import _shard_map
 from repro.core.repo_index import Repository
 from repro.engine import batched_ops, merge
@@ -461,6 +461,44 @@ class ShardedDispatcher:
 
         return self._bind(impl)
 
+    def _build_topk_join(self, k: int, mode: str, chunk: int):
+        """Sharded joinable top-k: per-shard bound phase over the local
+        slot slice, the shared-order chunked refine with each query's
+        integer τ all-reduced after every chunk (collective cond, so all
+        shards iterate together), then the O(k) all-gather top-k merge.
+        Scores are exact ints, so values/ids are bit-identical to the
+        local dispatcher and the host oracle under ANY shard count; only
+        the `evaluated` stat is schedule-dependent (the ExactHaus
+        contract).  Shard-padded slots are invalid (ds_valid False), carry
+        UB -1, and are never evaluated."""
+        axis = self.axis
+        n_total = self.n_slots
+        shard = self.shard_slots
+
+        def local(repo_loc, q_pts, q_val):
+            exact, nodes, cand_after, evaluated = join_search.topk_join_scores(
+                repo_loc, q_pts, q_val, k, mode, chunk, axis=axis,
+                n_slots_total=n_total)
+            base = jax.lax.axis_index(axis) * shard
+            vals, gids = merge.local_topk(exact, k, base)
+            vals, ids = merge.all_gather_topk(vals, gids, k, axis)
+            return (vals, merge.sentinel_ids(vals, ids), nodes, cand_after,
+                    evaluated)
+
+        sm = self._smap(local, in_specs=(self.specs, self._rows, self._rows),
+                        out_specs=(self._rows,) * 5)
+
+        def impl(repo_s, q_pts, q_val):
+            return sm(repo_s, q_pts, q_val)
+
+        return self._bind(impl)
+
+    def build_topk_overlap(self, k: int, chunk: int):
+        return self._build_topk_join(k, "overlap", chunk)
+
+    def build_topk_coverage(self, k: int, chunk: int):
+        return self._build_topk_join(k, "coverage", chunk)
+
     # -- point granularity -------------------------------------------------
 
     def build_range_points(self):
@@ -509,6 +547,28 @@ class ShardedDispatcher:
 
         def impl(repo_s, ds_ids, q_batch):
             return sm(repo_s, ds_ids, q_batch)
+
+        return self._bind(impl)
+
+    def build_join_rerank(self, mode: str):
+        """Dataset→dataset pipeline stage 2, sharded: each winner slot's
+        points live on exactly one shard, so the row-wise exact join score
+        merges owner-exclusively (+0 is exact for ints, same pattern as
+        NNP/RangeP)."""
+        axis = self.axis
+
+        def local(repo_loc, ds_ids, q_pts, q_val):
+            mine, d_sel = self._owner_select(repo_loc, ds_ids)
+            sc = join_search.pair_scores(repo_loc, d_sel.points, d_sel.valid,
+                                         q_pts, q_val, mode)
+            return jax.lax.psum(jnp.where(mine, sc, 0), axis)
+
+        sm = self._smap(local, in_specs=(self.specs, self._rows, self._rows,
+                                         self._rows),
+                        out_specs=self._rows)
+
+        def impl(repo_s, ds_ids, q_pts, q_val):
+            return sm(repo_s, ds_ids, q_pts, q_val)
 
         return self._bind(impl)
 

@@ -335,3 +335,21 @@ def _set_intersect_counts(
     sbp = _pad_rows(sb, tb)
     out = _si.intersect_counts(sap, sbp, ta=ta, tb=tb, interpret=INTERPRET)
     return out[:na, :nb]
+
+
+def plane_weighted_intersect(
+    planes: Array, sigs: Array, *, ta: int | None = None,
+    tb: int | None = None, use_kernel: bool | None = None,
+) -> Array:
+    """Weighted popcount matrix for histogram bit planes: given per-row
+    count histograms sliced into bit planes (B, P, W) and signatures
+    (S, W), returns (B, S) int32 of sum_p 2^p * |plane_p AND sig| — i.e.
+    the joinable *coverage* form (points-in-occupied-cells) expressed so
+    the whole batch rides ONE (B*P, S) set-intersect dispatch through the
+    same autotune routing as GBO."""
+    b, p, w = planes.shape
+    cnt = set_intersect_counts(planes.reshape(b * p, w), sigs,
+                               ta=ta, tb=tb, use_kernel=use_kernel)
+    cnt = cnt.reshape(b, p, sigs.shape[0])
+    weights = jnp.left_shift(jnp.int32(1), jnp.arange(p, dtype=jnp.int32))
+    return jnp.sum(cnt * weights[None, :, None], axis=1, dtype=jnp.int32)

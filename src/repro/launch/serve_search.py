@@ -8,8 +8,9 @@
 
 The production shape for the paper's *online* multi-granularity search:
 clients submit single queries (mixed types — RangeS / top-k IA / top-k
-GBO / ApproHaus / ExactHaus at dataset granularity, RangeP / NNP at point
-granularity, plus two-stage dataset→point PIPELINES) into a queue; a
+GBO / ApproHaus / ExactHaus / joinable overlap & coverage at dataset
+granularity, RangeP / NNP at point granularity, plus two-stage
+dataset→point and dataset→dataset PIPELINES) into a queue; a
 dispatcher thread drains the queue continuously and hands the WHOLE mixed
 drain to ``QueryEngine.search`` as one declarative batch.  The engine's
 planner does the grouping the server used to do by hand — compatible
@@ -69,7 +70,8 @@ from repro.engine import Pipeline, Query, QueryEngine, SearchResult
 # queries of the same op)
 OPS = (
     "range_search", "topk_ia", "topk_gbo", "topk_hausdorff_approx",
-    "topk_hausdorff", "range_points", "nnp", "pipeline",
+    "topk_hausdorff", "range_points", "nnp", "topk_overlap",
+    "topk_coverage", "pipeline",
 )
 
 
@@ -102,6 +104,8 @@ def _to_query(op: str, payload: dict):
                      r_lo=payload["r_lo"], r_hi=payload["r_hi"])
     if op == "nnp":
         return Query(op=op, ds_id=payload.get("ds_id"), q=payload["q"])
+    if op == "topk_overlap" or op == "topk_coverage":
+        return Query(op=op, q=payload["q"], k=payload["k"])
     raise ValueError(f"unknown op {op!r}; serving ops: {OPS}")
 
 
@@ -117,6 +121,8 @@ def _legacy_result(res: SearchResult):
     if res.op == "topk_hausdorff_approx":
         return (res.vals, res.ids, res.extras["eps_eff"])
     if res.op == "topk_hausdorff":
+        return (res.vals, res.ids, res.stats)
+    if res.op == "topk_overlap" or res.op == "topk_coverage":
         return (res.vals, res.ids, res.stats)
     if res.op == "nnp":
         return (res.vals, res.ids)
@@ -606,9 +612,10 @@ class SearchServer:
 def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0,
                  mutate_every: int = 0):
     """Pre-build a mixed stream of (op, payload) requests covering all
-    seven serving ops PLUS two pipeline kinds (top-k IA -> RangeP inside
-    the winners, and ApproHaus -> NNP inside the winners — the paper's
-    dataset->point workflow), so a drain exercises genuinely
+    nine serving ops PLUS three pipeline kinds (top-k IA -> RangeP inside
+    the winners, ApproHaus -> NNP inside the winners — the paper's
+    dataset->point workflow — and top-k IA -> topk_overlap re-rank, the
+    joinable dataset->dataset workflow), so a drain exercises genuinely
     heterogeneous declarative batches.  Payload construction (signatures
     etc.) happens here, off the submission path, like a real client would
     send ready-made queries.
@@ -655,7 +662,7 @@ def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0,
             continue
         c = rng.uniform(20, 80, 2).astype(np.float32)
         lo, hi = c - 2.0, c + 2.0
-        kind = i % 9
+        kind = i % 12
         if kind == 0:
             out.append(("range_search", dict(r_lo=lo, r_hi=hi)))
         elif kind == 1:
@@ -685,11 +692,25 @@ def make_traffic(repo: Repository, datasets, n_requests: int, seed: int = 0,
             out.append(("pipeline", dict(
                 dataset=dict(op="topk_ia", r_lo=wide_lo, r_hi=wide_hi, k=3),
                 point=dict(op="range_points", r_lo=lo, r_hi=hi))))
-        else:
+        elif kind == 8:
             q = datasets[int(rng.integers(n_ds))][:32]
             out.append(("pipeline", dict(
                 dataset=dict(op="topk_hausdorff_approx", q=q, k=3, eps=eps),
                 point=dict(op="nnp", q=q))))
+        elif kind == 9:
+            q = datasets[int(rng.integers(n_ds))][:64]
+            out.append(("topk_overlap", dict(q=q, k=5)))
+        elif kind == 10:
+            q = datasets[int(rng.integers(n_ds))][:64]
+            out.append(("topk_coverage", dict(q=q, k=5)))
+        else:
+            # dataset->dataset pipeline: top-5 IA winners re-ranked by
+            # grid-cell overlap with the query set (id handoff on device)
+            q = datasets[int(rng.integers(n_ds))][:64]
+            wide_lo, wide_hi = c - 10.0, c + 10.0
+            out.append(("pipeline", dict(
+                dataset=dict(op="topk_ia", r_lo=wide_lo, r_hi=wide_hi, k=5),
+                point=dict(op="topk_overlap", q=q, k=3))))
     return out
 
 

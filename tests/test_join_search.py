@@ -1,0 +1,481 @@
+"""Joinable dataset search: the grid-overlap / coverage op family.
+
+Pins the tentpole contract of `core/join_search` + its engine wiring:
+
+  * `topk_overlap` / `topk_coverage` through `QueryEngine.search` are
+    BIT-IDENTICAL to the brute-force host oracle `topk_join_host`
+    (integer scores — equality, no tolerance), across mixed query sizes,
+    duplicate query rows, cloned-dataset score ties, and top-k overrun
+    past the valid dataset count (`-1` sentinels);
+  * the bound phase is SOUND: pruning changes no answer, only the
+    `evaluated` counter (asserted via a full-evaluation reference run at
+    chunk = n_slots), and the surfaced `SearchStats` are consistent
+    (`candidates_after_bounds <= evaluated <= n_valid`);
+  * the dataset→dataset Pipeline (stage-1 winners re-ranked by
+    joinability) equals the two-call host baseline, keeps stage-1 rank
+    on score ties, and degrades to ALL-SENTINEL output when zero
+    stage-1 winners survive (the clamp+mask path, point stage too);
+  * sharded (uneven 3-shard) and replicated (2x4) dispatch reproduce
+    local results bit-for-bit (`dispatch_device_check` harness);
+  * live mutations: joinable answers at every epoch match a cold engine
+    over the frozen equivalent, and result-cache entries never leak
+    across epochs (the epoch-carrying cache keys).
+
+Property sweeps run under hypothesis when installed; without it — or
+with ``REPRO_SEEDED_PROPS=1`` — the same properties run over a seeded
+sweep (pattern from tests/test_mutation_properties.py).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from conftest import dispatch_device_check, make_clustered_datasets
+from repro.core import join_search
+from repro.core.build import build_repository
+from repro.engine import Pipeline, Query, QueryEngine
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+USE_SEEDED = (not HAVE_HYPOTHESIS
+              or bool(os.environ.get("REPRO_SEEDED_PROPS")))
+
+THETA = 5
+K = 6
+N_DS = 26          # -> 32 slots; 3 shards pad to 33 (uneven remainder)
+
+
+def _build(n_datasets=N_DS, seed=4):
+    datasets = make_clustered_datasets(n_datasets, seed=seed,
+                                       n_points=(30, 120))
+    repo, _ = build_repository(datasets, leaf_capacity=16, theta=THETA,
+                               remove_outliers=False)
+    return datasets, repo
+
+
+@pytest.fixture(scope="module")
+def env():
+    datasets, repo = _build()
+    return datasets, repo, QueryEngine(repo, result_cache_size=0)
+
+
+def _query_sets(datasets, rng):
+    """Mixed-size query sets: dataset subsets (real overlap), a whole
+    dataset, and off-support uniform noise (zero overlap everywhere)."""
+    return [
+        np.asarray(datasets[3][:40]),
+        np.asarray(datasets[11]),
+        np.asarray(datasets[7][:96]),
+        rng.uniform(200, 300, (25, 2)).astype(np.float32),
+    ]
+
+
+@pytest.mark.parametrize("op,mode", [("topk_overlap", "overlap"),
+                                     ("topk_coverage", "coverage")])
+def test_matches_host_oracle(env, op, mode):
+    datasets, repo, eng = env
+    rng = np.random.default_rng(1)
+    qsets = _query_sets(datasets, rng)
+    for k in (K, N_DS, repo.n_slots):        # normal, = n_valid, overrun
+        res = eng.search([Query(op=op, q=q, k=k) for q in qsets])
+        want_v, want_i = join_search.topk_join_host(repo, qsets, k, mode)
+        for i, r in enumerate(res):
+            np.testing.assert_array_equal(np.asarray(r.vals), want_v[i])
+            np.testing.assert_array_equal(np.asarray(r.ids), want_i[i])
+    # overrun rows carry -1 sentinels (k = n_slots > n_valid)
+    v = np.asarray(res[0].vals)
+    i = np.asarray(res[0].ids)
+    assert (v < 0).any() and (i[v < 0] == -1).all()
+
+
+def test_duplicate_rows_and_ties(env):
+    """Duplicate query rows in one grouped dispatch answer identically,
+    and cloned datasets (exact score ties) rank by slot id — same rule
+    as the oracle's stable sort."""
+    datasets, repo, eng = env
+    q = np.asarray(datasets[5][:64])
+    res = eng.search([Query(op="topk_overlap", q=q, k=K)] * 3)
+    for r in res[1:]:
+        np.testing.assert_array_equal(np.asarray(res[0].vals),
+                                      np.asarray(r.vals))
+        np.testing.assert_array_equal(np.asarray(res[0].ids),
+                                      np.asarray(r.ids))
+
+    clones = [datasets[0], datasets[0], datasets[0], datasets[1]]
+    repo2, _ = build_repository(clones, leaf_capacity=16, theta=THETA,
+                                remove_outliers=False)
+    eng2 = QueryEngine(repo2, result_cache_size=0)
+    for op, mode in (("topk_overlap", "overlap"),
+                     ("topk_coverage", "coverage")):
+        r = eng2.search([Query(op=op, q=np.asarray(datasets[0]), k=4)])[0]
+        wv, wi = join_search.topk_join_host(
+            repo2, [np.asarray(datasets[0])], 4, mode)
+        np.testing.assert_array_equal(np.asarray(r.vals), wv[0])
+        np.testing.assert_array_equal(np.asarray(r.ids), wi[0])
+        # the three clones tie at the top; ids come back in slot order
+        assert np.asarray(r.vals)[0] == np.asarray(r.vals)[1] \
+            == np.asarray(r.vals)[2]
+        np.testing.assert_array_equal(np.asarray(r.ids)[:3], [0, 1, 2])
+
+
+def test_pruning_is_sound_and_stats_consistent(env):
+    """A small-chunk run (pruning active) returns the same answers as a
+    one-chunk full evaluation; stats stay within their bounds and the
+    executable-cache invariant holds."""
+    datasets, repo, eng = env
+    q = np.asarray(datasets[9])
+    small = QueryEngine(repo, result_cache_size=0, default_chunk=8)
+    full = QueryEngine(repo, result_cache_size=0,
+                       default_chunk=repo.n_slots)
+    for op in ("topk_overlap", "topk_coverage"):
+        r_s = small.search([Query(op=op, q=q, k=3)])[0]
+        r_f = full.search([Query(op=op, q=q, k=3)])[0]
+        np.testing.assert_array_equal(np.asarray(r_s.vals),
+                                      np.asarray(r_f.vals))
+        np.testing.assert_array_equal(np.asarray(r_s.ids),
+                                      np.asarray(r_f.ids))
+        n_valid = int(np.asarray(repo.ds_valid).sum())
+        for r in (r_s, r_f):
+            s = r.stats
+            # the refine evaluates whole chunks while τ is still loose, so
+            # it covers (at least) every slot whose UB survives τ_final
+            assert 0 < s.exact_evaluations <= n_valid
+            assert s.candidates_after_bounds <= s.exact_evaluations
+            assert 0.0 <= s.pruned_fraction <= 1.0
+            assert s.nodes_evaluated > 0
+        # the small-chunk run prunes tail chunks the full run evaluates
+        assert (r_s.stats.exact_evaluations
+                <= r_f.stats.exact_evaluations)
+    for e in (small, full):
+        assert e.stats.cache_hits + e.stats.cache_misses \
+            == e.stats.dispatches
+
+
+def test_off_support_query_prunes(env):
+    """A query far off every dataset's support scores 0 everywhere; with
+    clustered data a clustered query's refine stops early (genuinely
+    nonzero pruned fraction at small chunk)."""
+    datasets, repo, eng = env
+    small = QueryEngine(repo, result_cache_size=0, default_chunk=4)
+    q = np.asarray(datasets[2][:80])
+    r = small.search([Query(op="topk_overlap", q=q, k=2)])[0]
+    wv, wi = join_search.topk_join_host(repo, [q], 2, "overlap")
+    np.testing.assert_array_equal(np.asarray(r.vals), wv[0])
+    np.testing.assert_array_equal(np.asarray(r.ids), wi[0])
+    assert r.stats.pruned_fraction > 0.0
+
+
+def _rerank_baseline(repo, eng, q, k1, k2, mode, lo, hi):
+    """Two-call host baseline: stage-1 top-k ia ids, full-oracle join
+    scores, stable descending re-rank to k2."""
+    r1 = eng.search([Query(op="topk_ia", r_lo=lo, r_hi=hi, k=k1)])[0]
+    ids1 = np.asarray(r1.ids, np.int32)
+    wv, wi = join_search.topk_join_host(repo, [q], repo.n_slots, mode)
+    full = {int(i): int(v) for v, i in zip(wv[0], wi[0]) if i >= 0}
+    sc = np.array([full.get(int(d), 0) if d >= 0 else -1 for d in ids1],
+                  np.int32)
+    order = np.argsort(-sc, kind="stable")[:k2]
+    vals = np.where(sc[order] < 0, -1, sc[order]).astype(np.int32)
+    ids = np.where(vals < 0, -1, ids1[order]).astype(np.int32)
+    return vals, ids
+
+
+@pytest.mark.parametrize("op,mode", [("topk_overlap", "overlap"),
+                                     ("topk_coverage", "coverage")])
+def test_pipeline_rerank_matches_baseline(env, op, mode):
+    datasets, repo, eng = env
+    q = np.asarray(datasets[3][:50])
+    lo = q.min(axis=0) - 5.0
+    hi = q.max(axis=0) + 5.0
+    res = eng.search([Pipeline(
+        Query(op="topk_ia", r_lo=lo, r_hi=hi, k=8),
+        Query(op=op, q=q, k=3))])[0]
+    want_v, want_i = _rerank_baseline(repo, eng, q, 8, 3, mode, lo, hi)
+    np.testing.assert_array_equal(np.asarray(res.vals), want_v)
+    np.testing.assert_array_equal(np.asarray(res.ids), want_i)
+    np.testing.assert_array_equal(np.asarray(res.mask),
+                                  np.asarray(res.vals) >= 0)
+    # a joinable op can drive stage 1 as well (dataset→dataset both ways)
+    res2 = eng.search([Pipeline(
+        Query(op="topk_overlap", q=q, k=5),
+        Query(op="topk_coverage", q=q, k=2))])[0]
+    assert np.asarray(res2.vals).shape == (2,)
+    assert (np.asarray(res2.ids) >= -1).all()
+
+
+def test_two_pipelines_share_rerank_dispatch(env):
+    """Compatible joinable stage-2 rows (same op/k/capacity) group into
+    ONE re-rank dispatch across pipelines — ragged stage-1 ks included."""
+    datasets, repo, eng = env
+    engine = QueryEngine(repo, result_cache_size=0)
+    q = np.asarray(datasets[3][:50])
+    lo, hi = q.min(axis=0) - 5.0, q.max(axis=0) + 5.0
+
+    def pipes():
+        return [
+            Pipeline(Query(op="topk_ia", r_lo=lo, r_hi=hi, k=3),
+                     Query(op="topk_overlap", q=q, k=2)),
+            Pipeline(Query(op="topk_ia", r_lo=lo - 2, r_hi=hi + 2, k=5),
+                     Query(op="topk_overlap", q=q, k=2)),
+        ]
+
+    engine.search(pipes())                   # warm the executables
+    g0 = engine.stats.plan_groups
+    engine.search(pipes())
+    # stage 1: topk_ia k=3 and k=5 groups; stage 2: ONE shared re-rank
+    assert engine.stats.plan_groups == g0 + 3
+
+
+def test_zero_surviving_winners_all_sentinel():
+    """Satellite: a pipeline whose stage 1 yields NO winners (every
+    dataset deleted) must degrade to all-sentinel output on BOTH stage-2
+    flavors — the clamp+mask path never ranks slot 0 by accident."""
+    from repro.engine import LiveRepository
+
+    rng = np.random.default_rng(0)
+    init = [(rng.uniform(-20, 20, 2)
+             + rng.normal(0, 2, (24, 2))).astype(np.float32)
+            for _ in range(4)]
+    live = LiveRepository(init, leaf_capacity=16, point_capacity=32,
+                          result_cache_size=16)
+    for j in sorted(live.live_ids):
+        live.delete(j)
+    assert not live.live_ids
+    q = init[0][:16]
+    lo, hi = q.min(axis=0) - 50.0, q.max(axis=0) + 50.0
+
+    # standalone joinable query on an empty repository: all sentinels
+    r0 = live.search([Query(op="topk_overlap", q=q, k=3)])[0]
+    np.testing.assert_array_equal(np.asarray(r0.vals), [-1, -1, -1])
+    np.testing.assert_array_equal(np.asarray(r0.ids), [-1, -1, -1])
+
+    # dataset→dataset stage 2 over zero survivors
+    rj = live.search([Pipeline(
+        Query(op="topk_ia", r_lo=lo, r_hi=hi, k=3),
+        Query(op="topk_coverage", q=q, k=2))])[0]
+    np.testing.assert_array_equal(np.asarray(rj.extras["ds_ids"]),
+                                  [-1, -1, -1])
+    assert not np.asarray(rj.extras["valid"]).any()
+    np.testing.assert_array_equal(np.asarray(rj.vals), [-1, -1])
+    np.testing.assert_array_equal(np.asarray(rj.ids), [-1, -1])
+    assert not np.asarray(rj.mask).any()
+
+    # point stage 2 over zero survivors: fully-masked rows
+    rp = live.search([Pipeline(
+        Query(op="topk_ia", r_lo=lo, r_hi=hi, k=3),
+        Query(op="range_points", r_lo=lo, r_hi=hi))])[0]
+    assert not np.asarray(rp.mask).any()
+    assert not np.asarray(rp.extras["valid"]).any()
+
+    s = live.stats
+    assert s.cache_hits + s.cache_misses == s.dispatches
+
+
+def test_result_cache_and_epoch_keys():
+    """Identical joinable repeats hit the result cache; a mutation bumps
+    the epoch, retires the entries, and the re-dispatch matches a cold
+    engine over the frozen equivalent."""
+    from repro.engine import LiveRepository
+
+    datasets, _ = _build(10)
+    live = LiveRepository(datasets, leaf_capacity=16, theta=THETA,
+                          remove_outliers=False, result_cache_size=64)
+    q = np.asarray(datasets[3][:50])
+    batch = [Query(op="topk_overlap", q=q, k=4),
+             Query(op="topk_coverage", q=q, k=4)]
+    r0 = live.search(batch)
+    h0 = live.stats.result_cache_hits
+    r1 = live.search(batch)
+    assert live.stats.result_cache_hits == h0 + len(batch)
+    for a, b in zip(r0, r1):
+        np.testing.assert_array_equal(np.asarray(a.vals),
+                                      np.asarray(b.vals))
+        np.testing.assert_array_equal(np.asarray(a.ids),
+                                      np.asarray(b.ids))
+
+    live.delete(3)
+    inv0 = live.stats.epoch_invalidations
+    r2 = live.search(batch)
+    assert live.stats.epoch_invalidations >= inv0
+    cold = QueryEngine(live.frozen_repository(), leaf_capacity=16,
+                       result_cache_size=0)
+    want = cold.search(batch)
+    for a, b in zip(r2, want):
+        np.testing.assert_array_equal(np.asarray(a.vals),
+                                      np.asarray(b.vals))
+        np.testing.assert_array_equal(np.asarray(a.ids),
+                                      np.asarray(b.ids))
+    s = live.stats
+    assert s.cache_hits + s.cache_misses == s.dispatches
+
+
+# ---------------------------------------------------------------------------
+# mesh equivalence (uneven 3-shard and 2x4 replica meshes)
+# ---------------------------------------------------------------------------
+
+
+def _check_mesh(mesh_builder):
+    datasets, repo = _build()
+    eng = QueryEngine(repo, result_cache_size=0)
+    sng = mesh_builder(repo)
+    rng = np.random.default_rng(2)
+    qsets = _query_sets(datasets, rng)
+    eq = np.testing.assert_array_equal
+    for op in ("topk_overlap", "topk_coverage"):
+        for k in (K, repo.n_slots):          # normal and overrun
+            qs = [Query(op=op, q=q, k=k) for q in qsets]
+            r0, r1 = eng.search(qs), sng.search(qs)
+            for a, b in zip(r0, r1):
+                eq(np.asarray(a.vals), np.asarray(b.vals))
+                eq(np.asarray(a.ids), np.asarray(b.ids))
+    q = qsets[0]
+    lo, hi = q.min(axis=0) - 5.0, q.max(axis=0) + 5.0
+    p = [Pipeline(Query(op="topk_ia", r_lo=lo, r_hi=hi, k=8),
+                  Query(op="topk_overlap", q=q, k=3))]
+    a, b = eng.search(p)[0], sng.search(p)[0]
+    eq(np.asarray(a.vals), np.asarray(b.vals))
+    eq(np.asarray(a.ids), np.asarray(b.ids))
+    s = sng.stats
+    assert s.cache_hits + s.cache_misses == s.dispatches
+
+
+def check_join_sharded_uneven():
+    from repro.engine import ShardedQueryEngine, data_mesh
+    _check_mesh(lambda repo: ShardedQueryEngine(repo, mesh=data_mesh(3)))
+
+
+def check_join_replicated():
+    from repro.engine import ReplicatedQueryEngine
+    _check_mesh(lambda repo: ReplicatedQueryEngine(repo, n_replicas=2,
+                                                   n_data=4))
+
+
+def test_join_sharded_uneven():
+    dispatch_device_check("test_join_search", "check_join_sharded_uneven",
+                          devices=3)
+
+
+def test_join_replicated():
+    dispatch_device_check("test_join_search", "check_join_replicated",
+                          devices=8)
+
+
+# ---------------------------------------------------------------------------
+# property sweeps
+# ---------------------------------------------------------------------------
+
+_PROP_DATASETS, _PROP_REPO = None, None
+
+
+def _prop_env():
+    """Build once per process: every example reuses the same repository
+    and engine executables (geometry pinned, like the mutation props)."""
+    global _PROP_DATASETS, _PROP_REPO
+    if _PROP_REPO is None:
+        _PROP_DATASETS, _PROP_REPO = _build(14, seed=9)
+    return _PROP_DATASETS, _PROP_REPO, QueryEngine(_PROP_REPO,
+                                                   result_cache_size=0)
+
+
+def _join_property(seed: int):
+    datasets, repo, eng = _prop_env()
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 4))
+    qsets = []
+    for _ in range(B):
+        base = datasets[int(rng.integers(len(datasets)))]
+        n = int(rng.integers(5, len(base) + 1))
+        pts = base[rng.permutation(len(base))[:n]]
+        if rng.random() < 0.3:               # jitter off the exact cells
+            pts = pts + rng.normal(0, 1.0, pts.shape).astype(np.float32)
+        qsets.append(np.asarray(pts, np.float32))
+    k = int(rng.integers(1, repo.n_slots + 1))
+    op, mode = (("topk_overlap", "overlap") if rng.random() < 0.5
+                else ("topk_coverage", "coverage"))
+    res = eng.search([Query(op=op, q=q, k=k) for q in qsets])
+    want_v, want_i = join_search.topk_join_host(repo, qsets, k, mode)
+    for i, r in enumerate(res):
+        np.testing.assert_array_equal(np.asarray(r.vals), want_v[i])
+        np.testing.assert_array_equal(np.asarray(r.ids), want_i[i])
+    s = eng.stats
+    assert s.cache_hits + s.cache_misses == s.dispatches
+
+
+if not USE_SEEDED:
+    @given(seed=st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_join_property_matches_oracle(seed):
+        _join_property(seed)
+
+else:
+    @pytest.mark.parametrize("seed", range(12))
+    def test_join_property_matches_oracle(seed):
+        _join_property(seed)
+
+
+def _live_join_property(seed: int, steps: int = 8):
+    """Joinable queries interleaved with live ingest/delete/replace: at
+    every epoch the answers match a cold engine over the frozen build."""
+    from repro.engine import LiveRepository
+
+    rng = np.random.default_rng(seed)
+
+    def mk():
+        n = int(rng.integers(8, 28))
+        c = rng.uniform(-40, 40, 2)
+        return (c + rng.normal(0, rng.uniform(1, 4), (n, 2))
+                ).astype(np.float32)
+
+    init = [mk() for _ in range(6)]
+    live = LiveRepository(init, leaf_capacity=8, point_capacity=32,
+                          result_cache_size=64)
+    model = {j: init[j] for j in range(6)}
+
+    def check():
+        q = mk()[:12]
+        batch = [Query(op="topk_overlap", q=q, k=3),
+                 Query(op="topk_coverage", q=q, k=3)]
+        got = live.search(batch)
+        cold = QueryEngine(live.frozen_repository(), leaf_capacity=8,
+                           result_cache_size=0)
+        want = cold.search(batch)
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(a.vals),
+                                          np.asarray(b.vals))
+            np.testing.assert_array_equal(np.asarray(a.ids),
+                                          np.asarray(b.ids))
+
+    check()
+    for _ in range(steps):
+        kind = int(rng.integers(0, 3))
+        if kind == 0:
+            sid = live.ingest(mk())
+            model[sid] = True
+        elif kind == 1 and len(model) > 1:
+            sid = int(rng.choice(sorted(model)))
+            live.delete(sid)
+            del model[sid]
+        else:
+            sid = int(rng.choice(sorted(model)))
+            live.replace(sid, mk())
+        check()
+    s = live.stats
+    assert s.cache_hits + s.cache_misses == s.dispatches
+
+
+if not USE_SEEDED:
+    @given(seed=st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=4, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def test_live_join_matches_frozen_every_epoch(seed):
+        _live_join_property(seed)
+
+else:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_live_join_matches_frozen_every_epoch(seed):
+        _live_join_property(seed)
